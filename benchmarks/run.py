@@ -1,0 +1,55 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (plus a roofline summary row per
+dry-run cell if experiments/dryrun JSONs exist).
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--skip-slow]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--skip-slow", action="store_true")
+    args = ap.parse_args()
+
+    from benchmarks import paper_tables
+    print("name,us_per_call,derived")
+    for fn in paper_tables.ALL:
+        if args.skip_slow and fn.__name__ in ("fig22_keyswitch",):
+            continue
+        try:
+            for name, us, derived in fn():
+                print(f"{name},{us:.2f},{derived}")
+        except Exception as e:  # keep the harness running
+            print(f"{fn.__name__},NaN,ERROR: {type(e).__name__}: {e}")
+
+    # roofline summaries from the dry-run sweep (if present)
+    pat = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                       "dryrun", "*.json")
+    for path in sorted(glob.glob(pat)):
+        try:
+            with open(path) as f:
+                rec = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            continue
+        if "skipped" in rec:
+            print(f"dryrun_{rec['arch']}_{rec['shape']}_{rec['mesh']},0.00,"
+                  f"SKIP({rec['skipped'][:40]})")
+            continue
+        rl = rec["roofline"]
+        print(f"dryrun_{rec['arch']}_{rec['shape']}_{rec['mesh']},0.00,"
+              f"dom={rl['dominant']} c={rl['compute_s']:.4f}s m={rl['memory_s']:.4f}s "
+              f"coll={rl['collective_s']:.4f}s useful={rl['useful_ratio']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Batched serving demo: prefill + decode with KV caches through the
+ServeEngine (slot-based continuous-batching-lite) on a reduced config.
+
+Run:  PYTHONPATH=src python examples/serve_demo.py
+"""
+import numpy as np
+import jax
+
+from repro.configs import smoke_config
+from repro.models.model import build_model
+from repro.models.common import MeshCtx
+from repro.serve.engine import ServeEngine, Request
+
+
+def main():
+    rng = np.random.default_rng(0)
+    cfg = smoke_config("qwen3-32b")            # reduced same-family config
+    model = build_model(cfg, MeshCtx())
+    params = model.init(jax.random.key(0))
+    engine = ServeEngine(model, params, batch_size=4, max_len=96)
+
+    reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab, 12 + i).astype(np.int32),
+                    max_new=8) for i in range(6)]
+    out = engine.run(reqs)
+    for rid in sorted(out):
+        print(f"req {rid}: prompt_len={len(reqs[rid].prompt)} -> tokens {out[rid]}")
+    assert all(len(v) == 8 for v in out.values())
+    print("[ok] 6 requests served in 2 waves of batch 4")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""End-to-end driver: train the full-width smollm-135m (the ~100M-class
+assigned arch) for a few hundred steps on the synthetic-but-structured
+markov corpus, with WSD schedule, remat, async checkpointing, resume,
+and the straggler watchdog — the whole train substrate in one script.
+
+Defaults are sized for this CPU container (short seq); pass --steps/--seq
+to scale up.  Loss is printed every 10 steps and must decrease.
+
+Run:  PYTHONPATH=src python examples/train_smollm.py --steps 200
+"""
+import argparse
+
+from repro.configs import get_config
+from repro.models.model import build_model
+from repro.models.common import MeshCtx
+from repro.optim.adamw import AdamWConfig
+from repro.train.step import TrainConfig
+from repro.train.loop import train_loop, LoopConfig
+from repro.data.pipeline import DataConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--ckpt-dir", default="/tmp/smollm_ckpt")
+    args = ap.parse_args()
+
+    cfg = get_config("smollm-135m")
+    model = build_model(cfg, MeshCtx())
+    tcfg = TrainConfig(
+        opt=AdamWConfig(lr=3e-4, schedule="wsd", warmup_steps=20,
+                        total_steps=args.steps),
+        remat_policy="full",
+    )
+    dcfg = DataConfig(vocab=cfg.vocab, seq_len=args.seq,
+                      global_batch=args.batch)
+    lcfg = LoopConfig(steps=args.steps, ckpt_every=50, ckpt_dir=args.ckpt_dir)
+    params, state, losses = train_loop(model, tcfg, lcfg, dcfg)
+    print(f"[done] loss {losses[0]:.3f} -> {losses[-1]:.3f} over {args.steps} steps")
+    assert losses[-1] < losses[0], "training did not reduce loss"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,95 @@
+"""Generate the §Dry-run and §Roofline tables for EXPERIMENTS.md from
+experiments/dryrun/*.json.  Usage:
+  python experiments/make_report.py > experiments/roofline_tables.md
+"""
+import glob
+import json
+import os
+
+HERE = os.path.dirname(__file__)
+
+
+def fmt_b(b):
+    if b >= 2**30:
+        return f"{b / 2**30:.2f}Gi"
+    if b >= 2**20:
+        return f"{b / 2**20:.1f}Mi"
+    return f"{b / 2**10:.0f}Ki"
+
+
+def main():
+    recs = []
+    for path in sorted(glob.glob(os.path.join(HERE, "dryrun", "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+
+    shapes_order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2,
+                    "long_500k": 3, "ntt_batch": 4, "fourstep_16k": 5,
+                    "keyswitch_16k": 6}
+    recs.sort(key=lambda r: (r["arch"], shapes_order.get(r["shape"], 9), r["mesh"]))
+
+    print("### Dry-run table (per-device, SPMD-partitioned HLO)\n")
+    print("| arch | shape | mesh | compile_s | args/dev | temp/dev | fits 16GiB | collectives |")
+    print("|---|---|---|---|---|---|---|---|")
+    for r in recs:
+        if "skipped" in r:
+            print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | — | — | "
+                  f"skip: full-attn |")
+            continue
+        m = r["memory"]
+        cc = r["roofline"]["collective_counts"]
+        cstr = " ".join(f"{k.split('-')[-1] if k != 'all-to-all' else 'a2a'}:{int(v)}"
+                        for k, v in sorted(cc.items()))
+        print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r.get('compile_s','-')} "
+              f"| {fmt_b(m['argument_bytes_per_device'])} "
+              f"| {fmt_b(m['temp_bytes_per_device'])} "
+              f"| {'yes' if m['fits_16gib_hbm'] else 'NO'} | {cstr} |")
+
+    print("\n### Roofline table (single-pod 16x16 = 256 chips; seconds/step/device)\n")
+    print("| arch | shape | compute_s | memory_s | collective_s | dominant | "
+          "MODEL_FLOPS/dev | HLO/model ratio | roofline frac |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in recs:
+        if r["mesh"] != "pod1" or "skipped" in r:
+            continue
+        rl = r["roofline"]
+        dom_s = max(rl["compute_s"], rl["memory_s"], rl["collective_s"])
+        # roofline fraction: ideal compute time / bound (dominant term)
+        ideal = rl["model_flops"] / 197e12
+        frac = ideal / dom_s if dom_s > 0 else 0.0
+        print(f"| {r['arch']} | {r['shape']} | {rl['compute_s']:.4g} | "
+              f"{rl['memory_s']:.4g} | {rl['collective_s']:.4g} | "
+              f"**{rl['dominant']}** | {rl['model_flops']:.3g} | "
+              f"{1 / rl['useful_ratio'] if rl['useful_ratio'] else 0:.1f}x | "
+              f"{frac * 100:.1f}% |")
+
+    print("\n### Multi-pod delta (pod2 = 2x16x16; cross-pod axis = DP)\n")
+    print("| arch | shape | coll_s pod1 | coll_s pod2 | pod2/pod1 |")
+    print("|---|---|---|---|---|")
+    by_key = {(r["arch"], r["shape"], r["mesh"]): r for r in recs if "skipped" not in r}
+    seen = set()
+    for (a, s, m), r in sorted(by_key.items()):
+        if (a, s) in seen or (a, s, "pod2") not in by_key or (a, s, "pod1") not in by_key:
+            continue
+        seen.add((a, s))
+        c1 = by_key[(a, s, "pod1")]["roofline"]["collective_s"]
+        c2 = by_key[(a, s, "pod2")]["roofline"]["collective_s"]
+        print(f"| {a} | {s} | {c1:.4g} | {c2:.4g} | {c2 / c1 if c1 else 0:.2f} |")
+
+
+def perf_table():
+    print("\n### Hillclimbed cells (experiments/perf; §Perf iterations)\n")
+    print("| record | compute_s | memory_s | collective_s | dominant |")
+    print("|---|---|---|---|---|")
+    for path in sorted(glob.glob(os.path.join(HERE, "perf", "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        rl = r["roofline"]
+        name = os.path.basename(path).replace(".json", "")
+        print(f"| {name} | {rl['compute_s']:.4g} | {rl['memory_s']:.4g} | "
+              f"{rl['collective_s']:.4g} | {rl['dominant']} |")
+
+
+if __name__ == "__main__":
+    main()
+    perf_table()

@@ -1,0 +1,148 @@
+"""Modular arithmetic on a 32-bit datapath (the paper's datapath width).
+
+All device-side ops use ONLY uint32 arithmetic (wraparound mullo + a
+16-bit-limb mulhi), because the TPU VPU has no native 32x32->64 multiply.
+This mirrors the paper's 32-bit RSFQ datapath.  Every op has a numpy
+uint64 oracle (``*_np``) used as the test gold standard.
+
+Three modular multipliers are provided, matching the paper's §IV.B
+comparison (Table II): Shoup (chosen by the paper — one operand is a
+precomputed twiddle), Barrett, and Montgomery (rejected by the paper for
+its conversion overhead; included for the comparison benchmark).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+U32 = jnp.uint32
+MASK16 = 0xFFFF
+
+
+# ---------------------------------------------------------------- limbs
+
+def mulhi_u32(a, b):
+    """High 32 bits of a 32x32 product via 16-bit limb decomposition.
+
+    4 u32 multiplies; the TPU-native replacement for a 64-bit datapath.
+    """
+    a0 = a & MASK16
+    a1 = a >> 16
+    b0 = b & MASK16
+    b1 = b >> 16
+    t = a0 * b0
+    m1 = a1 * b0 + (t >> 16)            # < 2^32, no overflow
+    m2 = a0 * b1 + (m1 & MASK16)        # < 2^32, no overflow
+    return a1 * b1 + (m1 >> 16) + (m2 >> 16)
+
+
+def mullo_u32(a, b):
+    """Low 32 bits (uint32 multiply wraps by definition)."""
+    return a * b
+
+
+# ------------------------------------------------------------- add/sub
+
+def addmod(a, b, q):
+    """(a + b) mod q for a, b in [0, q), q < 2^31."""
+    s = a + b
+    return jnp.where(s >= q, s - q, s)
+
+
+def submod(a, b, q):
+    """(a - b) mod q for a, b in [0, q)."""
+    return jnp.where(a >= b, a - b, a + (q - b))
+
+
+# ---------------------------------------------------------------- Shoup
+
+def shoup_precompute(w: int, q: int) -> int:
+    """w' = floor(w * 2^32 / q); the TW' (TWP) companion of the paper."""
+    return (int(w) << 32) // int(q)
+
+
+def mulmod_shoup(x, w, wp, q):
+    """x * w mod q where w has precomputed companion wp = floor(w*2^32/q).
+
+    Requires q < 2^31, w < q.  x may be any u32 < 2q (lazy-friendly);
+    result is fully reduced in [0, q).  One mulhi + two mullo + one
+    conditional subtract — the paper's small-area BU multiplier.
+    """
+    hi = mulhi_u32(x, wp)
+    r = mullo_u32(x, w) - mullo_u32(hi, q)      # wraps; lands in [0, 2q)
+    return jnp.where(r >= q, r - q, r)
+
+
+# -------------------------------------------------------------- Barrett
+
+def barrett_precompute(q: int) -> int:
+    """mu = floor(2^60 / q) for 2^28 < q < 2^30 (our RNS prime range)."""
+    assert (1 << 28) < q < (1 << 30), "u32-limb Barrett needs 29/30-bit q"
+    return (1 << 60) // int(q)
+
+
+def mulmod_barrett(a, b, q, mu):
+    """a * b mod q via Barrett reduction, u32 limbs only.
+
+    P = a*b < 2^60 (q < 2^30).  approx = floor(P / 2^29) fits u32,
+    qhat = floor(approx * mu / 2^31) fits u32; r = lo(P) - qhat*q needs
+    at most two conditional subtracts.
+    """
+    hi = mulhi_u32(a, b)
+    lo = mullo_u32(a, b)
+    approx = (hi << 3) | (lo >> 29)
+    qhat = (mulhi_u32(approx, mu) << 1) | (mullo_u32(approx, mu) >> 31)
+    r = lo - mullo_u32(qhat, q)                 # wraps; < 3q
+    r = jnp.where(r >= (q << 1), r - (q << 1), r)
+    return jnp.where(r >= q, r - q, r)
+
+
+# ----------------------------------------------------------- Montgomery
+
+def montgomery_precompute(q: int) -> tuple[int, int]:
+    """(qinv_neg, r2) with qinv_neg = -q^{-1} mod 2^32, r2 = 2^64 mod q."""
+    qinv = pow(int(q), -1, 1 << 32)
+    return ((1 << 32) - qinv) & 0xFFFFFFFF, (1 << 64) % int(q)
+
+
+def montmul(a, b, q, qinv_neg):
+    """Montgomery product a*b*2^-32 mod q (inputs < q, q < 2^31 odd)."""
+    hi = mulhi_u32(a, b)
+    lo = mullo_u32(a, b)
+    m = mullo_u32(lo, qinv_neg)
+    t = hi + mulhi_u32(m, q) + jnp.where(lo != 0, U32(1), U32(0))
+    return jnp.where(t >= q, t - q, t)
+
+
+def mulmod_montgomery(a, b, q, qinv_neg, r2):
+    """Full Montgomery mulmod incl. domain conversion (the overhead the
+    paper cites as the reason to reject Montgomery for the BU)."""
+    am = montmul(a, r2, q, qinv_neg)            # to Montgomery domain
+    t = montmul(am, b, q, qinv_neg)             # = a*b mod q (back out)
+    return t
+
+
+# ------------------------------------------------------- numpy oracles
+
+def mulmod_np(a, b, q):
+    a = np.asarray(a, dtype=np.uint64)
+    b = np.asarray(b, dtype=np.uint64)
+    return ((a * b) % np.uint64(q)).astype(np.uint32)
+
+
+def addmod_np(a, b, q):
+    a = np.asarray(a, dtype=np.uint64)
+    b = np.asarray(b, dtype=np.uint64)
+    return ((a + b) % np.uint64(q)).astype(np.uint32)
+
+
+def submod_np(a, b, q):
+    a = np.asarray(a, dtype=np.uint64)
+    b = np.asarray(b, dtype=np.uint64)
+    return ((a + np.uint64(q) - b) % np.uint64(q)).astype(np.uint32)
+
+
+def mulhi_np(a, b):
+    a = np.asarray(a, dtype=np.uint64)
+    b = np.asarray(b, dtype=np.uint64)
+    return ((a * b) >> np.uint64(32)).astype(np.uint32)

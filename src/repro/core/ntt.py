@@ -1,0 +1,146 @@
+"""Constant-geometry (Pease) NTT — the paper's core dataflow, in JAX.
+
+The paper's insight: make every NTT stage use the *same* out-of-place
+access pattern so the memory system needs no random access (FIFO shift
+registers suffice).  On TPU the same property means every stage is a
+gather-free reshape/interleave, and — because the stage function is
+literally identical — the whole transform is a ``lax.scan`` over the
+(stages, n/2) twiddle table, keeping the HLO O(1) in n.
+
+Forward network (CG-DIT, natural order in -> bit-reversed out), stage t:
+    out[2j]   = x[j] + w_t[j] * x[j + n/2]
+    out[2j+1] = x[j] - w_t[j] * x[j + n/2]          (paper eq. (3)/(7))
+Inverse network (CG-GS, bit-reversed in -> natural out), stage t desc:
+    out[j]       = x[2j] + x[2j+1]
+    out[j + n/2] = (x[2j] - x[2j+1]) * w_t[j]^-1
+followed by a single fused multiply by n^-1.
+
+All functions are batched over arbitrary leading axes and keep values in
+[0, q) on a pure-u32 datapath (see modmath).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.modmath import addmod, submod, mulmod_shoup
+from repro.core.params import NTTParams, bitrev_perm
+
+
+def _fwd_stage(x, w, wp, q):
+    n = x.shape[-1]
+    lo = x[..., : n // 2]
+    hi = x[..., n // 2:]
+    t = mulmod_shoup(hi, w, wp, q)
+    u = addmod(lo, t, q)
+    v = submod(lo, t, q)
+    return jnp.stack([u, v], axis=-1).reshape(x.shape)
+
+
+def _inv_stage(x, w, wp, q):
+    n = x.shape[-1]
+    pairs = x.reshape(x.shape[:-1] + (n // 2, 2))
+    e = pairs[..., 0]
+    o = pairs[..., 1]
+    u = addmod(e, o, q)
+    v = mulmod_shoup(submod(e, o, q), w, wp, q)
+    return jnp.concatenate([u, v], axis=-1)
+
+
+def cg_ntt(x, tw, twp, q: int, unroll: int = 1):
+    """Batched forward CG-NTT.  x: (..., n) u32 in [0,q).  Output in
+    bit-reversed order (the paper's native output order).
+
+    unroll > 1 inlines that many stages per scan step so XLA fuses the
+    elementwise butterfly chains across stages — fewer HBM passes
+    (EXPERIMENTS.md §Perf iteration 1: full unroll ~2.6x fewer bytes)."""
+    qc = jnp.uint32(q)
+
+    def stage(carry, wrow):
+        return _fwd_stage(carry, wrow[0], wrow[1], qc), None
+
+    out, _ = jax.lax.scan(stage, x, (tw, twp), unroll=unroll)
+    return out
+
+
+def cg_intt(x, itw, itwp, ninv: int, ninv_p: int, q: int, apply_ninv: bool = True,
+            unroll: int = 1):
+    """Batched inverse CG-NTT.  Consumes bit-reversed order, yields
+    natural order.  Stages run in descending t (reversed twiddle rows)."""
+    qc = jnp.uint32(q)
+
+    def stage(carry, wrow):
+        return _inv_stage(carry, wrow[0], wrow[1], qc), None
+
+    out, _ = jax.lax.scan(stage, x, (itw, itwp), reverse=True, unroll=unroll)
+    if apply_ninv:
+        out = mulmod_shoup(out, jnp.uint32(ninv), jnp.uint32(ninv_p), qc)
+    return out
+
+
+# ------------------------------------------------------------ negacyclic
+
+def ntt_negacyclic(a, p: NTTParams):
+    """NTT over Z_q[x]/(x^n+1): pre-weight by psi^i then cyclic CG-NTT."""
+    q = jnp.uint32(p.q)
+    a = mulmod_shoup(a, jnp.asarray(p.psi_pows), jnp.asarray(p.psi_pows_p), q)
+    return cg_ntt(a, jnp.asarray(p.tw), jnp.asarray(p.twp), p.q)
+
+
+def intt_negacyclic(A, p: NTTParams):
+    """Inverse negacyclic NTT with the n^-1 factor fused into the
+    psi^-i post-weight table (one multiply saved — TW' style)."""
+    q = jnp.uint32(p.q)
+    a = cg_intt(A, jnp.asarray(p.itw), jnp.asarray(p.itwp), p.ninv, p.ninv_p, p.q,
+                apply_ninv=False)
+    return mulmod_shoup(a, jnp.asarray(p.ipsi_ninv), jnp.asarray(p.ipsi_ninv_p), q)
+
+
+def ntt_cyclic(a, p: NTTParams):
+    return cg_ntt(a, jnp.asarray(p.tw), jnp.asarray(p.twp), p.q)
+
+
+def intt_cyclic(A, p: NTTParams):
+    return cg_intt(A, jnp.asarray(p.itw), jnp.asarray(p.itwp), p.ninv, p.ninv_p, p.q)
+
+
+# ------------------------------------------------------- numpy oracles
+
+def brute_ntt_np(a: np.ndarray, omega: int, q: int) -> np.ndarray:
+    """Paper §VII.C golden model: direct evaluation of eq. (1), O(n^2).
+    Natural frequency order."""
+    n = a.shape[-1]
+    k = np.arange(n, dtype=object)
+    wmat = np.empty((n, n), dtype=object)
+    opow = [1] * n
+    for i in range(1, n):
+        opow[i] = opow[i - 1] * omega % q
+    for r in range(n):
+        for c in range(n):
+            wmat[r, c] = opow[(r * c) % n]
+    a_obj = a.astype(object)
+    out = (a_obj @ wmat.T) % q
+    return np.asarray(out, dtype=np.uint64).astype(np.uint32)
+
+
+def brute_ntt_bitrev_np(a: np.ndarray, omega: int, q: int) -> np.ndarray:
+    """Golden model permuted to the CG network's bit-reversed output."""
+    ref = brute_ntt_np(a, omega, q)
+    return ref[..., bitrev_perm(a.shape[-1])]
+
+
+def negacyclic_convolve_np(a: np.ndarray, b: np.ndarray, q: int) -> np.ndarray:
+    """Schoolbook negacyclic convolution (x^n = -1), exact ints."""
+    n = len(a)
+    out = [0] * n
+    for i in range(n):
+        ai = int(a[i])
+        for j in range(n):
+            k = i + j
+            v = ai * int(b[j])
+            if k < n:
+                out[k] = (out[k] + v) % q
+            else:
+                out[k - n] = (out[k - n] - v) % q
+    return np.array(out, dtype=np.uint32)

@@ -1,0 +1,192 @@
+"""NTT parameter generation: NTT-friendly primes, roots of unity, and
+the per-stage constant-geometry twiddle tables (+ Shoup companions).
+
+All generation is exact host-side integer math (the paper's "CMOS
+coprocessor" role); the resulting tables are numpy arrays handed to the
+device layer.  The per-stage table row for PE_t contains the 2^t
+distinct twiddles of that stage *expanded to N/2 entries* — this is the
+materialized form of the paper's circulating CSRM of length 2^t (§VI.B.2:
+"CSRM stage size = 2^i for PE_i"), which repeats its contents N/2^(t+1)
+times while one NTT streams through.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import numpy as np
+
+from repro.core.modmath import shoup_precompute, barrett_precompute, montgomery_precompute
+
+_MR_BASES = (2, 3, 5, 7, 11, 13, 17, 19, 23, 29, 31, 37)
+
+
+def is_prime(n: int) -> bool:
+    """Deterministic Miller-Rabin, valid for all n < 3.3e24."""
+    if n < 2:
+        return False
+    for p in _MR_BASES:
+        if n % p == 0:
+            return n == p
+    d, s = n - 1, 0
+    while d % 2 == 0:
+        d //= 2
+        s += 1
+    for a in _MR_BASES:
+        x = pow(a, d, n)
+        if x in (1, n - 1):
+            continue
+        for _ in range(s - 1):
+            x = x * x % n
+            if x == n - 1:
+                break
+        else:
+            return False
+    return True
+
+
+def gen_ntt_primes(count: int, n: int, bits: int = 30) -> list[int]:
+    """``count`` primes p with p ≡ 1 (mod 2n), p < 2^bits, descending."""
+    step = 2 * n
+    p = ((1 << bits) - 1) // step * step + 1
+    out: list[int] = []
+    while len(out) < count and p > (1 << (bits - 1)):
+        if is_prime(p):
+            out.append(p)
+        p -= step
+    if len(out) < count:
+        raise ValueError(f"not enough {bits}-bit NTT primes for n={n}")
+    return out
+
+
+def _factorize(n: int) -> list[int]:
+    fs, d = [], 2
+    while d * d <= n:
+        if n % d == 0:
+            fs.append(d)
+            while n % d == 0:
+                n //= d
+        d += 1
+    if n > 1:
+        fs.append(n)
+    return fs
+
+
+def primitive_root(q: int) -> int:
+    phi = q - 1
+    fs = _factorize(phi)
+    for g in range(2, q):
+        if all(pow(g, phi // f, q) != 1 for f in fs):
+            return g
+    raise ValueError("no primitive root")
+
+
+def root_of_unity(order: int, q: int) -> int:
+    """A primitive ``order``-th root of unity mod q (order | q-1)."""
+    assert (q - 1) % order == 0
+    g = primitive_root(q)
+    w = pow(g, (q - 1) // order, q)
+    assert pow(w, order, q) == 1 and pow(w, order // 2, q) != 1
+    return w
+
+
+def bitrev(x: int, bits: int) -> int:
+    r = 0
+    for _ in range(bits):
+        r = (r << 1) | (x & 1)
+        x >>= 1
+    return r
+
+
+def bitrev_perm(n: int) -> np.ndarray:
+    s = n.bit_length() - 1
+    return np.array([bitrev(i, s) for i in range(n)], dtype=np.int64)
+
+
+def cg_twiddle_exponents(n: int) -> np.ndarray:
+    """(log2 n, n/2) exponent table for the Pease CG-DIT network.
+
+    Stage t pairs (x[j], x[j+n/2]) -> out[2j], out[2j+1] with twiddle
+    w_t[j] = omega ** (bitrev(j mod 2^t, t) * n/2^(t+1)).
+    Stage t has exactly 2^t distinct values (paper: CSRM length 2^t).
+    """
+    s = n.bit_length() - 1
+    exps = np.zeros((s, n // 2), dtype=np.int64)
+    for t in range(s):
+        for j in range(n // 2):
+            exps[t, j] = bitrev(j % (1 << t), t) * (n >> (t + 1))
+    return exps
+
+
+@dataclasses.dataclass(frozen=True)
+class NTTParams:
+    """Everything a device-side NTT/iNTT needs, for one prime q."""
+    n: int
+    q: int
+    omega: int                  # primitive n-th root (cyclic NTT)
+    psi: int                    # primitive 2n-th root (negacyclic wrap)
+    tw: np.ndarray              # (s, n/2) u32 forward twiddles
+    twp: np.ndarray             # (s, n/2) u32 Shoup companions (the TW' queue)
+    itw: np.ndarray             # (s, n/2) u32 inverse twiddles (w^-1)
+    itwp: np.ndarray            # (s, n/2) u32
+    ninv: int                   # n^-1 mod q
+    ninv_p: int                 # Shoup companion of ninv
+    psi_pows: np.ndarray        # (n,) psi^i — negacyclic pre-weight
+    psi_pows_p: np.ndarray
+    ipsi_ninv: np.ndarray       # (n,) psi^-i * n^-1 — fused negacyclic post-weight
+    ipsi_ninv_p: np.ndarray
+    barrett_mu: int
+    mont_qinv_neg: int
+    mont_r2: int
+
+    @property
+    def stages(self) -> int:
+        return self.n.bit_length() - 1
+
+
+@functools.lru_cache(maxsize=None)
+def make_ntt_params(n: int, q: int | None = None, bits: int = 30,
+                    psi: int | None = None) -> NTTParams:
+    """``psi`` override: the four-step decomposition (paper §IX) requires
+    the sub-NTT roots to be specific powers of the big transform's root."""
+    if q is None:
+        q = gen_ntt_primes(1, n, bits)[0]
+    assert (q - 1) % (2 * n) == 0, "q must be ≡ 1 mod 2n"
+    if psi is None:
+        psi = root_of_unity(2 * n, q)
+    assert pow(psi, 2 * n, q) == 1 and pow(psi, n, q) != 1, "psi must have order 2n"
+    omega = pow(psi, 2, q)
+
+    exps = cg_twiddle_exponents(n)
+    # pow table for omega^k, k < n
+    opow = np.ones(n, dtype=object)
+    for i in range(1, n):
+        opow[i] = opow[i - 1] * omega % q
+    tw = opow[exps].astype(np.uint64)
+    itw = np.vectorize(lambda w: pow(int(w), q - 2, q))(tw).astype(np.uint64)
+
+    def sh(arr):
+        return np.vectorize(lambda w: shoup_precompute(int(w), q))(arr).astype(np.uint32)
+
+    ninv = pow(n, q - 2, q)
+    psi_pows = np.ones(n, dtype=object)
+    for i in range(1, n):
+        psi_pows[i] = psi_pows[i - 1] * psi % q
+    ipsi = pow(psi, q - 2, q)
+    ipsi_ninv = np.ones(n, dtype=object)
+    ipsi_ninv[0] = ninv
+    for i in range(1, n):
+        ipsi_ninv[i] = ipsi_ninv[i - 1] * ipsi % q
+
+    qinv_neg, r2 = montgomery_precompute(q)
+    mu = barrett_precompute(q) if (1 << 28) < q < (1 << 30) else 0
+
+    return NTTParams(
+        n=n, q=q, omega=omega, psi=psi,
+        tw=tw.astype(np.uint32), twp=sh(tw),
+        itw=itw.astype(np.uint32), itwp=sh(itw),
+        ninv=ninv, ninv_p=shoup_precompute(ninv, q),
+        psi_pows=psi_pows.astype(np.uint32), psi_pows_p=sh(psi_pows),
+        ipsi_ninv=ipsi_ninv.astype(np.uint32), ipsi_ninv_p=sh(ipsi_ninv),
+        barrett_mu=mu, mont_qinv_neg=qinv_neg, mont_r2=r2,
+    )

@@ -1,0 +1,159 @@
+"""Fully-jittable batched FHE kernels for AOT dry-runs and benchmarks.
+
+Unlike fhe.ckks (host-orchestrated, exact), these functions take all
+NTT/twiddle/key tables as explicit array arguments so they can be
+lowered with ShapeDtypeStructs on the production mesh — the sce-ntt
+dry-run cells (paper §IX workloads at scale).
+
+Table pack layout for a basis of ``k`` primes over ring n:
+  qs      (k,)  u32      prime moduli
+  tw/twp  (k, s, n/2)    forward CG twiddles + Shoup companions
+  itw/itwp(k, s, n/2)    inverse
+  ninv/ninv_p (k,)       n^-1 per prime
+  psi/psip, ipsin/ipsinp (k, n)  negacyclic weights (ipsin folds n^-1)
+  mu      (k,)  u32      Barrett constants (dyadic ct x ct products)
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.modmath import (addmod, submod, mulmod_shoup, mulmod_barrett,
+                                shoup_precompute, barrett_precompute)
+from repro.core.ntt import cg_ntt, cg_intt
+from repro.core.params import make_ntt_params
+
+
+@dataclasses.dataclass
+class TablePack:
+    qs: jnp.ndarray
+    tw: jnp.ndarray
+    twp: jnp.ndarray
+    itw: jnp.ndarray
+    itwp: jnp.ndarray
+    ninv: jnp.ndarray
+    ninv_p: jnp.ndarray
+    psi: jnp.ndarray
+    psip: jnp.ndarray
+    ipsin: jnp.ndarray
+    ipsinp: jnp.ndarray
+    mu: jnp.ndarray
+
+    def tree(self):
+        return dataclasses.asdict(self)
+
+
+def table_pack_shapes(k: int, n: int):
+    s = n.bit_length() - 1
+    u = jnp.uint32
+    sds = jax.ShapeDtypeStruct
+    return {
+        "qs": sds((k,), u), "tw": sds((k, s, n // 2), u), "twp": sds((k, s, n // 2), u),
+        "itw": sds((k, s, n // 2), u), "itwp": sds((k, s, n // 2), u),
+        "ninv": sds((k,), u), "ninv_p": sds((k,), u),
+        "psi": sds((k, n), u), "psip": sds((k, n), u),
+        "ipsin": sds((k, n), u), "ipsinp": sds((k, n), u),
+        "mu": sds((k,), u),
+        # P^-1 mod q_j (last prime treated as special P), Shoup companions
+        "pinv": sds((max(k - 1, 1),), u), "pinv_p": sds((max(k - 1, 1),), u),
+    }
+
+
+def build_table_pack(primes: list[int], n: int) -> dict:
+    rows = {k: [] for k in table_pack_shapes(1, 1)}
+    for q in primes:
+        p = make_ntt_params(n, q=q)
+        rows["qs"].append(np.uint32(q))
+        rows["tw"].append(p.tw)
+        rows["twp"].append(p.twp)
+        rows["itw"].append(p.itw)
+        rows["itwp"].append(p.itwp)
+        rows["ninv"].append(np.uint32(p.ninv))
+        rows["ninv_p"].append(np.uint32(p.ninv_p))
+        rows["psi"].append(p.psi_pows)
+        rows["psip"].append(p.psi_pows_p)
+        rows["ipsin"].append(p.ipsi_ninv)
+        rows["ipsinp"].append(p.ipsi_ninv_p)
+        rows["mu"].append(np.uint32(barrett_precompute(q)))
+    P = primes[-1]
+    for q in (primes[:-1] if len(primes) > 1 else primes):
+        inv = pow(P, -1, q) if q != P else 1
+        rows["pinv"].append(np.uint32(inv))
+        rows["pinv_p"].append(np.uint32(shoup_precompute(inv, q)))
+    return {k: jnp.asarray(np.stack(v)) for k, v in rows.items()}
+
+
+# ------------------------------------------------ per-prime primitives
+
+def ntt_fwd_i(x, t: dict, i):
+    """Negacyclic fwd NTT of x (..., n) under prime row i (traced index).
+    Fully unrolled stages -> XLA fuses butterfly chains (§Perf it. 1)."""
+    q = t["qs"][i]
+    x = mulmod_shoup(x, t["psi"][i], t["psip"][i], q)
+    s = t["tw"].shape[1]
+    return cg_ntt(x, t["tw"][i], t["twp"][i], q, unroll=2)
+
+
+def ntt_inv_i(x, t: dict, i):
+    q = t["qs"][i]
+    s = t["itw"].shape[1]
+    x = cg_intt(x, t["itw"][i], t["itwp"][i], 0, 0, q, apply_ninv=False, unroll=2)
+    return mulmod_shoup(x, t["ipsin"][i], t["ipsinp"][i], q)
+
+
+def extend_centered(coeffs, src_q, dst_qs):
+    """EXACT single-prime base conversion (alpha=1 mod-up), jit form.
+    coeffs: (..., n) u32 mod src_q -> (k, ..., n) u32 mod each dst prime."""
+    c = coeffs.astype(jnp.int32)
+    half = (src_q // jnp.uint32(2)).astype(jnp.int32)
+    c = jnp.where(c > half, c - src_q.astype(jnp.int32), c)
+
+    def per(qd):
+        qd = qd.astype(jnp.int32)
+        r = c % qd
+        return jnp.where(r < 0, r + qd, r).astype(jnp.uint32)
+    return jax.vmap(per)(dst_qs)
+
+
+# ---------------------------------------------------------- keyswitch
+
+def batched_keyswitch(d2, evk_b, evk_a, t: dict):
+    """Paper Fig 22 pipeline, vectorized over a ciphertext batch.
+
+    d2:      (k, B, n) u32, NTT form over the k-prime basis (digit rows)
+    evk_b/a: (k, k+1, n) key-switch key digits over basis+special
+    t:       TablePack for k+1 primes (row k = the special prime P)
+    Returns (ks0, ks1): (k, B, n) over the original basis.
+    """
+    k = d2.shape[0]
+    kp1 = k + 1
+
+    acc0 = acc1 = None
+    for i in range(k):                           # outer digit loop (Fig 22)
+        ci = ntt_inv_i(d2[i], t, i)              # INTT unit
+        ext = extend_centered(ci, t["qs"][i], t["qs"])        # mod-up
+        ext = jnp.stack([ntt_fwd_i(ext[j], t, j) for j in range(kp1)])  # NTT banks
+        pb = jnp.stack([mulmod_barrett(ext[j], evk_b[i, j][None, :],
+                                       t["qs"][j], t["mu"][j]) for j in range(kp1)])
+        pa = jnp.stack([mulmod_barrett(ext[j], evk_a[i, j][None, :],
+                                       t["qs"][j], t["mu"][j]) for j in range(kp1)])
+        if acc0 is None:
+            acc0, acc1 = pb, pa
+        else:
+            acc0 = jnp.stack([addmod(acc0[j], pb[j], t["qs"][j]) for j in range(kp1)])
+            acc1 = jnp.stack([addmod(acc1[j], pa[j], t["qs"][j]) for j in range(kp1)])
+
+    def mod_down(acc):                           # RNS floor + MS
+        lastc = ntt_inv_i(acc[k], t, k)
+        ext = extend_centered(lastc, t["qs"][k], t["qs"][:k])
+        out = []
+        for j in range(k):
+            extj = ntt_fwd_i(ext[j], t, j)
+            d = submod(acc[j], extj, t["qs"][j])
+            out.append(mulmod_shoup(d, t["pinv"][j], t["pinv_p"][j], t["qs"][j]))
+        return jnp.stack(out)
+
+    return mod_down(acc0), mod_down(acc1)

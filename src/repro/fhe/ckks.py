@@ -1,0 +1,236 @@
+"""CKKS-RNS scheme built on the SCE-NTT core (paper §II, §VIII).
+
+Host/device split mirrors the paper's Fig 1: key generation, encoding
+(canonical embedding) and CRT decode run on the host ("CMOS-FHE
+coprocessor"); every ring operation on ciphertexts — NTT, iNTT, dyadic
+multiply/add, key switch — runs through the device NTT layer
+("SCE-NTT coprocessor").
+
+Supported: encode/decode (complex slots), sk/pk encryption, add/sub,
+multiply + relinearization (digit keyswitch), rescale, slot rotation
+and conjugation via Galois automorphisms.  Scale is tracked exactly per
+ciphertext, so prime-vs-scale drift cancels in decode.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.fhe import rns
+from repro.fhe.rns import RnsPoly
+from repro.fhe.keyswitch import keyswitch, mod_down_by_last
+
+
+@dataclasses.dataclass
+class Ciphertext:
+    c0: RnsPoly
+    c1: RnsPoly
+    scale: float
+
+    @property
+    def primes(self):
+        return self.c0.primes
+
+    @property
+    def level(self) -> int:
+        return len(self.primes) - 1
+
+
+class CkksContext:
+    def __init__(self, n: int = 1024, levels: int = 3, scale_bits: int = 28,
+                 sigma: float = 3.2, seed: int = 0):
+        self.n = n
+        self.slots = n // 2
+        self.scale = float(1 << scale_bits)
+        self.sigma = sigma
+        primes = rns.make_primes(n, levels + 2)           # L+1 chain + special
+        self.special = primes[0]                          # largest -> P
+        self.qs = tuple(primes[1:])                       # q_0 .. q_L
+        self.rng = np.random.default_rng(seed)
+        # canonical embedding index table: e_j = 5^j mod 2n
+        self._ejs = np.array([pow(5, j, 2 * n) for j in range(n // 2)])
+        # secret key (ternary), kept host-side; device copies per basis
+        self._s_coeffs = rns.ternary_coeffs(self.rng, n)
+        # public key at full level
+        full = self.qs
+        a = rns.uniform_ntt(self.rng, full, n)
+        e = self._noise_poly(full)
+        s = self._secret_poly(full)
+        self.pk = (e.sub(a.mul(s)), a)                    # (b, a) = (-as + e, a)
+
+    # ------------------------------------------------------------ keys
+
+    def _secret_poly(self, primes, coeffs=None) -> RnsPoly:
+        c = self._s_coeffs if coeffs is None else coeffs
+        return rns.from_int_coeffs(c, tuple(primes), self.n).to_ntt()
+
+    def _noise_poly(self, primes) -> RnsPoly:
+        return rns.from_int_coeffs(rns.gaussian_coeffs(self.rng, self.n, self.sigma),
+                                   tuple(primes), self.n).to_ntt()
+
+    def _make_ksk(self, from_key_coeffs_ntt: RnsPoly, primes: tuple[int, ...]):
+        """Digit keys: evk_i = (-a_i s + e_i + P*T_i*from_key, a_i) over
+        basis (primes..., P), T_i the CRT interpolation coefficient."""
+        full = primes + (self.special,)
+        s_full = self._secret_poly(full)
+        Q = 1
+        for q in primes:
+            Q *= q
+        evk = []
+        # from_key over full basis
+        fk = from_key_coeffs_ntt
+        for i, qi in enumerate(primes):
+            Qi = Q // qi
+            Ti = Qi * pow(Qi % qi, -1, qi) % Q
+            PTi = self.special * Ti
+            a = rns.uniform_ntt(self.rng, full, self.n)
+            e = self._noise_poly(full)
+            b = e.sub(a.mul(s_full))
+            gadget = fk.mul_scalar_per_prime({q: PTi % q for q in full})
+            evk.append((b.add(gadget), a))
+        return evk
+
+    @functools.lru_cache(maxsize=None)
+    def relin_keys(self, primes: tuple[int, ...]):
+        full = primes + (self.special,)
+        s = self._secret_poly(full)
+        return self._make_ksk(s.mul(s), primes)
+
+    @functools.lru_cache(maxsize=None)
+    def galois_keys(self, g: int, primes: tuple[int, ...]):
+        full = primes + (self.special,)
+        sg = self._secret_poly(full, coeffs=galois_int_coeffs(self._s_coeffs, g, self.n))
+        return self._make_ksk(sg, primes)
+
+    # -------------------------------------------------- encode / decode
+
+    def encode(self, z, scale: float | None = None) -> RnsPoly:
+        """z: complex array of up to n/2 slots -> plaintext RnsPoly (NTT)."""
+        scale = scale or self.scale
+        z = np.asarray(z, dtype=np.complex128)
+        zz = np.zeros(self.slots, dtype=np.complex128)
+        zz[: len(z)] = z
+        n2 = 2 * self.n
+        spec = np.zeros(n2, dtype=np.complex128)
+        spec[self._ejs] = zz
+        spec[n2 - self._ejs] = np.conj(zz)
+        c = np.fft.fft(spec)[: self.n].real / self.n
+        c_int = np.rint(c * scale).astype(np.int64).astype(object)
+        return rns.from_int_coeffs(c_int, self.qs, self.n).to_ntt()
+
+    def _decode_coeffs(self, coeffs_float: np.ndarray) -> np.ndarray:
+        n2 = 2 * self.n
+        padded = np.zeros(n2, dtype=np.complex128)
+        padded[: self.n] = coeffs_float
+        F = np.fft.ifft(padded) * n2
+        return F[self._ejs]
+
+    def decode(self, pt: RnsPoly, scale: float) -> np.ndarray:
+        big = rns.crt_reconstruct_centered(pt if not pt.is_ntt else pt.to_coeff())
+        cf = np.array([float(x) for x in big]) / scale
+        return self._decode_coeffs(cf)
+
+    # ------------------------------------------------ encrypt / decrypt
+
+    def encrypt(self, pt: RnsPoly, scale: float | None = None) -> Ciphertext:
+        scale = scale or self.scale
+        primes = pt.primes
+        v = rns.from_int_coeffs(rns.ternary_coeffs(self.rng, self.n), primes, self.n).to_ntt()
+        e0 = self._noise_poly(primes)
+        e1 = self._noise_poly(primes)
+        b, a = self.pk
+        c0 = b.mul(v).add(e0).add(pt)
+        c1 = a.mul(v).add(e1)
+        return Ciphertext(c0, c1, scale)
+
+    def decrypt(self, ct: Ciphertext) -> RnsPoly:
+        s = self._secret_poly(ct.primes)
+        return ct.c0.add(ct.c1.mul(s))
+
+    def decrypt_decode(self, ct: Ciphertext) -> np.ndarray:
+        return self.decode(self.decrypt(ct), ct.scale)
+
+    # --------------------------------------------------------- homomorphic
+
+    def add(self, a: Ciphertext, b: Ciphertext) -> Ciphertext:
+        assert a.primes == b.primes and abs(a.scale - b.scale) / a.scale < 1e-9
+        return Ciphertext(a.c0.add(b.c0), a.c1.add(b.c1), a.scale)
+
+    def sub(self, a: Ciphertext, b: Ciphertext) -> Ciphertext:
+        assert a.primes == b.primes
+        return Ciphertext(a.c0.sub(b.c0), a.c1.sub(b.c1), a.scale)
+
+    def add_plain(self, a: Ciphertext, pt: RnsPoly) -> Ciphertext:
+        return Ciphertext(a.c0.add(pt), a.c1, a.scale)
+
+    def mul_plain(self, a: Ciphertext, pt: RnsPoly, pt_scale: float | None = None) -> Ciphertext:
+        pt_scale = pt_scale or self.scale
+        return Ciphertext(a.c0.mul(pt), a.c1.mul(pt), a.scale * pt_scale)
+
+    def multiply(self, a: Ciphertext, b: Ciphertext) -> Ciphertext:
+        """Tensor + relinearize (paper Table I 'Homomorphic Mult':
+        NTT/INTT + dyadic work all on the SCE-NTT side)."""
+        assert a.primes == b.primes
+        d0 = a.c0.mul(b.c0)
+        d1 = a.c0.mul(b.c1).add(a.c1.mul(b.c0))
+        d2 = a.c1.mul(b.c1)
+        ks0, ks1 = keyswitch(d2, self.relin_keys(a.primes), self.special)
+        return Ciphertext(d0.add(ks0), d1.add(ks1), a.scale * b.scale)
+
+    def rescale(self, a: Ciphertext) -> Ciphertext:
+        q_last = a.primes[-1]
+        return Ciphertext(mod_down_by_last(a.c0), mod_down_by_last(a.c1),
+                          a.scale / q_last)
+
+    def rotate(self, a: Ciphertext, r: int) -> Ciphertext:
+        """Rotate slots left by r (Galois automorphism X -> X^(5^r))."""
+        g = pow(5, r, 2 * self.n)
+        return self._apply_galois(a, g)
+
+    def conjugate(self, a: Ciphertext) -> Ciphertext:
+        return self._apply_galois(a, 2 * self.n - 1)
+
+    def _apply_galois(self, a: Ciphertext, g: int) -> Ciphertext:
+        c0g = galois_poly(a.c0, g)
+        c1g = galois_poly(a.c1, g)
+        ks0, ks1 = keyswitch(c1g, self.galois_keys(g, a.primes), self.special)
+        return Ciphertext(c0g.add(ks0), ks1, a.scale)
+
+
+# ------------------------------------------------- Galois automorphism
+
+def galois_int_coeffs(coeffs: np.ndarray, g: int, n: int) -> np.ndarray:
+    """sigma_g on integer coefficient vectors: X^t -> X^(g t mod 2n),
+    with X^n = -1 folding."""
+    out = np.zeros(n, dtype=np.int64)
+    for t in range(n):
+        u = (g * t) % (2 * n)
+        if u < n:
+            out[u] += coeffs[t]
+        else:
+            out[u - n] -= coeffs[t]
+    return out
+
+
+def galois_poly(p: RnsPoly, g: int) -> RnsPoly:
+    """Automorphism applied per residue row (coefficient domain), then
+    back to NTT form."""
+    was_ntt = p.is_ntt
+    if was_ntt:
+        p = p.to_coeff()
+    n = p.n
+    t = np.arange(n)
+    u = (g * t) % (2 * n)
+    dst = np.where(u < n, u, u - n)
+    neg = u >= n
+    rows = []
+    for row, q in zip(np.asarray(p.data), p.primes):
+        out = np.zeros(n, dtype=np.uint32)
+        vals = np.where(neg, (q - row.astype(np.int64)) % q, row.astype(np.int64))
+        out[dst] = vals.astype(np.uint32)
+        rows.append(jnp.asarray(out))
+    res = RnsPoly(jnp.stack(rows), p.primes, False)
+    return res.to_ntt() if was_ntt else res

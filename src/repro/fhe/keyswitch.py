@@ -1,0 +1,63 @@
+"""RNS-digit key switching — the paper's Fig 22 pipeline, stage by stage.
+
+Paper architecture -> code mapping:
+
+  INTT unit (8x INTT-128)        -> ``d2.to_coeff()``          (step 1)
+  Mod-up / base extension        -> ``extend_single``          (step 2)
+  NTT banks (8x NTT units)       -> ``.to_ntt()``              (step 2)
+  Dyadic MM/MA arrays            -> ``.mul().add()`` MAC       (step 3)
+  RNS floor (INTT+ext+NTT, MS)   -> ``mod_down_by_last``       (step 4)
+
+The paper processes the L+1 = 8 digits as 8 pipelined outer iterations
+on 8 parallel NTT banks; here the digit loop is a host loop over
+device-vectorized rows (the mesh supplies spatial parallelism instead,
+see the sce-ntt dry-run config).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.fhe.rns import RnsPoly, extend_single
+
+
+def mod_down_by_last(x: RnsPoly) -> RnsPoly:
+    """RNS floor: divide by the last prime in x's basis and round.
+
+    x must be in NTT form; returns NTT form over the shortened basis.
+    (This single routine implements both the key-switch mod-down by the
+    special prime P and ciphertext rescale by q_l.)"""
+    assert x.is_ntt
+    last_q = x.primes[-1]
+    import numpy as np
+    from repro.kernels import ops
+    from repro.fhe.rns import prime_params
+    # [x]_P : INTT only the last row (one INTT-128 unit in the paper)
+    last_coeff = ops.intt(x.data[-1], prime_params(x.n, last_q), negacyclic=True)
+    rest = x.primes[:-1]
+    ext = extend_single(np.asarray(last_coeff), last_q, rest).to_ntt()
+    diff = x.drop_last().sub(ext)
+    inv = {q: pow(last_q, -1, q) for q in rest}
+    return diff.mul_scalar_per_prime(inv)
+
+
+def keyswitch(d2: RnsPoly, evk: list[tuple[RnsPoly, RnsPoly]],
+              special_prime: int) -> tuple[RnsPoly, RnsPoly]:
+    """Switch the key under ``d2`` using digit keys ``evk`` (one per
+    active prime).  d2: NTT form over basis (q_0..q_l).  Each evk[i] is a
+    pair of RnsPoly over (q_0..q_l, P) encrypting P * T_i * s_from.
+    Returns (ks0, ks1) over (q_0..q_l)."""
+    assert d2.is_ntt
+    primes = d2.primes
+    full = primes + (special_prime,)
+    d2c = d2.to_coeff()                                   # INTT units
+    acc0 = acc1 = None
+    import numpy as np
+    for i, qi in enumerate(primes):                       # outer loop, Fig 22
+        ext = extend_single(np.asarray(d2c.data[i]), qi, full).to_ntt()  # mod-up + NTT banks
+        t0 = ext.mul(evk[i][0])                           # dyadic MM
+        t1 = ext.mul(evk[i][1])
+        acc0 = t0 if acc0 is None else acc0.add(t0)       # MA accumulate
+        acc1 = t1 if acc1 is None else acc1.add(t1)
+    ks0 = mod_down_by_last(acc0)                          # RNS floor + MS
+    ks1 = mod_down_by_last(acc1)
+    return ks0, ks1

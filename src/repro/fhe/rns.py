@@ -1,0 +1,153 @@
+"""Residue Number System substrate for CKKS (paper §VIII: the full-RNS
+variant [35] is what makes a 32-bit datapath sufficient — exactly the
+paper's argument for extending NTT-128 to practical FHE).
+
+An ``RnsPoly`` is a stack of (n,) u32 residue rows, one per prime, in
+either coefficient or NTT (evaluation) form.  Base conversions here are
+*exact* because our digit decomposition uses single-prime digits
+(alpha=1): lifting a centered residue from one 30-bit prime to another
+basis involves no approximation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.modmath import addmod, submod, mulmod_barrett, shoup_precompute, mulmod_shoup
+from repro.core.params import NTTParams, make_ntt_params, gen_ntt_primes
+from repro.kernels import ops
+
+
+@functools.lru_cache(maxsize=None)
+def prime_params(n: int, q: int) -> NTTParams:
+    return make_ntt_params(n, q=q)
+
+
+@dataclasses.dataclass
+class RnsPoly:
+    """data: (len(primes), n) u32; NTT form iff is_ntt."""
+    data: jnp.ndarray
+    primes: tuple[int, ...]
+    is_ntt: bool
+
+    @property
+    def n(self) -> int:
+        return self.data.shape[-1]
+
+    def _zip(self):
+        return zip(self.data, self.primes)
+
+    def map2(self, other: "RnsPoly", fn) -> "RnsPoly":
+        assert self.primes == other.primes and self.is_ntt == other.is_ntt
+        rows = [fn(a, b, q) for (a, q), b in zip(self._zip(), other.data)]
+        return RnsPoly(jnp.stack(rows), self.primes, self.is_ntt)
+
+    def add(self, other: "RnsPoly") -> "RnsPoly":
+        return self.map2(other, lambda a, b, q: addmod(a, b, jnp.uint32(q)))
+
+    def sub(self, other: "RnsPoly") -> "RnsPoly":
+        return self.map2(other, lambda a, b, q: submod(a, b, jnp.uint32(q)))
+
+    def mul(self, other: "RnsPoly") -> "RnsPoly":
+        """Dyadic product — both operands must be in NTT form."""
+        assert self.is_ntt and other.is_ntt
+
+        def f(a, b, q):
+            p = prime_params(self.n, q)
+            return mulmod_barrett(a, b, jnp.uint32(q), jnp.uint32(p.barrett_mu))
+        return self.map2(other, f)
+
+    def mul_scalar_per_prime(self, scalars: dict[int, int]) -> "RnsPoly":
+        rows = []
+        for a, q in self._zip():
+            s = scalars[q] % q
+            rows.append(mulmod_shoup(a, jnp.uint32(s),
+                                     jnp.uint32(shoup_precompute(s, q)), jnp.uint32(q)))
+        return RnsPoly(jnp.stack(rows), self.primes, self.is_ntt)
+
+    def neg(self) -> "RnsPoly":
+        rows = [submod(jnp.zeros_like(a), a, jnp.uint32(q)) for a, q in self._zip()]
+        return RnsPoly(jnp.stack(rows), self.primes, self.is_ntt)
+
+    def to_ntt(self) -> "RnsPoly":
+        assert not self.is_ntt
+        rows = [ops.ntt(a, prime_params(self.n, q), negacyclic=True)
+                for a, q in self._zip()]
+        return RnsPoly(jnp.stack(rows), self.primes, True)
+
+    def to_coeff(self) -> "RnsPoly":
+        assert self.is_ntt
+        rows = [ops.intt(a, prime_params(self.n, q), negacyclic=True)
+                for a, q in self._zip()]
+        return RnsPoly(jnp.stack(rows), self.primes, False)
+
+    def drop_last(self) -> "RnsPoly":
+        return RnsPoly(self.data[:-1], self.primes[:-1], self.is_ntt)
+
+
+# ------------------------------------------------------- constructions
+
+def from_int_coeffs(coeffs, primes: tuple[int, ...], n: int) -> RnsPoly:
+    """coeffs: numpy object/int array of (possibly negative) integers."""
+    coeffs = np.asarray(coeffs, dtype=object)
+    rows = []
+    for q in primes:
+        rows.append(jnp.asarray((coeffs % q).astype(np.uint64).astype(np.uint32)))
+    return RnsPoly(jnp.stack(rows), tuple(primes), False)
+
+
+def uniform_ntt(rng: np.random.Generator, primes, n: int) -> RnsPoly:
+    """Uniform ring element, sampled directly in NTT form (CRT + NTT are
+    bijections, so independent uniform residue rows are exactly uniform)."""
+    rows = [jnp.asarray(rng.integers(0, q, size=n, dtype=np.uint32)) for q in primes]
+    return RnsPoly(jnp.stack(rows), tuple(primes), True)
+
+
+def gaussian_coeffs(rng: np.random.Generator, n: int, sigma: float = 3.2) -> np.ndarray:
+    return np.rint(rng.normal(0.0, sigma, size=n)).astype(np.int64)
+
+
+def ternary_coeffs(rng: np.random.Generator, n: int) -> np.ndarray:
+    return rng.integers(-1, 2, size=n).astype(np.int64)
+
+
+# ---------------------------------------------------- base conversions
+
+def center_row(row: np.ndarray, q: int) -> np.ndarray:
+    """u32 residues -> centered int64 in [-q/2, q/2)."""
+    r = row.astype(np.int64)
+    return np.where(r > q // 2, r - q, r)
+
+
+def extend_single(row, src_q: int, dst_primes: tuple[int, ...]):
+    """EXACT base conversion of a centered single-prime residue row to
+    dst_primes (the alpha=1 'mod-up' of the paper's Fig 22)."""
+    c = center_row(np.asarray(row), src_q)
+    rows = []
+    for q in dst_primes:
+        rows.append(jnp.asarray(((c % q) + q) % q).astype(jnp.uint32))
+    return RnsPoly(jnp.stack(rows), tuple(dst_primes), False)
+
+
+def crt_reconstruct_centered(poly: RnsPoly) -> np.ndarray:
+    """(k, n) residues -> centered big-int numpy object array (host CRT;
+    the paper's 'CMOS coprocessor decode' role)."""
+    assert not poly.is_ntt
+    primes = poly.primes
+    Q = 1
+    for q in primes:
+        Q *= q
+    acc = np.zeros(poly.n, dtype=object)
+    for row, q in zip(np.asarray(poly.data), primes):
+        Qi = Q // q
+        t = pow(Qi % q, -1, q)
+        acc += row.astype(object) * (Qi * t)
+    acc %= Q
+    return np.where(acc > Q // 2, acc - Q, acc)
+
+
+def make_primes(n: int, count: int, bits: int = 30) -> list[int]:
+    return gen_ntt_primes(count, n, bits=bits)

@@ -1,0 +1,79 @@
+"""Pointwise ("Dyadic Mod", paper Fig 22 / Table I) modular kernels.
+
+Ciphertext-by-ciphertext products have no precomputed operand, so the
+Shoup trick does not apply; these use the u32-limb Barrett reduction
+(the paper's CMOS-coprocessor op, here a first-class TPU kernel).
+
+Kernels:
+  * ``dyadic_mul``  — c = a .* b mod q
+  * ``dyadic_mac``  — acc' = acc + a .* b mod q  (key-switch inner loop:
+    the MM/MA array of paper Fig 22, fused so the accumulator never
+    leaves VMEM)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.modmath import MASK16
+
+
+def _mulhi(a, b):
+    a0 = a & MASK16
+    a1 = a >> 16
+    b0 = b & MASK16
+    b1 = b >> 16
+    t = a0 * b0
+    m1 = a1 * b0 + (t >> 16)
+    m2 = a0 * b1 + (m1 & MASK16)
+    return a1 * b1 + (m1 >> 16) + (m2 >> 16)
+
+
+def _barrett(a, b, q, mu):
+    hi = _mulhi(a, b)
+    lo = a * b
+    approx = (hi << 3) | (lo >> 29)
+    qhat = (_mulhi(approx, mu) << 1) | ((approx * mu) >> 31)
+    r = lo - qhat * q
+    r = jnp.where(r >= (q << 1), r - (q << 1), r)
+    return jnp.where(r >= q, r - q, r)
+
+
+def _mul_kernel(a_ref, b_ref, o_ref, *, q: int, mu: int):
+    o_ref[...] = _barrett(a_ref[...], b_ref[...], jnp.uint32(q), jnp.uint32(mu))
+
+
+def _mac_kernel(acc_ref, a_ref, b_ref, o_ref, *, q: int, mu: int):
+    qc = jnp.uint32(q)
+    p = _barrett(a_ref[...], b_ref[...], qc, jnp.uint32(mu))
+    s = acc_ref[...] + p
+    o_ref[...] = jnp.where(s >= qc, s - qc, s)
+
+
+def _tile_call(kernel, args, *, tile: int, interpret: bool):
+    b, n = args[0].shape
+    assert b % tile == 0
+    spec = pl.BlockSpec((tile, n), lambda i: (i, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=(b // tile,),
+        in_specs=[spec] * len(args),
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((b, n), jnp.uint32),
+        interpret=interpret,
+    )(*args)
+
+
+@functools.partial(jax.jit, static_argnames=("q", "mu", "tile", "interpret"))
+def dyadic_mul(a, b, *, q: int, mu: int, tile: int = 8, interpret: bool = True):
+    kern = functools.partial(_mul_kernel, q=q, mu=mu)
+    return _tile_call(kern, [a, b], tile=tile, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("q", "mu", "tile", "interpret"))
+def dyadic_mac(acc, a, b, *, q: int, mu: int, tile: int = 8, interpret: bool = True):
+    kern = functools.partial(_mac_kernel, q=q, mu=mu)
+    return _tile_call(kern, [acc, a, b], tile=tile, interpret=interpret)

@@ -1,0 +1,137 @@
+"""Fused constant-geometry NTT / iNTT as Pallas TPU kernels.
+
+The whole ``log2(n)``-stage transform runs inside ONE kernel invocation
+per (batch-tile, n) VMEM block — the TPU analogue of the paper's 7-PE
+pipeline where a polynomial streams through all stages without touching
+main memory.  The ping-pong SRM banks of the paper become the automatic
+double-buffering of the Pallas grid pipeline (HBM->VMEM block prefetch
+overlaps compute on the previous tile).
+
+Twiddles (and their Shoup TW' companions, paper §IV.A) are resident in
+VMEM for all programs; stage t reads row t — the materialized circulating
+CSRM.  All arithmetic is u32 (16-bit-limb mulhi), see core.modmath.
+
+VMEM budget per program (defaults, n=8192, tile=8):
+  coeffs 8*8192*4 = 256 KiB, twiddles 2*13*4096*4 = 416 KiB,
+  weights 2*8192*4 = 64 KiB  -> well under the ~16 MiB VMEM/core.
+MXU alignment: the innermost dim stays n >= 128 (lane-dim multiple of
+128); butterflies are pure VPU work, so the tile is lane-aligned rather
+than MXU-shaped.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.modmath import MASK16
+
+
+# --------------------------------------------------- in-kernel helpers
+
+def _mulhi(a, b):
+    a0 = a & MASK16
+    a1 = a >> 16
+    b0 = b & MASK16
+    b1 = b >> 16
+    t = a0 * b0
+    m1 = a1 * b0 + (t >> 16)
+    m2 = a0 * b1 + (m1 & MASK16)
+    return a1 * b1 + (m1 >> 16) + (m2 >> 16)
+
+
+def _shoup(x, w, wp, q):
+    r = x * w - _mulhi(x, wp) * q
+    return jnp.where(r >= q, r - q, r)
+
+
+def _addmod(a, b, q):
+    s = a + b
+    return jnp.where(s >= q, s - q, s)
+
+
+def _submod(a, b, q):
+    return jnp.where(a >= b, a - b, a + (q - b))
+
+
+# ----------------------------------------------------------- fwd kernel
+
+def _ntt_fwd_kernel(x_ref, tw_ref, twp_ref, pre_ref, prep_ref, o_ref, *,
+                    q: int, stages: int, negacyclic: bool):
+    qc = jnp.uint32(q)
+    x = x_ref[...]                      # (bt, n)
+    bt, n = x.shape
+    if negacyclic:
+        x = _shoup(x, pre_ref[...], prep_ref[...], qc)
+    for t in range(stages):
+        w = tw_ref[t, :]                # (n/2,)
+        wp = twp_ref[t, :]
+        lo = x[:, : n // 2]
+        hi = x[:, n // 2:]
+        tt = _shoup(hi, w, wp, qc)
+        u = _addmod(lo, tt, qc)
+        v = _submod(lo, tt, qc)
+        x = jnp.stack([u, v], axis=-1).reshape(bt, n)
+    o_ref[...] = x
+
+
+def _ntt_inv_kernel(x_ref, itw_ref, itwp_ref, post_ref, postp_ref, o_ref, *,
+                    q: int, stages: int, negacyclic: bool, ninv: int, ninv_p: int):
+    qc = jnp.uint32(q)
+    x = x_ref[...]
+    bt, n = x.shape
+    for t in range(stages - 1, -1, -1):
+        w = itw_ref[t, :]
+        wp = itwp_ref[t, :]
+        pairs = x.reshape(bt, n // 2, 2)
+        e = pairs[..., 0]
+        o = pairs[..., 1]
+        u = _addmod(e, o, qc)
+        v = _shoup(_submod(e, o, qc), w, wp, qc)
+        x = jnp.concatenate([u, v], axis=-1)
+    if negacyclic:
+        x = _shoup(x, post_ref[...], postp_ref[...], qc)   # psi^-i * n^-1 fused
+    else:
+        x = _shoup(x, jnp.uint32(ninv), jnp.uint32(ninv_p), qc)
+    o_ref[...] = x
+
+
+# ------------------------------------------------------------- wrappers
+
+def _grid_call(kernel, x, tables, row_args, *, tile: int, interpret: bool):
+    """Common grid/BlockSpec plumbing: grid over batch tiles; twiddle
+    tables and per-coefficient weight rows fully VMEM-resident."""
+    b, n = x.shape
+    assert b % tile == 0
+    s_tables = [
+        pl.BlockSpec(t.shape, lambda i: (0,) * t.ndim) for t in tables
+    ]
+    s_rows = [pl.BlockSpec((1, n), lambda i: (0, 0)) for _ in row_args]
+    return pl.pallas_call(
+        kernel,
+        grid=(b // tile,),
+        in_specs=[pl.BlockSpec((tile, n), lambda i: (i, 0))] + s_tables + s_rows,
+        out_specs=pl.BlockSpec((tile, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, n), jnp.uint32),
+        interpret=interpret,
+    )(x, *tables, *row_args)
+
+
+@functools.partial(jax.jit, static_argnames=("q", "stages", "negacyclic", "tile", "interpret"))
+def ntt_fwd_pallas(x, tw, twp, pre, prep, *, q: int, stages: int,
+                   negacyclic: bool, tile: int = 8, interpret: bool = True):
+    """x: (batch, n) u32.  pre/prep: (1, n) psi-power rows (ignored when
+    not negacyclic but still passed to keep one kernel signature)."""
+    kern = functools.partial(_ntt_fwd_kernel, q=q, stages=stages, negacyclic=negacyclic)
+    return _grid_call(kern, x, [tw, twp], [pre, prep], tile=tile, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("q", "stages", "negacyclic", "ninv", "ninv_p", "tile", "interpret"))
+def ntt_inv_pallas(x, itw, itwp, post, postp, *, q: int, stages: int,
+                   negacyclic: bool, ninv: int, ninv_p: int,
+                   tile: int = 8, interpret: bool = True):
+    kern = functools.partial(_ntt_inv_kernel, q=q, stages=stages,
+                             negacyclic=negacyclic, ninv=ninv, ninv_p=ninv_p)
+    return _grid_call(kern, x, [itw, itwp], [post, postp], tile=tile, interpret=interpret)

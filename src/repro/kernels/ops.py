@@ -1,0 +1,90 @@
+"""Public jit'd entry points for the NTT/dyadic compute layer.
+
+Dispatch policy: Pallas kernels target TPU; on CPU (this container) the
+kernels run in interpret mode for validation, but the *default* hot path
+on non-TPU backends is the pure-jnp reference (same math, faster under
+XLA:CPU).  ``use_pallas=True`` forces the kernel path (tests do this).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.params import NTTParams
+from repro.kernels import ntt_kernel, dyadic_kernel, ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_batch(x, tile):
+    b = x.shape[0]
+    pad = (-b) % tile
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad,) + x.shape[1:], x.dtype)], axis=0)
+    return x, b
+
+
+def ntt(x, p: NTTParams, *, negacyclic: bool = True, use_pallas: bool | None = None,
+        tile: int = 8):
+    """Batched forward NTT.  x: (..., n) u32 -> (..., n) u32 (bitrev order)."""
+    use_pallas = _on_tpu() if use_pallas is None else use_pallas
+    x = jnp.asarray(x)
+    if not use_pallas:
+        return ref.ntt_fwd_ref(x, p, negacyclic)
+    shape = x.shape
+    x2 = x.reshape(-1, p.n)
+    x2, b = _pad_batch(x2, tile)
+    out = ntt_kernel.ntt_fwd_pallas(
+        x2, jnp.asarray(p.tw), jnp.asarray(p.twp),
+        jnp.asarray(p.psi_pows)[None, :], jnp.asarray(p.psi_pows_p)[None, :],
+        q=p.q, stages=p.stages, negacyclic=negacyclic, tile=tile,
+        interpret=not _on_tpu())
+    return out[:b].reshape(shape)
+
+
+def intt(x, p: NTTParams, *, negacyclic: bool = True, use_pallas: bool | None = None,
+         tile: int = 8):
+    use_pallas = _on_tpu() if use_pallas is None else use_pallas
+    x = jnp.asarray(x)
+    if not use_pallas:
+        return ref.ntt_inv_ref(x, p, negacyclic)
+    shape = x.shape
+    x2 = x.reshape(-1, p.n)
+    x2, b = _pad_batch(x2, tile)
+    out = ntt_kernel.ntt_inv_pallas(
+        x2, jnp.asarray(p.itw), jnp.asarray(p.itwp),
+        jnp.asarray(p.ipsi_ninv)[None, :], jnp.asarray(p.ipsi_ninv_p)[None, :],
+        q=p.q, stages=p.stages, negacyclic=negacyclic,
+        ninv=p.ninv, ninv_p=p.ninv_p, tile=tile, interpret=not _on_tpu())
+    return out[:b].reshape(shape)
+
+
+def dyadic_mul(a, b, p: NTTParams, *, use_pallas: bool | None = None, tile: int = 8):
+    use_pallas = _on_tpu() if use_pallas is None else use_pallas
+    if not use_pallas:
+        return ref.dyadic_mul_ref(a, b, p.q, p.barrett_mu)
+    a = jnp.asarray(a)
+    shape = a.shape
+    a2 = a.reshape(-1, p.n)
+    b2 = jnp.asarray(b).reshape(-1, p.n)
+    a2, nb = _pad_batch(a2, tile)
+    b2, _ = _pad_batch(b2, tile)
+    out = dyadic_kernel.dyadic_mul(a2, b2, q=p.q, mu=p.barrett_mu, tile=tile,
+                                   interpret=not _on_tpu())
+    return out[:nb].reshape(shape)
+
+
+def dyadic_mac(acc, a, b, p: NTTParams, *, use_pallas: bool | None = None, tile: int = 8):
+    use_pallas = _on_tpu() if use_pallas is None else use_pallas
+    if not use_pallas:
+        return ref.dyadic_mac_ref(acc, a, b, p.q, p.barrett_mu)
+    acc = jnp.asarray(acc)
+    shape = acc.shape
+    f = lambda t: _pad_batch(jnp.asarray(t).reshape(-1, p.n), tile)[0]
+    nb = acc.reshape(-1, p.n).shape[0]
+    out = dyadic_kernel.dyadic_mac(f(acc), f(a), f(b), q=p.q, mu=p.barrett_mu,
+                                   tile=tile, interpret=not _on_tpu())
+    return out[:nb].reshape(shape)

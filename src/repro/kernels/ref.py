@@ -1,0 +1,35 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` contract).
+
+These are the *same functions* the rest of the framework uses on CPU;
+kernel tests sweep shapes/dtypes and assert exact equality (integer
+arithmetic — no tolerance needed)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import ntt as _ntt
+from repro.core.modmath import mulmod_barrett, addmod
+from repro.core.params import NTTParams
+
+
+def ntt_fwd_ref(x, p: NTTParams, negacyclic: bool):
+    x = jnp.asarray(x)
+    if negacyclic:
+        return _ntt.ntt_negacyclic(x, p)
+    return _ntt.ntt_cyclic(x, p)
+
+
+def ntt_inv_ref(x, p: NTTParams, negacyclic: bool):
+    x = jnp.asarray(x)
+    if negacyclic:
+        return _ntt.intt_negacyclic(x, p)
+    return _ntt.intt_cyclic(x, p)
+
+
+def dyadic_mul_ref(a, b, q: int, mu: int):
+    return mulmod_barrett(jnp.asarray(a), jnp.asarray(b), jnp.uint32(q), jnp.uint32(mu))
+
+
+def dyadic_mac_ref(acc, a, b, q: int, mu: int):
+    p = mulmod_barrett(jnp.asarray(a), jnp.asarray(b), jnp.uint32(q), jnp.uint32(mu))
+    return addmod(jnp.asarray(acc), p, jnp.uint32(q))

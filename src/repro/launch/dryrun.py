@@ -1,0 +1,234 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod AOT dry-run: lower + compile every (arch x shape x mesh)
+cell on the production mesh, record memory/cost/collective analysis for
+EXPERIMENTS.md §Dry-run and §Roofline.
+
+MUST be the process entry point (the XLA_FLAGS line above runs before
+any jax import).  Usage:
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch smollm-135m \
+      --shape train_4k --mesh pod1
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--mesh pod1|pod2|both]
+
+Results: experiments/dryrun/<arch>__<shape>__<mesh>.json (existing files
+are skipped — the sweep is resumable)."""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS, get_config
+from repro.launch.mesh import make_mesh_ctx
+from repro.models.common import SHAPES, ShapeCfg, MeshCtx
+from repro.models.model import build_model, padded_vocab
+from repro.optim.adamw import AdamWConfig
+from repro.runtime import roofline as RL
+from repro.runtime import sharding as SH
+from repro.train.step import TrainConfig, init_train_state, make_train_step
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "experiments", "dryrun")
+
+
+# ------------------------------------------------------------ helpers
+
+def input_specs(cfg, shape: ShapeCfg):
+    """ShapeDtypeStruct stand-ins for every model input (no allocation)."""
+    B, S = shape.batch, shape.seq
+    sds = jax.ShapeDtypeStruct
+    if shape.kind == "train":
+        batch = {"labels": sds((B, S), jnp.int32)}
+        if cfg.embeds_input:
+            batch["embeds"] = sds((B, S, cfg.d_model), jnp.bfloat16)
+        else:
+            batch["tokens"] = sds((B, S), jnp.int32)
+        return batch
+    if shape.kind == "prefill":
+        batch = ({"embeds": sds((B, S, cfg.d_model), jnp.bfloat16)}
+                 if cfg.embeds_input else {"tokens": sds((B, S), jnp.int32)})
+        return batch
+    # decode: one token against a seq_len cache
+    batch = ({"embeds": sds((B, 1, cfg.d_model), jnp.bfloat16)}
+             if cfg.embeds_input else {"tokens": sds((B, 1), jnp.int32)})
+    return batch
+
+
+def count_params(shapes_tree, cfg):
+    total = active = 0.0
+    flat, _ = jax.tree_util.tree_flatten_with_path(shapes_tree)
+    for path, leaf in flat:
+        k = jax.tree_util.keystr(path)
+        n = float(np.prod(leaf.shape))
+        if "embed" in k and not cfg.tie_embeddings:
+            continue                       # lookup table, not matmul params
+        total += n
+        if cfg.moe is not None and "moe" in k and any(
+                w in k for w in ("w_up", "w_gate", "w_down")):
+            active += n * cfg.moe.top_k / cfg.moe.n_experts
+        else:
+            active += n
+    return total, active
+
+
+def _train_opt_cfg(arch: str) -> AdamWConfig:
+    if arch == "kimi-k2-1t-a32b":
+        return AdamWConfig(moments_dtype="int8")   # fit 1T on 512x16GB
+    return AdamWConfig()
+
+
+def lower_cell(arch: str, shape_name: str, mesh_name: str):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mctx = make_mesh_ctx(multi_pod=(mesh_name == "pod2"))
+    model = build_model(cfg, mctx, remat_policy="full")
+    mesh = mctx.mesh
+
+    pshapes = jax.eval_shape(model.init, jax.random.key(0))
+    pspecs = SH.param_pspecs(pshapes, cfg, mctx)
+    p_sh = SH.to_named(pspecs, mesh)
+    batch = input_specs(cfg, shape)
+    b_sh = SH.to_named(SH.batch_pspecs(batch, mctx), mesh)
+    total_p, active_p = count_params(pshapes, cfg)
+
+    if shape.kind == "train":
+        tcfg = TrainConfig(opt=_train_opt_cfg(arch), remat_policy="full")
+        oshapes = jax.eval_shape(
+            lambda p: init_train_state(model, p, tcfg), pshapes)
+        ospecs = {"opt": SH.opt_pspecs(pspecs, oshapes["opt"], mctx,
+                                       tcfg.opt.moments_dtype)}
+        o_sh = SH.to_named(ospecs, mesh)
+        step = make_train_step(model, tcfg)
+        jf = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh),
+                     out_shardings=(p_sh, o_sh, None),
+                     donate_argnums=(0, 1))
+        args = (pshapes, oshapes, batch)
+        model_flops = 6.0 * active_p * shape.batch * shape.seq
+    elif shape.kind == "prefill":
+        S = shape.seq
+
+        def prefill(params, b):
+            return model.prefill(params, dict(b, max_len=S))
+        cshapes = jax.eval_shape(lambda: model.init_cache(shape.batch, S))
+        c_sh = SH.to_named(SH.cache_pspecs(cshapes, cfg, mctx), mesh)
+        logits_sh = SH.to_named(
+            SH.batch_pspecs(jax.ShapeDtypeStruct(
+                (shape.batch, padded_vocab(cfg)), jnp.float32), mctx), mesh)
+        jf = jax.jit(prefill, in_shardings=(p_sh, b_sh),
+                     out_shardings=(logits_sh, c_sh))
+        args = (pshapes, batch)
+        model_flops = 2.0 * active_p * shape.batch * shape.seq
+    else:  # decode
+        cshapes = jax.eval_shape(lambda: model.init_cache(shape.batch, shape.seq))
+        c_sh = SH.to_named(SH.cache_pspecs(cshapes, cfg, mctx), mesh)
+        logits_sh = SH.to_named(
+            SH.batch_pspecs(jax.ShapeDtypeStruct(
+                (shape.batch, padded_vocab(cfg)), jnp.float32), mctx), mesh)
+        jf = jax.jit(model.decode_step, in_shardings=(p_sh, c_sh, b_sh),
+                     out_shardings=(logits_sh, c_sh), donate_argnums=(1,))
+        args = (pshapes, cshapes, batch)
+        model_flops = 2.0 * active_p * shape.batch
+
+    t0 = time.time()
+    lowered = jf.lower(*args)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    return compiled, model_flops, total_p, active_p, t_lower, t_compile
+
+
+def run_cell(arch: str, shape_name: str, mesh_name: str, out_dir: str,
+             save_hlo: bool = False) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if shape_name == "long_500k" and not getattr(cfg, "sub_quadratic", False):
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                "skipped": "full-attention arch; long_500k requires "
+                           "sub-quadratic attention (DESIGN.md §5)"}
+    compiled, model_flops, total_p, active_p, t_lo, t_co = lower_cell(
+        arch, shape_name, mesh_name)
+    ma = compiled.memory_analysis()
+    ndev = 512 if mesh_name == "pod2" else 256
+    rl = RL.roofline_from_compiled(compiled, model_flops, n_devices=ndev)
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "kind": shape.kind,
+        "params_total": total_p, "params_active": active_p,
+        "lower_s": round(t_lo, 1), "compile_s": round(t_co, 1),
+        "memory": {
+            "argument_bytes_per_device": ma.argument_size_in_bytes,
+            "output_bytes_per_device": ma.output_size_in_bytes,
+            "temp_bytes_per_device": ma.temp_size_in_bytes,
+            "alias_bytes_per_device": ma.alias_size_in_bytes,
+            "peak_estimate_gib": round(
+                (ma.argument_size_in_bytes + ma.output_size_in_bytes
+                 + ma.temp_size_in_bytes - ma.alias_size_in_bytes) / 2**30, 3),
+            "fits_16gib_hbm": (ma.argument_size_in_bytes + ma.output_size_in_bytes
+                               + ma.temp_size_in_bytes - ma.alias_size_in_bytes) < 16 * 2**30,
+        },
+        "roofline": rl.to_dict(),
+    }
+    if save_hlo:
+        with open(os.path.join(out_dir, f"{arch}__{shape_name}__{mesh_name}.hlo"), "w") as f:
+            f.write(compiled.as_text())
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCHS + ["sce-ntt"], default=None)
+    ap.add_argument("--shape", choices=list(SHAPES) + ["ntt_batch", "fourstep_16k", "keyswitch_16k"],
+                    default=None)
+    ap.add_argument("--mesh", choices=["pod1", "pod2", "both"], default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=OUT_DIR)
+    ap.add_argument("--save-hlo", action="store_true")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    meshes = ["pod1", "pod2"] if args.mesh == "both" else [args.mesh]
+
+    cells: list[tuple[str, str]] = []
+    if args.all:
+        for a in ARCHS:
+            for s in SHAPES:
+                cells.append((a, s))
+        cells += [("sce-ntt", s) for s in ("ntt_batch", "fourstep_16k", "keyswitch_16k")]
+    else:
+        assert args.arch and args.shape
+        cells = [(args.arch, args.shape)]
+
+    failures = 0
+    for arch, shape in cells:
+        for mesh in meshes:
+            path = os.path.join(args.out, f"{arch}__{shape}__{mesh}.json")
+            if os.path.exists(path):
+                print(f"[skip-existing] {arch} {shape} {mesh}", flush=True)
+                continue
+            print(f"[cell] {arch} {shape} {mesh} ...", flush=True)
+            try:
+                if arch == "sce-ntt":
+                    from repro.launch import dryrun_fhe
+                    rec = dryrun_fhe.run_cell(shape, mesh)
+                else:
+                    rec = run_cell(arch, shape, mesh, args.out, args.save_hlo)
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                dom = rec.get("roofline", {}).get("dominant", "-")
+                print(f"[ok] {arch} {shape} {mesh} "
+                      f"compile={rec.get('compile_s', '-')}s dominant={dom}", flush=True)
+            except Exception:
+                failures += 1
+                print(f"[FAIL] {arch} {shape} {mesh}\n{traceback.format_exc()}",
+                      flush=True)
+    if failures:
+        raise SystemExit(f"{failures} cells failed")
+    print("[dryrun] all requested cells passed")
+
+
+if __name__ == "__main__":
+    main()

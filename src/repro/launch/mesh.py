@@ -1,0 +1,29 @@
+"""Production mesh construction (a FUNCTION so importing this module
+never touches jax device state — dryrun.py sets XLA_FLAGS first)."""
+from __future__ import annotations
+
+import jax
+
+from repro.models.common import MeshCtx
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    import numpy as np
+    ndev = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) > ndev:           # 512 host devices, single-pod mesh
+        devices = devices[:ndev]
+    elif len(devices) < ndev:
+        raise RuntimeError(
+            f"mesh {shape} needs {ndev} devices, have {len(devices)} — "
+            "set XLA_FLAGS=--xla_force_host_platform_device_count=512 "
+            "before importing jax (dryrun.py does this)")
+    return jax.make_mesh(shape, axes, devices=list(devices))
+
+
+def make_mesh_ctx(*, multi_pod: bool = False) -> MeshCtx:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    dp = ("pod", "data") if multi_pod else ("data",)
+    return MeshCtx(mesh=mesh, dp=dp, fsdp="data", tp="model", sp="model")

@@ -1,0 +1,127 @@
+"""Model/config substrate shared by all assigned architectures."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class MoECfg:
+    n_experts: int
+    top_k: int
+    d_expert: int
+    aux_coef: float = 0.01
+    # "ragged": dropless sort + ragged_dot (grouped GEMM on TPU; the
+    #   portable XLA fallback lowers DENSE — all experts x all tokens).
+    # "capacity": GShard-style fixed-capacity grouped einsum — bounded
+    #   flops E*C*3*D*F with C = T*top_k*capacity_factor/E, tokens over
+    #   capacity dropped (§Perf iteration 2).
+    impl: str = "capacity"
+    capacity_factor: float = 1.25
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMCfg:
+    d_state: int = 128
+    headdim: int = 64
+    expand: int = 2
+    d_conv: int = 4
+    chunk: int = 256
+
+
+@dataclasses.dataclass(frozen=True)
+class HybridCfg:
+    pattern: tuple[str, ...] = ("rec", "rec", "attn")   # griffin 1 attn : 2 rec
+    n_groups: int = 12
+    tail: tuple[str, ...] = ("rec", "rec")              # 12*3 + 2 = 38 layers
+    window: int = 2048
+    lru_width: int | None = None
+    conv_k: int = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+    act: str = "silu"                # silu | sq_relu | gelu
+    qk_norm: bool = False
+    rope_theta: float = 1e4
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    embeds_input: bool = False       # audio/vlm stub frontend supplies embeddings
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    moe: MoECfg | None = None
+    ssm: SSMCfg | None = None
+    hybrid: HybridCfg | None = None
+    attn_chunk: int = 512            # flash q-chunk (scores live memory)
+    sub_quadratic: bool = False      # eligible for long_500k
+
+    @property
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def cdtype(self):
+        return jnp.dtype(self.compute_dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCfg:
+    name: str
+    kind: str        # train | prefill | decode
+    seq: int
+    batch: int
+
+
+SHAPES = {
+    "train_4k":    ShapeCfg("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeCfg("prefill_32k", "prefill", 32768, 32),
+    "decode_32k":  ShapeCfg("decode_32k", "decode", 32768, 128),
+    "long_500k":   ShapeCfg("long_500k", "decode", 524288, 1),
+}
+
+# reduced shapes for CPU smoke tests
+SMOKE_SHAPES = {
+    "train": ShapeCfg("smoke_train", "train", 64, 2),
+    "decode": ShapeCfg("smoke_decode", "decode", 64, 2),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshCtx:
+    """Mesh + logical axis roles.  mesh=None => single-device (tests)."""
+    mesh: Mesh | None = None
+    dp: tuple[str, ...] = ("data",)      # batch/token axes (+ 'pod' multi-pod)
+    fsdp: str | None = "data"            # weight-shard axis (ZeRO-3 style)
+    tp: str | None = "model"             # tensor-parallel axis
+    sp: str | None = "model"             # sequence axis for long KV caches
+
+    def named(self, *spec) -> NamedSharding | None:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, P(*spec))
+
+    def constrain(self, x, *spec):
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(x, NamedSharding(self.mesh, P(*spec)))
+
+
+def truncated_normal_init(key, shape, dtype, scale: float):
+    return (scale * jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)).astype(dtype)
+
+
+def pytree_size_bytes(tree) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))

@@ -1,0 +1,189 @@
+"""Core transformer layers: RMSNorm, RoPE, GQA flash attention (online
+softmax over KV chunks, pure JAX), MLPs.  All layers take params as
+plain dict pytrees and are scan/remat friendly."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import ModelConfig, MeshCtx, truncated_normal_init
+
+
+# ------------------------------------------------------------- norms
+
+def rms_norm(x, w, eps: float):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def init_rms_norm(d: int, dtype):
+    return {"w": jnp.ones((d,), dtype)}
+
+
+# -------------------------------------------------------------- rope
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, hd); positions: (..., S)."""
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(hd, theta), jnp.float32)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs      # (..., S, hd/2)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------- flash attention
+
+def _attn_block(qg, k, v, qpos, *, kv_len, window, causal, Skv_valid):
+    """One q-block of attention against full K/V.
+
+    qg: (B, cq, KV, G, hd) f32 pre-scaled; k/v: (B, Skv, KV, hd).
+    Mask stays 2-D (cq, Skv) until the fused where — never materialized
+    at batch/head rank (the 44 GiB lesson; see EXPERIMENTS.md §Perf)."""
+    Skv = k.shape[1]
+    kpos = jnp.arange(Skv)
+    s = jnp.einsum("bqgnd,bkgd->bqgnk", qg, k.astype(jnp.float32))
+    mask = (kpos < Skv_valid)[None, :]
+    if causal:
+        mask = mask & (qpos[:, None] >= kpos[None, :])
+    if window is not None:
+        mask = mask & ((qpos[:, None] - kpos[None, :]) < window)
+    if kv_len is not None:
+        mask = mask & (kpos[None, :] < kv_len)
+    s = jnp.where(mask[None, :, None, None, :], s, -1e30)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    p = jnp.where(mask[None, :, None, None, :], p, 0.0)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bqgnk,bkgd->bqgnd", p, v.astype(jnp.float32))
+    return out / jnp.maximum(l, 1e-20)
+
+
+def flash_attention(q, k, v, *, q_offset, kv_len=None, chunk: int = 512,
+                    window: int | None = None, causal: bool = True):
+    """Chunked attention: lax.scan over q-chunks, each block checkpointed
+    (scores rematerialized in backward — O(B*cq*H*Skv) live memory).
+
+    q: (B, Sq, H, hd); k, v: (B, Skv, KV, hd) with H % KV == 0.
+    q_offset: absolute position of q[0] (prefill: 0; decode: cache len).
+    kv_len: dynamic valid kv length (decode) — positions >= kv_len masked.
+    window: sliding-window size (local attention) or None.
+    """
+    B, Sq, H, hd = q.shape
+    Skv, KV = k.shape[1], k.shape[2]
+    group = H // KV
+    scale = hd ** -0.5
+    qg = q.reshape(B, Sq, KV, group, hd).astype(jnp.float32) * scale
+
+    if Sq <= chunk:                       # decode / short prefill: no scan
+        qpos = q_offset + jnp.arange(Sq)
+        out = _attn_block(qg, k, v, qpos, kv_len=kv_len, window=window,
+                          causal=causal, Skv_valid=Skv)
+        return out.reshape(B, Sq, H, hd).astype(q.dtype)
+
+    nq = (Sq + chunk - 1) // chunk
+    pad = nq * chunk - Sq
+    if pad:
+        qg = jnp.pad(qg, ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0)))
+    qc = jnp.moveaxis(qg.reshape(B, nq, chunk, KV, group, hd), 1, 0)
+
+    @jax.checkpoint
+    def step(_, inp):
+        qi, i = inp
+        qpos = q_offset + i * chunk + jnp.arange(chunk)
+        out = _attn_block(qi, k, v, qpos, kv_len=kv_len, window=window,
+                          causal=causal, Skv_valid=Skv)
+        return None, out
+
+    _, outs = jax.lax.scan(step, None, (qc, jnp.arange(nq)))
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, nq * chunk, KV, group, hd)
+    return out[:, :Sq].reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+# ----------------------------------------------------- attention layer
+
+def init_attention(key, cfg: ModelConfig, dtype):
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    s = 0.02
+    p = {
+        "wq": truncated_normal_init(ks[0], (d, H, hd), dtype, s),
+        "wk": truncated_normal_init(ks[1], (d, KV, hd), dtype, s),
+        "wv": truncated_normal_init(ks[2], (d, KV, hd), dtype, s),
+        "wo": truncated_normal_init(ks[3], (H, hd, d), dtype, s / np.sqrt(2 * cfg.n_layers)),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = init_rms_norm(hd, dtype)
+        p["k_norm"] = init_rms_norm(hd, dtype)
+    return p
+
+
+def attention(p, x, cfg: ModelConfig, mctx: MeshCtx, *, positions,
+              window: int | None = None, cache=None, cache_len=None):
+    """x: (B, S, D).  cache: optional dict(k, v) of (B, Smax, KV, hd) —
+    when given, runs as a decode/prefill step writing at cache_len.
+    Returns (out, new_cache)."""
+    cd = cfg.cdtype
+    xq = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(cd))
+    xk = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(cd))
+    xv = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(cd))
+    if cfg.qk_norm:
+        xq = rms_norm(xq, p["q_norm"]["w"], cfg.norm_eps)
+        xk = rms_norm(xk, p["k_norm"]["w"], cfg.norm_eps)
+    xq = apply_rope(xq, positions, cfg.rope_theta)
+    xk = apply_rope(xk, positions, cfg.rope_theta)
+    xq = mctx.constrain(xq, mctx.dp, None, mctx.tp, None)
+
+    new_cache = None
+    if cache is not None:
+        # write new k/v at cache_len, attend over the whole cache
+        k_all = jax.lax.dynamic_update_slice_in_dim(cache["k"], xk.astype(cache["k"].dtype), cache_len, 1)
+        v_all = jax.lax.dynamic_update_slice_in_dim(cache["v"], xv.astype(cache["v"].dtype), cache_len, 1)
+        new_cache = {"k": k_all, "v": v_all}
+        out = flash_attention(xq, k_all.astype(cd), v_all.astype(cd),
+                              q_offset=cache_len, kv_len=cache_len + x.shape[1],
+                              chunk=cfg.attn_chunk, window=window)
+    else:
+        out = flash_attention(xq, xk, xv, q_offset=0, chunk=cfg.attn_chunk,
+                              window=window)
+    res = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(cd))
+    return mctx.constrain(res, mctx.dp, None, None), new_cache
+
+
+# ------------------------------------------------------------- MLPs
+
+def init_mlp(key, cfg: ModelConfig, dtype, d_ff: int | None = None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    s = 0.02
+    p = {"w_up": truncated_normal_init(ks[0], (d, f), dtype, s),
+         "w_down": truncated_normal_init(ks[1], (f, d), dtype, s / np.sqrt(2 * cfg.n_layers))}
+    if cfg.act == "silu":
+        p["w_gate"] = truncated_normal_init(ks[2], (d, f), dtype, s)
+    return p
+
+
+def mlp(p, x, cfg: ModelConfig, mctx: MeshCtx):
+    cd = cfg.cdtype
+    h = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(cd))
+    h = mctx.constrain(h, mctx.dp, None, mctx.tp)
+    if cfg.act == "silu":
+        g = jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(cd))
+        h = jax.nn.silu(g) * h
+    elif cfg.act == "sq_relu":                    # nemotron-4 squared ReLU
+        h = jnp.square(jax.nn.relu(h))
+    elif cfg.act == "gelu":
+        h = jax.nn.gelu(h)
+    else:
+        raise ValueError(cfg.act)
+    out = jnp.einsum("bsf,fd->bsd", h, p["w_down"].astype(cd))
+    return mctx.constrain(out, mctx.dp, None, None)

@@ -1,0 +1,492 @@
+"""Model assembly: scan-over-layers forward/prefill/decode for every
+architecture family (dense / moe / ssm / hybrid), with parameter and
+KV-cache PartitionSpec derivation.
+
+Design notes (DESIGN.md §3/§4): all layer stacks are ``lax.scan`` over
+stacked block params (O(1) HLO in depth — essential for 512-device AOT
+compiles); remat policy wraps the scanned block; sharding is expressed
+as logical rules here and materialized as NamedShardings by the runtime.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import ModelConfig, MeshCtx, truncated_normal_init
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models import ssm as SSM
+from repro.models import rglru as RG
+
+
+def padded_vocab(cfg: ModelConfig) -> int:
+    return -(-cfg.vocab // 4096) * 4096
+
+
+# =====================================================================
+# block definitions (one per family)
+# =====================================================================
+
+def _init_dense_block(key, cfg, dtype):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {"ln1": L.init_rms_norm(cfg.d_model, dtype),
+            "attn": L.init_attention(k1, cfg, dtype),
+            "ln2": L.init_rms_norm(cfg.d_model, dtype),
+            "mlp": L.init_mlp(k2, cfg, dtype)}
+
+
+def _dense_block(p, x, cfg, mctx, positions, cache=None, cache_len=None,
+                 window=None):
+    h, new_cache = L.attention(p["attn"], L.rms_norm(x, p["ln1"]["w"], cfg.norm_eps),
+                               cfg, mctx, positions=positions, cache=cache,
+                               cache_len=cache_len, window=window)
+    x = x + h
+    x = x + L.mlp(p["mlp"], L.rms_norm(x, p["ln2"]["w"], cfg.norm_eps), cfg, mctx)
+    return x, new_cache
+
+
+def _init_moe_block(key, cfg, dtype):
+    k1, k2 = jax.random.split(key)
+    return {"ln1": L.init_rms_norm(cfg.d_model, dtype),
+            "attn": L.init_attention(k1, cfg, dtype),
+            "ln2": L.init_rms_norm(cfg.d_model, dtype),
+            "moe": MOE.init_moe(k2, cfg, dtype)}
+
+
+def _moe_block(p, x, cfg, mctx, positions, cache=None, cache_len=None):
+    h, new_cache = L.attention(p["attn"], L.rms_norm(x, p["ln1"]["w"], cfg.norm_eps),
+                               cfg, mctx, positions=positions, cache=cache,
+                               cache_len=cache_len)
+    x = x + h
+    h, aux = MOE.moe_ffn(p["moe"], L.rms_norm(x, p["ln2"]["w"], cfg.norm_eps), cfg, mctx)
+    return x + h, aux, new_cache
+
+
+def _init_ssm_block(key, cfg, dtype):
+    return {"ln": L.init_rms_norm(cfg.d_model, dtype),
+            "ssm": SSM.init_ssm(key, cfg, dtype)}
+
+
+def _ssm_block(p, x, cfg, mctx, state=None, conv_buf=None):
+    h, new_state, new_buf = SSM.ssm_block(
+        p["ssm"], L.rms_norm(x, p["ln"]["w"], cfg.norm_eps), cfg, mctx,
+        state=state, conv_buf=conv_buf)
+    return x + h, new_state, new_buf
+
+
+def _init_hybrid_sublayer(key, cfg, dtype, kind: str):
+    k1, k2 = jax.random.split(key)
+    p = {"ln1": L.init_rms_norm(cfg.d_model, dtype),
+         "ln2": L.init_rms_norm(cfg.d_model, dtype),
+         "mlp": L.init_mlp(k2, cfg, dtype)}
+    if kind == "rec":
+        p["rec"] = RG.init_rglru(k1, cfg, dtype)
+    else:
+        p["attn"] = L.init_attention(k1, cfg, dtype)
+    return p
+
+
+# =====================================================================
+# the model object
+# =====================================================================
+
+@dataclasses.dataclass
+class Model:
+    cfg: ModelConfig
+    mctx: MeshCtx
+    remat_policy: str = "none"      # none | full | dots
+
+    # ---------------------------------------------------------- remat
+    def _maybe_remat(self, fn):
+        if self.remat_policy == "none":
+            return fn
+        if self.remat_policy == "full":
+            return jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
+        if self.remat_policy == "dots":
+            return jax.checkpoint(fn, policy=jax.checkpoint_policies.checkpoint_dots)
+        raise ValueError(self.remat_policy)
+
+    # ----------------------------------------------------------- init
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        dtype = cfg.pdtype
+        keys = jax.random.split(key, 8)
+        params: dict[str, Any] = {}
+        if not cfg.embeds_input:
+            params["embed"] = truncated_normal_init(
+                keys[0], (padded_vocab(cfg), cfg.d_model), dtype, 0.02)
+        if not cfg.tie_embeddings:
+            params["lm_head"] = truncated_normal_init(
+                keys[1], (cfg.d_model, padded_vocab(cfg)), dtype, 0.02)
+        params["ln_f"] = L.init_rms_norm(cfg.d_model, dtype)
+
+        if cfg.family == "dense":
+            bkeys = jax.random.split(keys[2], cfg.n_layers)
+            params["blocks"] = jax.vmap(
+                lambda k: _init_dense_block(k, cfg, dtype))(bkeys)
+        elif cfg.family == "moe":
+            bkeys = jax.random.split(keys[2], cfg.n_layers)
+            params["blocks"] = jax.vmap(
+                lambda k: _init_moe_block(k, cfg, dtype))(bkeys)
+        elif cfg.family == "ssm":
+            bkeys = jax.random.split(keys[2], cfg.n_layers)
+            params["blocks"] = jax.vmap(
+                lambda k: _init_ssm_block(k, cfg, dtype))(bkeys)
+        elif cfg.family == "hybrid":
+            hy = cfg.hybrid
+            gkeys = jax.random.split(keys[2], hy.n_groups)
+
+            def ginit(k):
+                sk = jax.random.split(k, len(hy.pattern))
+                return {f"sub{i}_{kind}": _init_hybrid_sublayer(sk[i], cfg, dtype, kind)
+                        for i, kind in enumerate(hy.pattern)}
+            params["groups"] = jax.vmap(ginit)(gkeys)
+            tkeys = jax.random.split(keys[3], len(hy.tail))
+            params["tail"] = jax.vmap(
+                lambda k: _init_hybrid_sublayer(k, cfg, dtype, "rec"))(tkeys)
+        else:
+            raise ValueError(cfg.family)
+        return params
+
+    # ------------------------------------------------------ embeddings
+    def _embed_in(self, params, batch):
+        cfg = self.cfg
+        if cfg.embeds_input:
+            x = batch["embeds"].astype(cfg.cdtype)
+        else:
+            x = jnp.take(params["embed"], batch["tokens"], axis=0).astype(cfg.cdtype)
+        return self.mctx.constrain(x, self.mctx.dp, None, None)
+
+    def _logits(self, params, x):
+        cfg = self.cfg
+        x = L.rms_norm(x, params["ln_f"]["w"], cfg.norm_eps)
+        head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+        logits = jnp.einsum("bsd,dv->bsv", x, head.astype(cfg.cdtype)).astype(jnp.float32)
+        return self.mctx.constrain(logits, self.mctx.dp, None, self.mctx.tp)
+
+    # --------------------------------------------------- train forward
+    def forward(self, params, batch):
+        """-> (logits (B,S,Vpad) f32, aux dict)."""
+        cfg, mctx = self.cfg, self.mctx
+        x = self._embed_in(params, batch)
+        B, S, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+        aux_total = jnp.zeros((), jnp.float32)
+
+        if cfg.family == "dense":
+            def body(carry, bp):
+                y, _ = _dense_block(bp, carry, cfg, mctx, positions)
+                return y, None
+            x, _ = jax.lax.scan(self._maybe_remat(body), x, params["blocks"])
+        elif cfg.family == "moe":
+            def body(carry, bp):
+                x, aux = carry
+                y, a, _ = _moe_block(bp, x, cfg, mctx, positions)
+                return (y, aux + a), None
+            (x, aux_total), _ = jax.lax.scan(
+                self._maybe_remat(body), (x, aux_total), params["blocks"])
+        elif cfg.family == "ssm":
+            def body(carry, bp):
+                y, _, _ = _ssm_block(bp, carry, cfg, mctx)
+                return y, None
+            x, _ = jax.lax.scan(self._maybe_remat(body), x, params["blocks"])
+        elif cfg.family == "hybrid":
+            hy = cfg.hybrid
+
+            def gbody(carry, gp):
+                y = carry
+                for i, kind in enumerate(hy.pattern):
+                    sp = gp[f"sub{i}_{kind}"]
+                    y = self._hybrid_sublayer(sp, y, kind, positions)
+                return y, None
+            x, _ = jax.lax.scan(self._maybe_remat(gbody), x, params["groups"])
+
+            def tbody(carry, sp):
+                return self._hybrid_sublayer(sp, carry, "rec", positions), None
+            x, _ = jax.lax.scan(self._maybe_remat(tbody), x, params["tail"])
+        return self._logits(params, x), {"moe_aux": aux_total}
+
+    def _hybrid_sublayer(self, sp, x, kind, positions, cache=None, cache_len=None):
+        cfg, mctx = self.cfg, self.mctx
+        if kind == "rec":
+            h, new_state, new_buf = RG.rglru_block(
+                sp["rec"], L.rms_norm(x, sp["ln1"]["w"], cfg.norm_eps), cfg, mctx,
+                state=None if cache is None else cache[0],
+                conv_buf=None if cache is None else cache[1])
+            x = x + h
+            new_cache = (new_state, new_buf)
+        else:
+            h, new_cache = L.attention(
+                sp["attn"], L.rms_norm(x, sp["ln1"]["w"], cfg.norm_eps), cfg, mctx,
+                positions=positions, cache=cache, cache_len=cache_len,
+                window=cfg.hybrid.window)
+            x = x + h
+        x = x + L.mlp(sp["mlp"], L.rms_norm(x, sp["ln2"]["w"], cfg.norm_eps), cfg, mctx)
+        if cache is None:
+            return x
+        return x, new_cache
+
+    # --------------------------------------------------------- loss
+    def loss_fn(self, params, batch):
+        logits, aux = self.forward(params, batch)
+        labels = batch["labels"]
+        V = padded_vocab(self.cfg)
+        if V != self.cfg.vocab:   # mask padded vocab rows out of softmax
+            pad_mask = jnp.arange(V) >= self.cfg.vocab
+            logits = jnp.where(pad_mask[None, None, :], -1e30, logits)
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+        mask = (labels >= 0).astype(jnp.float32)
+        nll = (lse - gold) * mask
+        loss = jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)
+        if self.cfg.moe is not None:
+            loss = loss + self.cfg.moe.aux_coef * aux["moe_aux"] / self.cfg.n_layers
+        return loss, {"nll": loss, **aux}
+
+    # ------------------------------------------------------- serving
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16) -> dict:
+        cfg = self.cfg
+        KV, hd = cfg.n_kv_heads, cfg.head_dim
+        cache: dict[str, Any] = {"len": jnp.zeros((), jnp.int32)}
+        if cfg.family in ("dense", "moe"):
+            cache["k"] = jnp.zeros((cfg.n_layers, batch, max_len, KV, hd), dtype)
+            cache["v"] = jnp.zeros((cfg.n_layers, batch, max_len, KV, hd), dtype)
+        elif cfg.family == "ssm":
+            d_inner, nheads = SSM._dims(cfg)
+            s = cfg.ssm
+            conv_ch = d_inner + 2 * s.d_state
+            cache["state"] = jnp.zeros(
+                (cfg.n_layers, batch, nheads, s.headdim, s.d_state), jnp.float32)
+            cache["conv"] = jnp.zeros(
+                (cfg.n_layers, batch, s.d_conv - 1, conv_ch), dtype)
+        elif cfg.family == "hybrid":
+            hy = cfg.hybrid
+            w = hy.lru_width or cfg.d_model
+            wl = min(max_len, hy.window)
+            n_rec_g = sum(1 for k in hy.pattern if k == "rec")
+            n_att_g = len(hy.pattern) - n_rec_g
+            cache["g_state"] = jnp.zeros((hy.n_groups, n_rec_g, batch, w), jnp.float32)
+            cache["g_conv"] = jnp.zeros((hy.n_groups, n_rec_g, batch, hy.conv_k - 1, w), dtype)
+            cache["g_k"] = jnp.zeros((hy.n_groups, n_att_g, batch, wl, KV, hd), dtype)
+            cache["g_v"] = jnp.zeros((hy.n_groups, n_att_g, batch, wl, KV, hd), dtype)
+            cache["t_state"] = jnp.zeros((len(hy.tail), batch, w), jnp.float32)
+            cache["t_conv"] = jnp.zeros((len(hy.tail), batch, hy.conv_k - 1, w), dtype)
+        return cache
+
+    def prefill(self, params, batch) -> tuple[jnp.ndarray, dict]:
+        """Process a full prompt; returns (last-position logits (B, Vpad),
+        primed cache)."""
+        cfg, mctx = self.cfg, self.mctx
+        x = self._embed_in(params, batch)
+        B, S, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+        cache = self.init_cache(B, batch.get("max_len", S), dtype=cfg.cdtype)
+        cache["len"] = jnp.asarray(S, jnp.int32)
+
+        if cfg.family in ("dense", "moe"):
+            block = _dense_block if cfg.family == "dense" else None
+
+            def body(carry, inp):
+                x = carry
+                bp, kc, vc = inp
+                if cfg.family == "dense":
+                    y, nc = _dense_block(bp, x, cfg, mctx, positions,
+                                         cache={"k": kc, "v": vc}, cache_len=0)
+                else:
+                    y, _, nc = _moe_block(bp, x, cfg, mctx, positions,
+                                          cache={"k": kc, "v": vc}, cache_len=0)
+                return y, (nc["k"], nc["v"])
+            x, (ks, vs) = jax.lax.scan(body, x, (params["blocks"], cache["k"], cache["v"]))
+            cache["k"], cache["v"] = ks, vs
+        elif cfg.family == "ssm":
+            def body(carry, bp):
+                y, st, _ = _ssm_block(bp, carry, cfg, mctx)
+                # prime conv buffer from the block input (pre-conv stream)
+                xin = L.rms_norm(carry, bp["ln"]["w"], cfg.norm_eps)
+                proj = jnp.einsum("bsd,de->bse", xin, bp["ssm"]["in_proj"].astype(cfg.cdtype))
+                d_inner, _ = SSM._dims(cfg)
+                conv_in = proj[..., d_inner:2 * d_inner + 2 * cfg.ssm.d_state]
+                # conv stream layout: [x, B, C] — matches ssm_block
+                zpart = proj[..., :d_inner]
+                del zpart
+                buf = conv_in[:, -(cfg.ssm.d_conv - 1):, :]
+                return y, (st, buf)
+            x, (sts, bufs) = jax.lax.scan(body, x, params["blocks"])
+            cache["state"], cache["conv"] = sts, bufs.astype(cfg.cdtype)
+        elif cfg.family == "hybrid":
+            x, cache = self._hybrid_prefill(params, x, positions, cache)
+        logits = self._logits(params, x[:, -1:, :])[:, 0]
+        return logits, cache
+
+    def _hybrid_prefill(self, params, x, positions, cache):
+        cfg, mctx = self.cfg, self.mctx
+        hy = cfg.hybrid
+        wl = cache["g_k"].shape[3]
+        S = x.shape[1]
+
+        def fill_window(roped_kv):
+            # place last `wl` positions at slots (pos mod wl)
+            if S >= wl:
+                lastk = roped_kv[:, -wl:]
+                shift = (S - wl) % wl
+                return jnp.roll(lastk, shift, axis=1)
+            pad = jnp.zeros((roped_kv.shape[0], wl - S) + roped_kv.shape[2:],
+                            roped_kv.dtype)
+            return jnp.concatenate([roped_kv, pad], axis=1)
+
+        def gbody(carry, gp):
+            y = carry
+            rs, rc, kks, vvs = [], [], [], []
+            for i, kind in enumerate(hy.pattern):
+                sp = gp[f"sub{i}_{kind}"]
+                if kind == "rec":
+                    xin = L.rms_norm(y, sp["ln1"]["w"], cfg.norm_eps)
+                    h, st, _ = RG.rglru_block(sp["rec"], xin, cfg, mctx)
+                    rs.append(st)
+                    rc.append(RG.rglru_prime_conv_buf(sp["rec"], xin, cfg).astype(cfg.cdtype))
+                    y = y + h
+                    y = y + L.mlp(sp["mlp"], L.rms_norm(y, sp["ln2"]["w"], cfg.norm_eps), cfg, mctx)
+                else:
+                    xin = L.rms_norm(y, sp["ln1"]["w"], cfg.norm_eps)
+                    cd = cfg.cdtype
+                    xq = jnp.einsum("bsd,dhk->bshk", xin, sp["attn"]["wq"].astype(cd))
+                    xk = jnp.einsum("bsd,dhk->bshk", xin, sp["attn"]["wk"].astype(cd))
+                    xv = jnp.einsum("bsd,dhk->bshk", xin, sp["attn"]["wv"].astype(cd))
+                    xq = L.apply_rope(xq, positions, cfg.rope_theta)
+                    xkr = L.apply_rope(xk, positions, cfg.rope_theta)
+                    att = L.flash_attention(xq, xkr, xv, q_offset=0,
+                                            chunk=cfg.attn_chunk, window=hy.window)
+                    h = jnp.einsum("bshk,hkd->bsd", att, sp["attn"]["wo"].astype(cd))
+                    kks.append(fill_window(xkr).astype(cfg.cdtype))
+                    vvs.append(fill_window(xv).astype(cfg.cdtype))
+                    y = y + h
+                    y = y + L.mlp(sp["mlp"], L.rms_norm(y, sp["ln2"]["w"], cfg.norm_eps), cfg, mctx)
+            return y, (jnp.stack(rs), jnp.stack(rc), jnp.stack(kks), jnp.stack(vvs))
+
+        x, (rs, rc, kks, vvs) = jax.lax.scan(gbody, x, params["groups"])
+        cache["g_state"], cache["g_conv"] = rs, rc
+        cache["g_k"], cache["g_v"] = kks, vvs
+
+        def tbody(carry, sp):
+            y = carry
+            xin = L.rms_norm(y, sp["ln1"]["w"], cfg.norm_eps)
+            h, st, _ = RG.rglru_block(sp["rec"], xin, cfg, mctx)
+            buf = RG.rglru_prime_conv_buf(sp["rec"], xin, cfg).astype(cfg.cdtype)
+            y = y + h
+            y = y + L.mlp(sp["mlp"], L.rms_norm(y, sp["ln2"]["w"], cfg.norm_eps), cfg, mctx)
+            return y, (st, buf)
+        x, (ts, tc) = jax.lax.scan(tbody, x, params["tail"])
+        cache["t_state"], cache["t_conv"] = ts, tc
+        return x, cache
+
+    def decode_step(self, params, cache, batch) -> tuple[jnp.ndarray, dict]:
+        """One token for every sequence.  batch: tokens (B,1) or embeds
+        (B,1,D).  Returns (logits (B, Vpad), new cache)."""
+        cfg, mctx = self.cfg, self.mctx
+        x = self._embed_in(params, batch)
+        B = x.shape[0]
+        clen = cache["len"]
+        positions = jnp.full((B, 1), clen, jnp.int32)
+        new_cache = dict(cache)
+
+        if cfg.family in ("dense", "moe"):
+            def body(carry, inp):
+                x = carry
+                bp, kc, vc = inp
+                if cfg.family == "dense":
+                    y, nc = _dense_block(bp, x, cfg, mctx, positions,
+                                         cache={"k": kc, "v": vc}, cache_len=clen)
+                else:
+                    y, _, nc = _moe_block(bp, x, cfg, mctx, positions,
+                                          cache={"k": kc, "v": vc}, cache_len=clen)
+                return y, (nc["k"], nc["v"])
+            x, (ks, vs) = jax.lax.scan(body, x, (params["blocks"], cache["k"], cache["v"]))
+            new_cache["k"], new_cache["v"] = ks, vs
+        elif cfg.family == "ssm":
+            def body(carry, inp):
+                bp, st, buf = inp
+                y, nst, nbuf = _ssm_block(bp, carry, cfg, mctx, state=st, conv_buf=buf)
+                return y, (nst, nbuf)
+            x, (sts, bufs) = jax.lax.scan(body, x, (params["blocks"], cache["state"], cache["conv"]))
+            new_cache["state"], new_cache["conv"] = sts, bufs
+        elif cfg.family == "hybrid":
+            x, new_cache = self._hybrid_decode(params, x, positions, cache)
+
+        logits = self._logits(params, x)[:, 0]
+        new_cache["len"] = clen + 1
+        return logits, new_cache
+
+    def _hybrid_decode(self, params, x, positions, cache):
+        cfg, mctx = self.cfg, self.mctx
+        hy = cfg.hybrid
+        wl = cache["g_k"].shape[3]
+        clen = cache["len"]
+        slot = clen % wl
+        new_cache = dict(cache)
+
+        def gbody(carry, inp):
+            y = carry
+            gp, st, cb, kc, vc = inp
+            ri = ai = 0
+            nst, ncb, nkc, nvc = [], [], [], []
+            for i, kind in enumerate(hy.pattern):
+                sp = gp[f"sub{i}_{kind}"]
+                if kind == "rec":
+                    h, s2, b2 = RG.rglru_block(
+                        sp["rec"], L.rms_norm(y, sp["ln1"]["w"], cfg.norm_eps),
+                        cfg, mctx, state=st[ri], conv_buf=cb[ri])
+                    nst.append(s2)
+                    ncb.append(b2)
+                    y = y + h
+                    ri += 1
+                else:
+                    cd = cfg.cdtype
+                    xin = L.rms_norm(y, sp["ln1"]["w"], cfg.norm_eps)
+                    xq = jnp.einsum("bsd,dhk->bshk", xin, sp["attn"]["wq"].astype(cd))
+                    xk = jnp.einsum("bsd,dhk->bshk", xin, sp["attn"]["wk"].astype(cd))
+                    xv = jnp.einsum("bsd,dhk->bshk", xin, sp["attn"]["wv"].astype(cd))
+                    xq = L.apply_rope(xq, positions, cfg.rope_theta)
+                    xkr = L.apply_rope(xk, positions, cfg.rope_theta)
+                    k2 = jax.lax.dynamic_update_slice_in_dim(kc[ai], xkr.astype(kc.dtype), slot, 1)
+                    v2 = jax.lax.dynamic_update_slice_in_dim(vc[ai], xv.astype(vc.dtype), slot, 1)
+                    valid = jnp.minimum(clen + 1, wl)
+                    att = L.flash_attention(xq, k2.astype(cd), v2.astype(cd),
+                                            q_offset=0, kv_len=valid,
+                                            chunk=cfg.attn_chunk, causal=False)
+                    h = jnp.einsum("bshk,hkd->bsd", att, sp["attn"]["wo"].astype(cd))
+                    nkc.append(k2)
+                    nvc.append(v2)
+                    y = y + h
+                    ai += 1
+                y = y + L.mlp(sp["mlp"], L.rms_norm(y, sp["ln2"]["w"], cfg.norm_eps), cfg, mctx)
+            return y, (jnp.stack(nst), jnp.stack(ncb), jnp.stack(nkc), jnp.stack(nvc))
+
+        x, (rs, rc, kks, vvs) = jax.lax.scan(
+            gbody, x, (params["groups"], cache["g_state"], cache["g_conv"],
+                       cache["g_k"], cache["g_v"]))
+        new_cache["g_state"], new_cache["g_conv"] = rs, rc
+        new_cache["g_k"], new_cache["g_v"] = kks, vvs
+
+        def tbody(carry, inp):
+            sp, st, cb = inp
+            y = carry
+            h, s2, b2 = RG.rglru_block(
+                sp["rec"], L.rms_norm(y, sp["ln1"]["w"], cfg.norm_eps),
+                cfg, mctx, state=st, conv_buf=cb)
+            y = y + h
+            y = y + L.mlp(sp["mlp"], L.rms_norm(y, sp["ln2"]["w"], cfg.norm_eps), cfg, mctx)
+            return y, (s2, b2)
+        x, (ts, tc) = jax.lax.scan(tbody, x, (params["tail"], cache["t_state"], cache["t_conv"]))
+        new_cache["t_state"], new_cache["t_conv"] = ts, tc
+        return x, new_cache
+
+
+def build_model(cfg: ModelConfig, mctx: MeshCtx | None = None,
+                remat_policy: str = "none") -> Model:
+    return Model(cfg, mctx or MeshCtx(), remat_policy)

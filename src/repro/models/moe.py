@@ -1,0 +1,162 @@
+"""Dropless Mixture-of-Experts via sort + ``jax.lax.ragged_dot``
+(megablocks-style grouped GEMM).
+
+Parallelism: expert weights are stored sharded over (fsdp=expert dim,
+tp=d_expert dim).  Inside a shard_map over the full mesh, each data
+shard all-gathers the expert dim (FSDP), routes its *local* tokens
+(dropless — no capacity, no token drop), runs two/three grouped GEMMs,
+and psums the tp-partial output.  No token all-to-all in the baseline
+(an EP all-to-all variant is a §Perf iteration; see EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import ModelConfig, MeshCtx, truncated_normal_init
+
+
+def init_moe(key, cfg: ModelConfig, dtype):
+    m = cfg.moe
+    d, e, f = cfg.d_model, m.n_experts, m.d_expert
+    ks = jax.random.split(key, 4)
+    s = 0.02
+    return {
+        "router": truncated_normal_init(ks[0], (d, e), jnp.float32, s),
+        "w_up": truncated_normal_init(ks[1], (e, d, f), dtype, s),
+        "w_gate": truncated_normal_init(ks[2], (e, d, f), dtype, s),
+        "w_down": truncated_normal_init(ks[3], (e, f, d), dtype, s / np.sqrt(2 * cfg.n_layers)),
+    }
+
+
+def _route(x2d, router, m):
+    T = x2d.shape[0]
+    logits = jnp.einsum("td,de->te", x2d.astype(jnp.float32), router)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topw, topi = jax.lax.top_k(probs, m.top_k)              # (T, k)
+    topw = topw / jnp.sum(topw, axis=-1, keepdims=True)     # renormalize
+    # load-balance aux (switch-style): E * sum(frac_tokens * frac_prob)
+    counts = jnp.sum(jax.nn.one_hot(topi, m.n_experts, dtype=jnp.float32), axis=(0, 1))
+    f_e = counts / (T * m.top_k)
+    p_e = jnp.mean(probs, axis=0)
+    aux = m.n_experts * jnp.sum(f_e * p_e)
+    flat_e = topi.reshape(-1)                               # (T*k,)
+    flat_t = jnp.repeat(jnp.arange(T), m.top_k)
+    flat_w = topw.reshape(-1)
+    order = jnp.argsort(flat_e)
+    return flat_e[order], flat_t[order], flat_w[order], aux
+
+
+def _moe_local(x2d, router, w_up, w_gate, w_down, cfg: ModelConfig):
+    """Dropless expert compute on one shard's tokens with full expert
+    weights (sort + ragged_dot). x2d: (T, D)."""
+    m = cfg.moe
+    cd = cfg.cdtype
+    se, st, sw, aux = _route(x2d, router, m)
+    xs = x2d[st]                                            # (T*k, D)
+    gs = jnp.bincount(se, length=m.n_experts).astype(jnp.int32)
+
+    up = jax.lax.ragged_dot(xs.astype(cd), w_up.astype(cd), gs)
+    gate = jax.lax.ragged_dot(xs.astype(cd), w_gate.astype(cd), gs)
+    h = jax.nn.silu(gate) * up
+    y = jax.lax.ragged_dot(h, w_down.astype(cd), gs)        # (T*k, D)
+    y = y * sw[:, None].astype(cd)
+    out = jnp.zeros_like(x2d).at[st].add(y)
+    return out, aux
+
+
+def _moe_local_capacity(x2d, router, w_up, w_gate, w_down, cfg: ModelConfig,
+                        e_start: int | jnp.ndarray = 0, e_local: int | None = None):
+    """Fixed-capacity grouped einsum (GShard): flops bounded at
+    E*C*3*D*F ~= capacity_factor x the routed ideal, vs the dense
+    E/top_k x blowup of the portable ragged_dot lowering.
+
+    Expert-parallel form: when (e_start, e_local) are given, this shard
+    dispatches only experts [e_start, e_start+e_local) — the (E, C, D)
+    dispatch buffer shrinks by the tp size (§Perf iteration 2b)."""
+    m = cfg.moe
+    cd = cfg.cdtype
+    T, D = x2d.shape
+    E = m.n_experts
+    El = e_local or E
+    C = max(8, int(-(-T * m.top_k * m.capacity_factor // E)))
+    se, st, sw, aux = _route(x2d, router, m)
+    # position of each routed slot within its (global) expert
+    gs = jnp.bincount(se, length=E)
+    offs = jnp.cumsum(gs) - gs
+    pos = jnp.arange(se.shape[0]) - offs[se]
+    sel = se - e_start                                      # local expert id
+    keep = (pos < C) & (sel >= 0) & (sel < El)
+    e_c = jnp.clip(sel, 0, El - 1)
+    pos_c = jnp.where(keep, pos, C)                         # C = drop slot
+    xe = jnp.zeros((El, C + 1, D), cd).at[e_c, pos_c].set(
+        x2d[st].astype(cd))[:, :C]                          # (El, C, D)
+    up = jnp.einsum("ecd,edf->ecf", xe, w_up.astype(cd))
+    gate = jnp.einsum("ecd,edf->ecf", xe, w_gate.astype(cd))
+    h = jax.nn.silu(gate) * up
+    y = jnp.einsum("ecf,efd->ecd", h, w_down.astype(cd))    # (El, C, D)
+    gathered = y[e_c, jnp.minimum(pos, C - 1)]              # (T*k, D)
+    gathered = gathered * (sw * keep)[:, None].astype(cd)
+    out = jnp.zeros_like(x2d).at[st].add(gathered)
+    return out, aux
+
+
+def moe_ffn(p, x, cfg: ModelConfig, mctx: MeshCtx):
+    """x: (B, S, D) -> (out, aux_loss)."""
+    B, S, D = x.shape
+    x2d = x.reshape(B * S, D)
+    local_fn = (_moe_local_capacity if cfg.moe.impl == "capacity"
+                else _moe_local)
+    if mctx.mesh is None:
+        out, aux = local_fn(x2d, p["router"], p["w_up"], p["w_gate"],
+                            p["w_down"], cfg)
+        return out.reshape(B, S, D), aux
+
+    fsdp, tp = mctx.fsdp, mctx.tp
+
+    if cfg.moe.impl == "capacity":
+        # EXPERT-PARALLEL: experts sharded over tp, FSDP on the D/F dims.
+        # Each tp shard dispatches only its E/tp experts; the combine is
+        # the tp psum (§Perf iteration 2b).
+        e_local = cfg.moe.n_experts // mctx.mesh.shape[tp]
+
+        def shard_fn(xl, router, w_up, w_gate, w_down):
+            w_up = jax.lax.all_gather(w_up, fsdp, axis=1, tiled=True)
+            w_gate = jax.lax.all_gather(w_gate, fsdp, axis=1, tiled=True)
+            w_down = jax.lax.all_gather(w_down, fsdp, axis=2, tiled=True)
+            e_start = jax.lax.axis_index(tp) * e_local
+            out, aux = _moe_local_capacity(xl, router, w_up, w_gate, w_down,
+                                           cfg, e_start, e_local)
+            out = jax.lax.psum(out, tp)          # combine expert shards
+            aux = jax.lax.pmean(aux, mctx.dp)
+            return out, aux
+
+        fn = jax.shard_map(
+            shard_fn, mesh=mctx.mesh,
+            in_specs=(P(mctx.dp, None), P(None, None),
+                      P(tp, fsdp, None), P(tp, fsdp, None), P(tp, None, fsdp)),
+            out_specs=(P(mctx.dp, None), P()),
+        )
+        out, aux = fn(x2d, p["router"], p["w_up"], p["w_gate"], p["w_down"])
+        return out.reshape(B, S, D), aux
+
+    def shard_fn(xl, router, w_up, w_gate, w_down):
+        # gather FSDP-sharded expert dim (weights arrive (E/fsdp, D, F/tp))
+        w_up = jax.lax.all_gather(w_up, fsdp, axis=0, tiled=True)
+        w_gate = jax.lax.all_gather(w_gate, fsdp, axis=0, tiled=True)
+        w_down = jax.lax.all_gather(w_down, fsdp, axis=0, tiled=True)
+        out, aux = local_fn(xl, router, w_up, w_gate, w_down, cfg)
+        out = jax.lax.psum(out, tp)              # tp-partial (F sharded)
+        aux = jax.lax.pmean(aux, mctx.dp)
+        return out, aux
+
+    fn = jax.shard_map(
+        shard_fn, mesh=mctx.mesh,
+        in_specs=(P(mctx.dp, None), P(None, None),
+                  P(fsdp, None, tp), P(fsdp, None, tp), P(fsdp, tp, None)),
+        out_specs=(P(mctx.dp, None), P()),
+    )
+    out, aux = fn(x2d, p["router"], p["w_up"], p["w_gate"], p["w_down"])
+    return out.reshape(B, S, D), aux

@@ -1,0 +1,147 @@
+"""RG-LRU recurrent block (RecurrentGemma/Griffin hybrid).
+
+Sequence mode uses an associative scan over the input-gated linear
+recurrence h_t = a_t * h_{t-1} + b_t; decode mode is the single-step
+update.  The hybrid block pattern (rec, rec, attn) lives in model.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import ModelConfig, MeshCtx, truncated_normal_init
+from repro.models.ssm import _causal_conv
+
+_C = 8.0  # paper's fixed scalar on the recurrence gate
+
+
+def init_rglru(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    w = cfg.hybrid.lru_width or d
+    ks = jax.random.split(key, 7)
+    s = 0.02
+    # Lambda init so a = sigmoid(lam)^(c*r) starts near 0.9..0.999
+    lam = jax.random.uniform(ks[0], (w,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(lam ** (1.0 / _C) / (1 - lam ** (1.0 / _C)))
+    return {
+        "in_x": truncated_normal_init(ks[1], (d, w), dtype, s),
+        "in_gate": truncated_normal_init(ks[2], (d, w), dtype, s),
+        "conv_w": truncated_normal_init(ks[3], (cfg.hybrid.conv_k, w), dtype, s),
+        "conv_b": jnp.zeros((w,), dtype),
+        "w_a": truncated_normal_init(ks[4], (w, w), dtype, s),
+        "w_i": truncated_normal_init(ks[5], (w, w), dtype, s),
+        "lam": lam,
+        "out_proj": truncated_normal_init(ks[6], (w, d), dtype,
+                                          s / np.sqrt(2 * cfg.n_layers)),
+    }
+
+
+def _gates(p, xb, cfg):
+    # bf16 accumulation: the partial-sum all-reduce of these W x W gate
+    # matmuls moves at bf16 instead of f32 (gates feed sigmoids — the
+    # precision headroom is ample). §Perf iteration 3.
+    r = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", xb, p["w_a"].astype(xb.dtype),
+                                  preferred_element_type=xb.dtype).astype(jnp.float32))
+    i = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", xb, p["w_i"].astype(xb.dtype),
+                                  preferred_element_type=xb.dtype).astype(jnp.float32))
+    log_a = -_C * r * jax.nn.softplus(p["lam"])          # (B,S,W) <= 0
+    a = jnp.exp(log_a)
+    gated_x = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (
+        i * xb.astype(jnp.float32))
+    return a, gated_x
+
+
+def _combine(c1, c2):
+    a1, b1 = c1
+    a2, b2 = c2
+    return a1 * a2, a2 * b1 + b2
+
+
+def _seq_scan(a, gx, cfg: ModelConfig, mctx: MeshCtx):
+    """h_t = a_t h_{t-1} + gx_t over the sequence axis.
+
+    Single device: one associative scan.  On a mesh: two-level scan under
+    shard_map — local scan per sequence shard, then an exclusive prefix
+    over the (B, W)-sized per-shard aggregates (cross-shard traffic is
+    n_shards x (B, W) instead of the log-tree's full-array gathers at
+    large strides — §Perf iteration 3d)."""
+    if mctx.mesh is None or mctx.tp is None or a.shape[1] % mctx.mesh.shape[mctx.tp] != 0:
+        _, h = jax.lax.associative_scan(_combine, (a, gx), axis=1)
+        return h
+
+    tp = mctx.tp
+    nsh = mctx.mesh.shape[tp]
+
+    def local(al, gl):
+        # al, gl: (B, S/nsh, W) this shard's slice
+        ha, hb = jax.lax.associative_scan(_combine, (al, gl), axis=1)
+        agg = (ha[:, -1], hb[:, -1])                       # (B, W) each
+        aggs_a = jax.lax.all_gather(agg[0], tp)            # (nsh, B, W)
+        aggs_b = jax.lax.all_gather(agg[1], tp)
+        idx = jax.lax.axis_index(tp)
+
+        def fold(carry, j):
+            pa, pb = carry
+            take = j < idx
+            na = jnp.where(take, pa * aggs_a[j], pa)
+            nb = jnp.where(take, aggs_a[j] * pb + aggs_b[j], pb)
+            return (na, nb), None
+        (pa, pb), _ = jax.lax.scan(
+            fold, (jnp.ones_like(agg[0]), jnp.zeros_like(agg[1])),
+            jnp.arange(nsh))
+        # compose the incoming prefix state pb into the local scan
+        return ha * pb[:, None, :] + hb
+
+    fn = jax.shard_map(
+        local, mesh=mctx.mesh,
+        in_specs=(jax.P(mctx.dp, tp, None), jax.P(mctx.dp, tp, None)),
+        out_specs=jax.P(mctx.dp, tp, None))
+    return fn(a, gx)
+
+
+def rglru_block(p, x, cfg: ModelConfig, mctx: MeshCtx, *, state=None, conv_buf=None):
+    """x: (B, S, D) -> (out, new_state, new_conv_buf).
+
+    Sharding: everything W-wide stays sharded on the tp axis end to end
+    (in_x/in_gate column-parallel -> conv/gates/recurrence elementwise or
+    reduce-scattered -> out_proj row-parallel).  Without the explicit
+    constraints below, the w_a/w_i contractions all-reduce f32 (B,S,W)
+    per layer — the dominant collective of the whole model
+    (EXPERIMENTS.md §Perf iteration 3)."""
+    cd = cfg.cdtype
+    k = cfg.hybrid.conv_k
+    B, S, _ = x.shape
+    xb = jnp.einsum("bsd,dw->bsw", x, p["in_x"].astype(cd))
+    gate = jnp.einsum("bsd,dw->bsw", x, p["in_gate"].astype(cd))
+    # sequence-parallel recurrent block (§Perf iteration 3): shard S, keep
+    # W whole -> the W x W gate matmuls are fully local (no all-reduce);
+    # the associative scan crosses shards with O(B, W) aggregates only.
+    xb = mctx.constrain(xb, mctx.dp, mctx.tp, None)
+    gate = mctx.constrain(gate, mctx.dp, mctx.tp, None)
+    if state is None:
+        xb = _causal_conv(xb, p["conv_w"].astype(cd), p["conv_b"].astype(cd), k)
+        new_conv_buf = None   # primed separately via rglru_prime_conv_buf
+    else:
+        buf = jnp.concatenate([conv_buf, xb], axis=1)
+        xb = (jnp.einsum("bkc,kc->bc", buf, p["conv_w"].astype(cd))
+              + p["conv_b"].astype(cd))[:, None, :]
+        new_conv_buf = buf[:, 1:, :]
+    a, gx = _gates(p, xb, cfg)
+
+    if state is None:
+        h = _seq_scan(a, gx, cfg, mctx)
+        new_state = h[:, -1]
+    else:
+        h = (state * a[:, 0] + gx[:, 0])[:, None]
+        new_state = h[:, 0]
+
+    out = h.astype(cd) * jax.nn.gelu(gate)
+    out = jnp.einsum("bsw,wd->bsd", out, p["out_proj"].astype(cd))
+    return mctx.constrain(out, mctx.dp, None, None), new_state, new_conv_buf
+
+
+def rglru_prime_conv_buf(p, x, cfg: ModelConfig):
+    """After a prefill, the decode conv buffer = last (k-1) raw xb inputs."""
+    xb = jnp.einsum("bsd,dw->bsw", x, p["in_x"].astype(cfg.cdtype))
+    return xb[:, -(cfg.hybrid.conv_k - 1):, :]

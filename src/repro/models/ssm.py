@@ -1,0 +1,154 @@
+"""Mamba-2 SSD (state-space duality) block — chunked matmul algorithm.
+
+Train/prefill path: the chunked SSD decomposition (intra-chunk
+quadratic term + inter-chunk state recurrence via lax.scan) — the
+matmul-friendly form that maps onto the MXU.  Decode path: single-step
+linear recurrence on the (B, H, hd, d_state) state.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import ModelConfig, MeshCtx, truncated_normal_init
+from repro.models.layers import rms_norm
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    nheads = d_inner // s.headdim
+    return d_inner, nheads
+
+
+def init_ssm(key, cfg: ModelConfig, dtype):
+    s = cfg.ssm
+    d = cfg.d_model
+    d_inner, nheads = _dims(cfg)
+    conv_ch = d_inner + 2 * s.d_state       # x, B, C get convolved
+    ks = jax.random.split(key, 6)
+    sc = 0.02
+    return {
+        "in_proj": truncated_normal_init(
+            ks[0], (d, 2 * d_inner + 2 * s.d_state + nheads), dtype, sc),
+        "conv_w": truncated_normal_init(ks[1], (s.d_conv, conv_ch), dtype, sc),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.zeros((nheads,), jnp.float32),
+        "D": jnp.ones((nheads,), jnp.float32),
+        "dt_bias": jnp.zeros((nheads,), jnp.float32),
+        "norm_w": jnp.ones((d_inner,), dtype),
+        "out_proj": truncated_normal_init(
+            ks[2], (d_inner, d), dtype, sc / np.sqrt(2 * cfg.n_layers)),
+    }
+
+
+def _causal_conv(x, w, b, k: int):
+    """Depthwise causal conv1d. x: (B, S, C), w: (k, C)."""
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + x.shape[1], :] * w[i] for i in range(k))
+    return out + b
+
+
+def _ssd_chunked(xh, dt, A, Bm, Cm, chunk: int):
+    """Chunked SSD: xh (B,S,H,P), dt (B,S,H) >=0, A (H,) <0 decay rates,
+    Bm/Cm (B,S,N).  Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    Bb, S, H, Pd = xh.shape
+    N = Bm.shape[-1]
+    nc = S // chunk
+    a = dt * A                                   # (B,S,H) log-decay, <= 0
+    xc = xh.reshape(Bb, nc, chunk, H, Pd)
+    dtc = dt.reshape(Bb, nc, chunk, H)
+    ac = a.reshape(Bb, nc, chunk, H)
+    Bc = Bm.reshape(Bb, nc, chunk, N)
+    Cc = Cm.reshape(Bb, nc, chunk, N)
+    acs = jnp.cumsum(ac, axis=2)                 # within-chunk cumulative
+    # intra-chunk (quadratic, causal):
+    # L[t,s] = exp(acs[t] - acs[s]) * (t >= s), score = C_t . B_s * dt_s
+    seg = acs[:, :, :, None, :] - acs[:, :, None, :, :]          # (B,nc,t,s,H)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    L = jnp.where(tri[None, None, :, :, None], jnp.exp(seg), 0.0)
+    scores = jnp.einsum("bctn,bcsn->bcts", Cc, Bc)               # (B,nc,t,s)
+    y_diag = jnp.einsum("bcts,bctsh,bcsh,bcshp->bcthp",
+                        scores, L, dtc, xc)
+    # chunk state: states[c] = sum_s exp(acs[last]-acs[s]) dt_s B_s x_s
+    decay_s = jnp.exp(acs[:, :, -1:, :] - acs)                   # (B,nc,chunk,H)
+    states = jnp.einsum("bcsh,bcsh,bcsn,bcshp->bchpn",
+                        decay_s, dtc, Bc, xc)
+    chunk_decay = jnp.exp(acs[:, :, -1, :])                      # (B,nc,H)
+
+    def step(h, inp):
+        st, dec = inp                            # (B,H,P,N), (B,H)
+        h_new = h * dec[:, :, None, None] + st
+        return h_new, h                          # emit state BEFORE chunk
+
+    h0 = jnp.zeros((Bb, H, Pd, N), jnp.float32)
+    hT, h_prev = jax.lax.scan(
+        step, h0,
+        (jnp.moveaxis(states, 1, 0).astype(jnp.float32),
+         jnp.moveaxis(chunk_decay, 1, 0).astype(jnp.float32)))
+    h_prev = jnp.moveaxis(h_prev, 0, 1)          # (B,nc,H,P,N) state entering chunk
+    # inter-chunk contribution: y_off[t] = exp(acs[t]) * C_t . h_prev
+    decay_out = jnp.exp(acs)                     # (B,nc,chunk,H)
+    y_off = jnp.einsum("bcth,bctn,bchpn->bcthp",
+                       decay_out, Cc, h_prev.astype(Cc.dtype))
+    y = (y_diag + y_off).reshape(Bb, S, H, Pd)
+    return y, hT
+
+
+def ssm_block(p, x, cfg: ModelConfig, mctx: MeshCtx, *, state=None, conv_buf=None):
+    """x: (B, S, D).  If state is given (decode), S must be 1 and the
+    function returns (y, new_state, new_conv_buf); else (y, final_state,
+    last_conv_window) for cache priming."""
+    s = cfg.ssm
+    d_inner, nheads = _dims(cfg)
+    cd = cfg.cdtype
+    B, S, _ = x.shape
+    proj = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(cd))
+    z, xr, Bm, Cm, dt = jnp.split(
+        proj, [d_inner, 2 * d_inner, 2 * d_inner + s.d_state,
+               2 * d_inner + 2 * s.d_state], axis=-1)
+    conv_in = jnp.concatenate([xr, Bm, Cm], axis=-1)
+    A = -jnp.exp(p["A_log"])                     # (H,) negative decay
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+
+    if state is None:
+        conv = _causal_conv(conv_in, p["conv_w"].astype(cd), p["conv_b"].astype(cd), s.d_conv)
+        conv = jax.nn.silu(conv)
+        xr, Bm, Cm = jnp.split(conv, [d_inner, d_inner + s.d_state], axis=-1)
+        xh = xr.reshape(B, S, nheads, s.headdim)
+        xh = mctx.constrain(xh, mctx.dp, None, mctx.tp, None)
+        # pad S to a chunk multiple; dt=0 on pads => identity state update
+        ch = min(s.chunk, S)
+        pad = (-S) % ch
+        if pad:
+            xh_p = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            dt_p = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+            Bm_p = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+            Cm_p = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        else:
+            xh_p, dt_p, Bm_p, Cm_p = xh, dt, Bm, Cm
+        y, hT = _ssd_chunked(xh_p.astype(jnp.float32), dt_p, A,
+                             Bm_p.astype(jnp.float32), Cm_p.astype(jnp.float32), ch)
+        y = y[:, :S]
+        y = y + xh.astype(jnp.float32) * p["D"][None, None, :, None]
+        new_conv_buf = conv_in[:, -(s.d_conv - 1):, :]
+    else:
+        # single-token recurrence
+        buf = jnp.concatenate([conv_buf, conv_in], axis=1)   # (B, d_conv, C)
+        conv = jnp.einsum("bkc,kc->bc", buf, p["conv_w"].astype(cd)) + p["conv_b"].astype(cd)
+        conv = jax.nn.silu(conv)[:, None, :]
+        xr, Bm, Cm = jnp.split(conv, [d_inner, d_inner + s.d_state], axis=-1)
+        xh = xr.reshape(B, 1, nheads, s.headdim).astype(jnp.float32)
+        dtb = dt[:, 0]                                       # (B,H)
+        decay = jnp.exp(dtb * A)                             # (B,H)
+        dBx = jnp.einsum("bh,bn,bhp->bhpn", dtb, Bm[:, 0].astype(jnp.float32), xh[:, 0])
+        hT = state * decay[:, :, None, None] + dBx
+        y = jnp.einsum("bn,bhpn->bhp", Cm[:, 0].astype(jnp.float32), hT)[:, None]
+        y = y + xh * p["D"][None, None, :, None]
+        new_conv_buf = buf[:, 1:, :]
+
+    y = y.reshape(B, S, d_inner).astype(cd)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)  # gated norm
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(cd))
+    return mctx.constrain(out, mctx.dp, None, None), hT, new_conv_buf

@@ -1,0 +1,148 @@
+"""AdamW with optional 8-bit (blockwise-quantized) moments, gradient
+clipping, and WSD / cosine / linear schedules.
+
+The 8-bit moment option is a distributed-optimization necessity, not a
+nicety: kimi-k2 (1T params) needs 4 TB of fp32 moments *each* for m and
+v — quantized moments (1 byte + per-block fp32 scale) cut optimizer
+state 4x so the model fits 512 x 16 GB (DESIGN.md §4/§5).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+BLOCK = 256  # quantization block (last-dim groups)
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    moments_dtype: str = "float32"      # float32 | int8
+    schedule: str = "cosine"            # cosine | wsd | linear | const
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    decay_frac: float = 0.1             # WSD: fraction of steps in decay
+
+
+# --------------------------------------------------------- schedules
+
+def schedule_fn(c: AdamWConfig, step):
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(c.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - c.warmup_steps) / max(c.total_steps - c.warmup_steps, 1), 0.0, 1.0)
+    if c.schedule == "cosine":
+        mult = 0.5 * (1 + jnp.cos(jnp.pi * t))
+    elif c.schedule == "wsd":           # warmup-stable-decay (MiniCPM)
+        decay_start = 1.0 - c.decay_frac
+        mult = jnp.where(t < decay_start, 1.0,
+                         1.0 - (t - decay_start) / max(c.decay_frac, 1e-6))
+    elif c.schedule == "linear":
+        mult = 1.0 - t
+    else:
+        mult = jnp.ones(())
+    return c.lr * warm * mult
+
+
+# ------------------------------------------------- 8-bit moment codec
+
+def _q8_block(last_dim: int) -> int:
+    """Largest divisor of the last dim <= BLOCK, so q keeps the PARAM's
+    exact shape — the quantized moment then shards with the param's own
+    PartitionSpec (a flat-block layout forces XLA to re-gather the whole
+    decoded tensor; see EXPERIMENTS.md §Perf iteration 2c)."""
+    for bs in range(min(BLOCK, last_dim), 0, -1):
+        if last_dim % bs == 0:
+            return bs
+    return 1
+
+
+def _q8_encode(x):
+    """Blockwise absmax int8 along the last dim.
+    q: int8, same shape as x; scale: f32 (*x.shape[:-1], nblocks)."""
+    d = x.shape[-1] if x.ndim else 1
+    x = x.reshape(x.shape or (1,))
+    bs = _q8_block(d)
+    nb = d // bs
+    blocks = x.reshape(x.shape[:-1] + (nb, bs))
+    scale = jnp.max(jnp.abs(blocks), axis=-1, keepdims=True) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return {"q": q.reshape(x.shape), "scale": scale[..., 0].astype(jnp.float32)}
+
+
+def _q8_decode(enc, shape):
+    q = enc["q"]
+    scale = enc["scale"]
+    nb = scale.shape[-1]
+    bs = q.shape[-1] // nb
+    blocks = q.reshape(q.shape[:-1] + (nb, bs)).astype(jnp.float32)
+    return (blocks * scale[..., None]).reshape(shape)
+
+
+# ------------------------------------------------------------- adamw
+
+def init_opt_state(params, c: AdamWConfig):
+    def zeros_like_moment(p):
+        z = jnp.zeros(p.shape, jnp.float32)
+        if c.moments_dtype == "int8":
+            return _q8_encode(z)
+        return z
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree.map(zeros_like_moment, params),
+        "v": jax.tree.map(zeros_like_moment, params),
+    }
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def _is_moment(x):
+    return isinstance(x, dict) and "q" in x
+
+
+def apply_updates(params, grads, state, c: AdamWConfig):
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, c.clip_norm / (gnorm + 1e-9))
+    lr = schedule_fn(c, step)
+    b1c = 1 - c.b1 ** step.astype(jnp.float32)
+    b2c = 1 - c.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        if c.moments_dtype == "int8":
+            m_f = _q8_decode(m, p.shape)
+            v_f = _q8_decode(v, p.shape)
+        else:
+            m_f, v_f = m, v
+        m_f = c.b1 * m_f + (1 - c.b1) * g
+        v_f = c.b2 * v_f + (1 - c.b2) * g * g
+        u = (m_f / b1c) / (jnp.sqrt(v_f / b2c) + c.eps)
+        new_p = p.astype(jnp.float32) - lr * (u + c.weight_decay * p.astype(jnp.float32))
+        if c.moments_dtype == "int8":
+            return new_p.astype(p.dtype), _q8_encode(m_f), _q8_encode(v_f)
+        return new_p.astype(p.dtype), m_f, v_f
+
+    leaves_p, treedef = jax.tree.flatten(params)
+    leaves_g = treedef.flatten_up_to(grads)
+    leaves_m = jax.tree.flatten(state["m"], is_leaf=_is_moment)[0]
+    leaves_v = jax.tree.flatten(state["v"], is_leaf=_is_moment)[0]
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(leaves_p, leaves_g, leaves_m, leaves_v)]
+    new_params = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+    new_state = {"step": step, "m": new_m, "v": new_v}
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

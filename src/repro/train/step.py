@@ -1,0 +1,92 @@
+"""Train-step builder: loss -> grads (with optional microbatch grad
+accumulation and int8 gradient compression w/ error feedback) -> AdamW.
+
+The returned step function is pure (params, opt_state, batch) ->
+(params, opt_state, metrics) and is what launch/train.py jits with
+in_shardings and launch/dryrun.py AOT-compiles for the roofline."""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+from repro.optim import adamw
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    opt: adamw.AdamWConfig = adamw.AdamWConfig()
+    microbatches: int = 1            # grad accumulation steps
+    remat_policy: str = "full"
+    grad_compression: str = "none"   # none | bf16 | int8_ef
+
+
+def _compress_grads(grads, err, mode: str):
+    """Gradient compression with error feedback.  Models the cross-pod
+    (DCN) compressed all-reduce: quantize g+err, carry the residual."""
+    if mode == "none":
+        return grads, err
+    if mode == "bf16":
+        q = jax.tree.map(lambda g: g.astype(jnp.bfloat16).astype(jnp.float32), grads)
+        new_err = jax.tree.map(lambda g, qq: g - qq, grads, q)
+        return q, new_err
+
+    def q8(g, e):
+        t = g.astype(jnp.float32) + e
+        scale = jnp.max(jnp.abs(t)) / 127.0 + 1e-12
+        q = jnp.round(t / scale).clip(-127, 127)
+        deq = q * scale
+        return deq, t - deq
+    pairs = jax.tree.map(q8, grads, err)
+    q = jax.tree.map(lambda p: p[0], pairs, is_leaf=lambda x: isinstance(x, tuple))
+    new_err = jax.tree.map(lambda p: p[1], pairs, is_leaf=lambda x: isinstance(x, tuple))
+    return q, new_err
+
+
+def init_train_state(model: Model, params, tcfg: TrainConfig):
+    state = {"opt": adamw.init_opt_state(params, tcfg.opt)}
+    if tcfg.grad_compression == "int8_ef":
+        state["err"] = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return state
+
+
+def make_train_step(model: Model, tcfg: TrainConfig):
+    model = dataclasses.replace(model, remat_policy=tcfg.remat_policy)
+
+    def loss_fn(params, batch):
+        return model.loss_fn(params, batch)
+
+    def train_step(params, state, batch):
+        mb = tcfg.microbatches
+        if mb == 1:
+            (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        else:
+            def split(x):
+                return x.reshape((mb, x.shape[0] // mb) + x.shape[1:])
+            micro = jax.tree.map(split, batch)
+
+            def acc_fn(carry, mb_batch):
+                gsum, lsum = carry
+                (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb_batch)
+                return (jax.tree.map(jnp.add, gsum, g), lsum + l), None
+            zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss), _ = jax.lax.scan(acc_fn, (zero, jnp.zeros(())), micro)
+            grads = jax.tree.map(lambda g: g / mb, grads)
+            loss = loss / mb
+            aux = {}
+        if tcfg.grad_compression != "none":
+            err = state.get("err", jax.tree.map(lambda g: jnp.zeros_like(g), grads))
+            grads, err = _compress_grads(grads, err, tcfg.grad_compression)
+        new_params, opt, metrics = adamw.apply_updates(
+            params, grads, state["opt"], tcfg.opt)
+        new_state = {"opt": opt}
+        if tcfg.grad_compression == "int8_ef":
+            new_state["err"] = err
+        metrics = {"loss": loss, **metrics}
+        return new_params, new_state, metrics
+
+    return train_step

@@ -1,0 +1,66 @@
+"""The jittable batched FHE path (used by dry-runs/benchmarks) must be
+the SAME function as the host-orchestrated fhe.rns/keyswitch path."""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.fhe import batched as FB
+from repro.fhe import rns
+from repro.fhe.keyswitch import keyswitch as host_keyswitch
+from repro.fhe.rns import RnsPoly
+
+N = 64
+PRIMES = tuple(rns.make_primes(N, 4))   # 3 basis + special (last)
+RNG = np.random.default_rng(5)
+
+
+def _pack():
+    return FB.build_table_pack(list(PRIMES), N)
+
+
+def test_ntt_roundtrip_batched():
+    t = _pack()
+    x = jnp.asarray(RNG.integers(0, PRIMES[1], (5, N), dtype=np.uint32))
+    y = FB.ntt_fwd_i(x, t, 1)
+    back = FB.ntt_inv_i(y, t, 1)
+    assert np.array_equal(np.asarray(back), np.asarray(x))
+
+
+def test_extend_matches_host():
+    t = _pack()
+    src_q = PRIMES[0]
+    x = RNG.integers(0, src_q, (N,), dtype=np.uint32)
+    got = FB.extend_centered(jnp.asarray(x), jnp.uint32(src_q),
+                             jnp.asarray(np.array(PRIMES, np.uint32)))
+    want = rns.extend_single(x, src_q, PRIMES)
+    assert np.array_equal(np.asarray(got), np.asarray(want.data))
+
+
+def test_batched_keyswitch_equals_host():
+    """Feed identical random d2/evk data through both implementations."""
+    basis = PRIMES[:-1]
+    special = PRIMES[-1]
+    full = basis + (special,)
+    k = len(basis)
+    B = 3
+    d2_rows = RNG.integers(0, 2**31, (k, B, N)).astype(np.uint32)
+    for i, q in enumerate(basis):
+        d2_rows[i] %= q
+    evk_b = RNG.integers(0, 2**31, (k, k + 1, N)).astype(np.uint32)
+    evk_a = RNG.integers(0, 2**31, (k, k + 1, N)).astype(np.uint32)
+    for j, q in enumerate(full):
+        evk_b[:, j] %= q
+        evk_a[:, j] %= q
+
+    t = _pack()
+    ks0_b, ks1_b = FB.batched_keyswitch(
+        jnp.asarray(d2_rows), jnp.asarray(evk_b), jnp.asarray(evk_a), t)
+
+    # host path, one batch element at a time
+    evk_host = [(RnsPoly(jnp.asarray(evk_b[i]), full, True),
+                 RnsPoly(jnp.asarray(evk_a[i]), full, True))
+                for i in range(k)]
+    for b in range(B):
+        d2 = RnsPoly(jnp.asarray(d2_rows[:, b]), basis, True)
+        h0, h1 = host_keyswitch(d2, evk_host, special)
+        assert np.array_equal(np.asarray(ks0_b)[:, b], np.asarray(h0.data)), b
+        assert np.array_equal(np.asarray(ks1_b)[:, b], np.asarray(h1.data)), b

@@ -1,0 +1,91 @@
+"""Validates the HLO-text cost analyzer against known-cost programs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.runtime import hlo_cost
+
+
+def _compile(fn, *args):
+    return jax.jit(fn).lower(*args).compile()
+
+
+def test_single_matmul_flops():
+    x = jax.ShapeDtypeStruct((1024, 1024), jnp.bfloat16)
+    c = _compile(lambda a, b: a @ b, x, x)
+    cost = hlo_cost.analyze(c.as_text())
+    assert abs(cost.flops - 2 * 1024**3) / (2 * 1024**3) < 0.05
+
+
+def test_scan_multiplies_by_trip_count():
+    """THE reason this module exists: XLA cost_analysis counts while
+    bodies once; we must count them trip_count times."""
+    x = jax.ShapeDtypeStruct((512, 512), jnp.bfloat16)
+    ws = jax.ShapeDtypeStruct((10, 512, 512), jnp.bfloat16)
+
+    def scanned(x, ws):
+        return jax.lax.scan(lambda c, w: (c @ w, None), x, ws)[0]
+    c = _compile(scanned, x, ws)
+    cost = hlo_cost.analyze(c.as_text())
+    want = 10 * 2 * 512**3
+    assert abs(cost.flops - want) / want < 0.1, cost.flops
+    # and XLA's own undercount would fail this:
+    xla = float(c.cost_analysis()["flops"])
+    assert xla < 0.3 * want
+
+
+def test_nested_scan():
+    x = jax.ShapeDtypeStruct((256, 256), jnp.bfloat16)
+    ws = jax.ShapeDtypeStruct((4, 3, 256, 256), jnp.bfloat16)
+
+    def nested(x, ws):
+        def outer(c, wrow):
+            def inner(ci, w):
+                return ci @ w, None
+            return jax.lax.scan(inner, c, wrow)[0], None
+        return jax.lax.scan(outer, x, ws)[0]
+    c = _compile(nested, x, ws)
+    cost = hlo_cost.analyze(c.as_text())
+    want = 12 * 2 * 256**3
+    assert abs(cost.flops - want) / want < 0.15, cost.flops
+
+
+def test_bytes_reasonable():
+    x = jax.ShapeDtypeStruct((4096, 4096), jnp.float32)
+    c = _compile(lambda a: a + 1.0, x)
+    cost = hlo_cost.analyze(c.as_text())
+    want = 2 * 4096 * 4096 * 4       # read + write
+    assert 0.5 * want <= cost.bytes <= 3 * want
+
+
+def test_collectives_in_scan_counted():
+    import subprocess, sys, textwrap
+    script = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, jax.numpy as jnp
+        from jax.sharding import PartitionSpec as P, NamedSharding
+        from repro.runtime import hlo_cost
+        mesh = jax.make_mesh((8,), ("d",))
+        sh = NamedSharding(mesh, P(None, "d"))
+
+        def f(x, ws):
+            def body(c, w):
+                y = c @ w                      # w sharded -> all-gather/ar per step
+                return jax.lax.with_sharding_constraint(y, sh), None
+            return jax.lax.scan(body, x, ws)[0]
+        x = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+        ws = jax.ShapeDtypeStruct((6, 256, 256), jnp.float32)
+        c = jax.jit(f, in_shardings=(NamedSharding(mesh, P(None, None)), NamedSharding(mesh, P(None, None, "d"))), out_shardings=sh).lower(x, ws).compile()
+        cost = hlo_cost.analyze(c.as_text())
+        n = sum(cost.coll_counts.values())
+        print("COLL", n, cost.coll_traffic)
+        assert n >= 6, f"collectives inside scan must be multiplied: {n}"
+        print("OK")
+    """)
+    r = subprocess.run([sys.executable, "-c", script], capture_output=True,
+                       text=True, timeout=300,
+                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+                       cwd="/root/repo")
+    assert "OK" in r.stdout, f"{r.stdout}\n{r.stderr}"

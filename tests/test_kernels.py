@@ -1,0 +1,77 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp oracles (exact equality).
+
+Pallas kernels execute in interpret mode on CPU; the oracle is ref.py,
+which is itself validated against numpy/bruteforce in test_ntt.py —
+a two-level oracle chain."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.params import make_ntt_params
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(123)
+
+
+def _rand(p, batch):
+    return RNG.integers(0, p.q, size=(batch, p.n), dtype=np.uint32)
+
+
+@pytest.mark.parametrize("n", [16, 128, 1024, 4096])
+@pytest.mark.parametrize("batch", [1, 8, 13])
+@pytest.mark.parametrize("negacyclic", [False, True])
+def test_ntt_fwd_kernel_sweep(n, batch, negacyclic):
+    p = make_ntt_params(n)
+    x = _rand(p, batch)
+    got = np.asarray(ops.ntt(jnp.asarray(x), p, negacyclic=negacyclic, use_pallas=True))
+    want = np.asarray(ref.ntt_fwd_ref(x, p, negacyclic))
+    assert np.array_equal(got, want)
+
+
+@pytest.mark.parametrize("n", [16, 128, 1024])
+@pytest.mark.parametrize("batch", [1, 8, 13])
+@pytest.mark.parametrize("negacyclic", [False, True])
+def test_ntt_inv_kernel_sweep(n, batch, negacyclic):
+    p = make_ntt_params(n)
+    x = _rand(p, batch)
+    got = np.asarray(ops.intt(jnp.asarray(x), p, negacyclic=negacyclic, use_pallas=True))
+    want = np.asarray(ref.ntt_inv_ref(x, p, negacyclic))
+    assert np.array_equal(got, want)
+
+
+@pytest.mark.parametrize("n", [128, 2048])
+def test_kernel_roundtrip(n):
+    p = make_ntt_params(n)
+    x = _rand(p, 8)
+    y = ops.ntt(jnp.asarray(x), p, negacyclic=True, use_pallas=True)
+    back = np.asarray(ops.intt(y, p, negacyclic=True, use_pallas=True))
+    assert np.array_equal(back, x)
+
+
+@pytest.mark.parametrize("n", [128, 1024])
+@pytest.mark.parametrize("batch", [1, 8, 9])
+def test_dyadic_mul_kernel(n, batch):
+    p = make_ntt_params(n)
+    a, b = _rand(p, batch), _rand(p, batch)
+    got = np.asarray(ops.dyadic_mul(jnp.asarray(a), jnp.asarray(b), p, use_pallas=True))
+    want = np.asarray(ref.dyadic_mul_ref(a, b, p.q, p.barrett_mu))
+    assert np.array_equal(got, want)
+    # and against exact u64 numpy
+    assert np.array_equal(got, (a.astype(np.uint64) * b % p.q).astype(np.uint32))
+
+
+@pytest.mark.parametrize("n", [128])
+def test_dyadic_mac_kernel(n):
+    p = make_ntt_params(n)
+    acc, a, b = _rand(p, 8), _rand(p, 8), _rand(p, 8)
+    got = np.asarray(ops.dyadic_mac(jnp.asarray(acc), jnp.asarray(a), jnp.asarray(b), p, use_pallas=True))
+    want = (acc.astype(np.uint64) + a.astype(np.uint64) * b % p.q) % p.q
+    assert np.array_equal(got, want.astype(np.uint32))
+
+
+def test_mixed_leading_dims():
+    p = make_ntt_params(128)
+    x = RNG.integers(0, p.q, size=(3, 5, 128), dtype=np.uint32)
+    got = np.asarray(ops.ntt(jnp.asarray(x), p, negacyclic=True, use_pallas=True))
+    want = np.asarray(ref.ntt_fwd_ref(x, p, True))
+    assert np.array_equal(got, want)

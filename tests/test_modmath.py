@@ -1,0 +1,88 @@
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import modmath as mm
+from repro.core.params import gen_ntt_primes, is_prime
+
+Q = gen_ntt_primes(1, 128, bits=30)[0]
+RNG = np.random.default_rng(42)
+
+
+def _rand(n, hi=2**32):
+    return RNG.integers(0, hi, size=n, dtype=np.uint32)
+
+
+def test_is_prime_known():
+    assert is_prime(2) and is_prime(97) and is_prime((1 << 31) - 1)
+    assert not is_prime(1) and not is_prime(561) and not is_prime(2**30)
+
+
+def test_mulhi_matches_numpy():
+    a, b = _rand(4096), _rand(4096)
+    got = np.asarray(mm.mulhi_u32(jnp.asarray(a), jnp.asarray(b)))
+    assert np.array_equal(got, mm.mulhi_np(a, b))
+
+
+def test_addsub_mod():
+    a, b = _rand(4096, Q), _rand(4096, Q)
+    qa = jnp.uint32(Q)
+    assert np.array_equal(np.asarray(mm.addmod(jnp.asarray(a), jnp.asarray(b), qa)),
+                          mm.addmod_np(a, b, Q))
+    assert np.array_equal(np.asarray(mm.submod(jnp.asarray(a), jnp.asarray(b), qa)),
+                          mm.submod_np(a, b, Q))
+
+
+def test_shoup_mulmod():
+    x = _rand(4096, Q)
+    w = int(_rand(1, Q)[0])
+    wp = mm.shoup_precompute(w, Q)
+    got = np.asarray(mm.mulmod_shoup(jnp.asarray(x), jnp.uint32(w), jnp.uint32(wp), jnp.uint32(Q)))
+    assert np.array_equal(got, mm.mulmod_np(x, w, Q))
+
+
+def test_barrett_mulmod():
+    mu = mm.barrett_precompute(Q)
+    a, b = _rand(4096, Q), _rand(4096, Q)
+    got = np.asarray(mm.mulmod_barrett(jnp.asarray(a), jnp.asarray(b), jnp.uint32(Q), jnp.uint32(mu)))
+    assert np.array_equal(got, mm.mulmod_np(a, b, Q))
+
+
+def test_montgomery_mulmod():
+    qinv_neg, r2 = mm.montgomery_precompute(Q)
+    a, b = _rand(4096, Q), _rand(4096, Q)
+    got = np.asarray(mm.mulmod_montgomery(jnp.asarray(a), jnp.asarray(b), jnp.uint32(Q),
+                                          jnp.uint32(qinv_neg), jnp.uint32(r2)))
+    assert np.array_equal(got, mm.mulmod_np(a, b, Q))
+
+
+@settings(max_examples=200, deadline=None)
+@given(x=st.integers(0, 2**32 - 1), w=st.integers(0, Q - 1))
+def test_shoup_property(x, w):
+    """Shoup accepts ANY u32 x (lazy inputs), result fully reduced."""
+    wp = mm.shoup_precompute(w, Q)
+    got = int(mm.mulmod_shoup(jnp.uint32(x), jnp.uint32(w), jnp.uint32(wp), jnp.uint32(Q)))
+    assert got == (x * w) % Q
+
+
+@settings(max_examples=100, deadline=None)
+@given(a=st.integers(0, Q - 1), b=st.integers(0, Q - 1))
+def test_all_multipliers_agree(a, b):
+    mu = mm.barrett_precompute(Q)
+    qinv_neg, r2 = mm.montgomery_precompute(Q)
+    want = (a * b) % Q
+    assert int(mm.mulmod_barrett(jnp.uint32(a), jnp.uint32(b), jnp.uint32(Q), jnp.uint32(mu))) == want
+    wp = mm.shoup_precompute(b, Q)
+    assert int(mm.mulmod_shoup(jnp.uint32(a), jnp.uint32(b), jnp.uint32(wp), jnp.uint32(Q))) == want
+    assert int(mm.mulmod_montgomery(jnp.uint32(a), jnp.uint32(b), jnp.uint32(Q),
+                                    jnp.uint32(qinv_neg), jnp.uint32(r2))) == want
+
+
+@pytest.mark.parametrize("bits", [29, 30])
+def test_barrett_other_primes(bits):
+    for q in gen_ntt_primes(3, 256, bits=bits):
+        mu = mm.barrett_precompute(q)
+        a, b = _rand(1024, q), _rand(1024, q)
+        got = np.asarray(mm.mulmod_barrett(jnp.asarray(a), jnp.asarray(b), jnp.uint32(q), jnp.uint32(mu)))
+        assert np.array_equal(got, mm.mulmod_np(a, b, q))

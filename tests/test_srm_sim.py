@@ -1,0 +1,133 @@
+"""Validates the SRM pipeline simulator against the paper's claims."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import srm_sim
+from repro.core.ntt import ntt_cyclic
+from repro.core.params import make_ntt_params
+
+RNG = np.random.default_rng(99)
+
+
+def test_pipeline_matches_cg_ntt():
+    """Functional: FIFO discipline computes the exact CG-NTT (paper
+    §VII.C validated 1e5 cases against brute force; our CG-NTT is
+    brute-force-validated in test_ntt, so equality here closes the chain)."""
+    p = make_ntt_params(128)
+    pipe = srm_sim.NTT128Pipeline(p)
+    polys = RNG.integers(0, p.q, size=(5, 128), dtype=np.uint32)
+    out, stats = pipe.run(polys)
+    want = np.asarray(ntt_cyclic(jnp.asarray(polys), p))
+    assert np.array_equal(out, want)
+
+
+def test_memory_layout_equations_4_to_6():
+    """Paper eqs (4)-(6): at PE_p, stream-index i lives at the location
+    given by rotating the 7-bit address word left by p; first/last bits
+    are queue enables, middle five the slot."""
+    p = make_ntt_params(128)
+    pipe = srm_sim.NTT128Pipeline(p)
+    poly = np.arange(128, dtype=np.uint32)  # PE0 values = stream indices
+    # run with layout snapshots; use value-traceable input only for PE0,
+    # for later PEs check positional discipline via a second instrumented run
+    pipe.run(poly[None, :], snapshot_layout=True)
+
+    def expected_location(i: int, pe: int):
+        bits = [(i >> (6 - k)) & 1 for k in range(7)]      # [i6..i0]
+        rot = bits[pe:] + bits[:pe]                         # rotl by pe
+        queue = rot[0] * 2 + rot[-1]
+        slot = 0
+        for b in rot[1:-1]:
+            slot = (slot << 1) | b
+        return queue, slot
+
+    # PE0: values are literally the indices
+    snap0 = pipe.pes[0].layout_snapshots[0]
+    for i in range(128):
+        q, s = expected_location(i, 0)
+        assert snap0[(q, s)] == i, f"PE0 layout broken at i={i}"
+
+    # PE1..6: check the *discipline*.  The paper labels intermediate
+    # values in-place (eq (3) overwrites a_i / a_{i+N/2}), and the BU of
+    # stage p emits label i at stream position rotl^1(i) — so the label
+    # of stream position k at PE_p is rotr^p(k).  The write discipline
+    # must place it at expected_location(label, p) per eqs (4)-(6).
+    def rotr7(x: int, r: int) -> int:
+        for _ in range(r):
+            x = ((x >> 1) | ((x & 1) << 6)) & 0x7F
+        return x
+
+    for pe_idx in range(1, 7):
+        half = 32
+        for k in range(128):
+            pair, lane = divmod(k, 2)
+            if pair < half:
+                queue = lane            # queues 0,1
+                slot = pair
+            else:
+                queue = 2 + lane        # queues 2,3
+                slot = pair - half
+            label = rotr7(k, pe_idx)
+            ql, sl = expected_location(label, pe_idx)
+            assert (queue, slot) == (ql, sl), (
+                f"PE{pe_idx}: eq({4 + pe_idx}) violated at k={k}")
+
+
+def test_war_hazard_free_and_pingpong():
+    """Banks assert on read-during-write; streaming 4 back-to-back polys
+    exercises every ping-pong swap without tripping the assertions."""
+    p = make_ntt_params(128)
+    pipe = srm_sim.NTT128Pipeline(p)
+    polys = RNG.integers(0, p.q, size=(4, 128), dtype=np.uint32)
+    out, _ = pipe.run(polys)  # would raise on any WAR violation
+    assert out.shape == (4, 128)
+
+
+def test_throughput_64_cycles_per_ntt():
+    """Paper: one NTT-128 retires every N/2=64 cycles in steady state
+    => 531.25M NTT/s at 34 GHz."""
+    p = make_ntt_params(128)
+    pipe = srm_sim.NTT128Pipeline(p)
+    polys = RNG.integers(0, p.q, size=(6, 128), dtype=np.uint32)
+    _, stats = pipe.run(polys)
+    assert stats["cycles_per_ntt_steady"] == 64
+    assert abs(stats["throughput_ntt_per_s"] - 531.25e6) < 1e4
+
+
+def test_latency_1036_cycles():
+    """Table III: total design latency 1,036 cycles (7 x (79 BU + 69 mem))."""
+    p = make_ntt_params(128)
+    pipe = srm_sim.NTT128Pipeline(p)
+    poly = RNG.integers(0, p.q, size=(1, 128), dtype=np.uint32)
+    _, stats = pipe.run(poly)
+    assert stats["latency_cycles"] == 1036
+
+
+def test_table3_model():
+    m = srm_sim.table3_model()
+    assert m["total_latency_cycles"] == 1036
+    assert m["cycles_per_ntt"] == 64
+    assert abs(m["throughput_mntt_per_s"] - 531.25) < 0.01
+
+
+def test_large_ntt_model_482ns():
+    m = srm_sim.large_ntt_cycles()
+    assert m["ideal_cycles"] == 16384
+    assert abs(m["ideal_latency_ns"] - 482) < 1.0
+    assert m["cycles"] == 16784
+    # paper: >= ~49x faster than HEAX's 23,894 ns
+    assert m["speedup_vs_cmos"] > 45
+
+
+def test_keyswitch_model():
+    m = srm_sim.keyswitch_cycles()
+    assert m["cycles"] == 20800
+    assert abs(m["throughput_per_s"] - 1_634_614) < 1000
+    assert m["speedup_vs_cmos"] > 600
+
+
+@pytest.mark.parametrize("k_units", [1, 2, 8])
+def test_large_ntt_k_scaling(k_units):
+    m = srm_sim.large_ntt_cycles(k_units=k_units)
+    assert m["cycles"] == (128 * 64 // k_units) * 2 + 400
