@@ -3,7 +3,10 @@
 Prints ``name,us_per_call,derived`` CSV (plus a roofline summary row per
 dry-run cell if experiments/dryrun JSONs exist).
 
-Usage: PYTHONPATH=src python -m benchmarks.run [--skip-slow]
+Usage: PYTHONPATH=src python -m benchmarks.run [--skip-slow | --smoke]
+
+``--smoke`` runs the fast CI subset (NTT-128 + the bank-parallel
+keyswitch throughput datapoint) and exits nonzero on any ERROR row.
 """
 from __future__ import annotations
 
@@ -19,18 +22,25 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--skip-slow", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast CI subset; nonzero exit on any ERROR row")
     args = ap.parse_args()
 
     from benchmarks import paper_tables
+    fns = paper_tables.SMOKE if args.smoke else paper_tables.ALL
+    failed = False
     print("name,us_per_call,derived")
-    for fn in paper_tables.ALL:
+    for fn in fns:
         if args.skip_slow and fn.__name__ in ("fig22_keyswitch",):
             continue
         try:
             for name, us, derived in fn():
                 print(f"{name},{us:.2f},{derived}")
         except Exception as e:  # keep the harness running
+            failed = True
             print(f"{fn.__name__},NaN,ERROR: {type(e).__name__}: {e}")
+    if args.smoke and failed:
+        sys.exit(1)
 
     # roofline summaries from the dry-run sweep (if present)
     pat = os.path.join(os.path.dirname(__file__), "..", "experiments",

@@ -25,6 +25,7 @@ from repro.core.modmath import (addmod, submod, mulmod_shoup, mulmod_barrett,
                                 shoup_precompute, barrett_precompute)
 from repro.core.ntt import cg_ntt, cg_intt
 from repro.core.params import make_ntt_params
+from repro.kernels import ops
 
 
 @dataclasses.dataclass
@@ -120,40 +121,54 @@ def extend_centered(coeffs, src_q, dst_qs):
 
 # ---------------------------------------------------------- keyswitch
 
-def batched_keyswitch(d2, evk_b, evk_a, t: dict):
-    """Paper Fig 22 pipeline, vectorized over a ciphertext batch.
+def slice_pack(t: dict, rows) -> dict:
+    """View of a TablePack restricted to prime rows ``rows`` (a slice).
+    The pinv rows are basis-relative (P^-1 mod q_j) and left intact."""
+    basis_relative = ("pinv", "pinv_p")
+    return {k: (v if k in basis_relative else v[rows]) for k, v in t.items()}
+
+
+def batched_keyswitch(d2, evk_b, evk_a, t: dict, *,
+                      use_pallas: bool | None = None, tile: int = 8):
+    """Paper Fig 22 pipeline, vectorized over a ciphertext batch AND the
+    RNS prime rows — the bank-parallel production path.
 
     d2:      (k, B, n) u32, NTT form over the k-prime basis (digit rows)
     evk_b/a: (k, k+1, n) key-switch key digits over basis+special
     t:       TablePack for k+1 primes (row k = the special prime P)
     Returns (ks0, ks1): (k, B, n) over the original basis.
+
+    Every stage is one multi-prime dispatch (see ``kernels.ops``): the
+    digit INTTs run as k bank rows, the mod-up is a vmap over digits,
+    all k*(k+1) forward NTTs run as one (prime, batch) grid with the
+    digit axis folded into the batch, and the whole digit inner product
+    is one fused dyadic-MAC call per output polynomial.  There is no
+    Python-level per-prime loop left in this hot path.
     """
-    k = d2.shape[0]
+    k, B, n = d2.shape
     kp1 = k + 1
+    kw = dict(use_pallas=use_pallas, tile=tile)
+    tb = slice_pack(t, slice(0, k))
 
-    acc0 = acc1 = None
-    for i in range(k):                           # outer digit loop (Fig 22)
-        ci = ntt_inv_i(d2[i], t, i)              # INTT unit
-        ext = extend_centered(ci, t["qs"][i], t["qs"])        # mod-up
-        ext = jnp.stack([ntt_fwd_i(ext[j], t, j) for j in range(kp1)])  # NTT banks
-        pb = jnp.stack([mulmod_barrett(ext[j], evk_b[i, j][None, :],
-                                       t["qs"][j], t["mu"][j]) for j in range(kp1)])
-        pa = jnp.stack([mulmod_barrett(ext[j], evk_a[i, j][None, :],
-                                       t["qs"][j], t["mu"][j]) for j in range(kp1)])
-        if acc0 is None:
-            acc0, acc1 = pb, pa
-        else:
-            acc0 = jnp.stack([addmod(acc0[j], pb[j], t["qs"][j]) for j in range(kp1)])
-            acc1 = jnp.stack([addmod(acc1[j], pa[j], t["qs"][j]) for j in range(kp1)])
+    ci = ops.intt_banks(d2, tb, **kw)                         # INTT units
+    ext = jax.vmap(lambda c, q: extend_centered(c, q, t["qs"])
+                   )(ci, t["qs"][:k])                         # mod-up: (k, k+1, B, n)
+    # NTT banks: fold the digit axis into the batch so all k*(k+1)
+    # transforms run in ONE (prime, batch_tile) grid.
+    y = ops.ntt_banks(ext.transpose(1, 0, 2, 3), t, **kw)     # (k+1, k, B, n)
+    y = y.transpose(1, 0, 2, 3)                               # (digit, prime, B, n)
+    acc0 = ops.dyadic_inner_banks(y, evk_b, t, **kw)          # MM/MA arrays
+    acc1 = ops.dyadic_inner_banks(y, evk_a, t, **kw)
 
-    def mod_down(acc):                           # RNS floor + MS
-        lastc = ntt_inv_i(acc[k], t, k)
-        ext = extend_centered(lastc, t["qs"][k], t["qs"][:k])
-        out = []
-        for j in range(k):
-            extj = ntt_fwd_i(ext[j], t, j)
-            d = submod(acc[j], extj, t["qs"][j])
-            out.append(mulmod_shoup(d, t["pinv"][j], t["pinv_p"][j], t["qs"][j]))
-        return jnp.stack(out)
+    qcol = t["qs"][:k, None, None]
+    pinv = t["pinv"][:, None, None]
+    pinv_p = t["pinv_p"][:, None, None]
+
+    def mod_down(acc):                                        # RNS floor + MS
+        lastc = ops.intt_banks(acc[k:], slice_pack(t, slice(k, kp1)), **kw)
+        ext = extend_centered(lastc[0], t["qs"][k], t["qs"][:k])
+        extn = ops.ntt_banks(ext, tb, **kw)
+        d = submod(acc[:k], extn, qcol)
+        return mulmod_shoup(d, pinv, pinv_p, qcol)
 
     return mod_down(acc0), mod_down(acc1)

@@ -2,20 +2,22 @@
 
 Paper architecture -> code mapping:
 
-  INTT unit (8x INTT-128)        -> ``d2.to_coeff()``          (step 1)
-  Mod-up / base extension        -> ``extend_single``          (step 2)
-  NTT banks (8x NTT units)       -> ``.to_ntt()``              (step 2)
-  Dyadic MM/MA arrays            -> ``.mul().add()`` MAC       (step 3)
-  RNS floor (INTT+ext+NTT, MS)   -> ``mod_down_by_last``       (step 4)
+  INTT unit (8x INTT-128)        -> ``RnsPoly.to_coeff`` (banks) (step 1)
+  Mod-up / base extension        -> ``extend_single``            (step 2)
+  NTT banks (8x NTT units)       -> ``RnsPoly.to_ntt`` (banks)   (step 2)
+  Dyadic MM/MA arrays            -> ``.mul().add()`` MAC         (step 3)
+  RNS floor (INTT+ext+NTT, MS)   -> ``mod_down_by_last``         (step 4)
 
-The paper processes the L+1 = 8 digits as 8 pipelined outer iterations
-on 8 parallel NTT banks; here the digit loop is a host loop over
-device-vectorized rows (the mesh supplies spatial parallelism instead,
-see the sce-ntt dry-run config).
+This module is the host-orchestrated *oracle* path: the digit loop is a
+Python loop, but every ring op inside it is already a multi-prime bank
+dispatch (one fused (prime, batch_tile) kernel / vmap per NTT stack —
+see ``kernels.ops``).  The fully fused production path that also folds
+the digit loop into device axes is ``fhe.batched.batched_keyswitch``;
+tests pin the two together bit-exactly.
 """
 from __future__ import annotations
 
-import jax.numpy as jnp
+import numpy as np
 
 from repro.fhe.rns import RnsPoly, extend_single
 
@@ -28,13 +30,10 @@ def mod_down_by_last(x: RnsPoly) -> RnsPoly:
     special prime P and ciphertext rescale by q_l.)"""
     assert x.is_ntt
     last_q = x.primes[-1]
-    import numpy as np
-    from repro.kernels import ops
-    from repro.fhe.rns import prime_params
     # [x]_P : INTT only the last row (one INTT-128 unit in the paper)
-    last_coeff = ops.intt(x.data[-1], prime_params(x.n, last_q), negacyclic=True)
+    last = RnsPoly(x.data[-1:], (last_q,), True).to_coeff()
     rest = x.primes[:-1]
-    ext = extend_single(np.asarray(last_coeff), last_q, rest).to_ntt()
+    ext = extend_single(np.asarray(last.data[0]), last_q, rest).to_ntt()
     diff = x.drop_last().sub(ext)
     inv = {q: pow(last_q, -1, q) for q in rest}
     return diff.mul_scalar_per_prime(inv)
@@ -51,7 +50,6 @@ def keyswitch(d2: RnsPoly, evk: list[tuple[RnsPoly, RnsPoly]],
     full = primes + (special_prime,)
     d2c = d2.to_coeff()                                   # INTT units
     acc0 = acc1 = None
-    import numpy as np
     for i, qi in enumerate(primes):                       # outer loop, Fig 22
         ext = extend_single(np.asarray(d2c.data[i]), qi, full).to_ntt()  # mod-up + NTT banks
         t0 = ext.mul(evk[i][0])                           # dyadic MM

@@ -2,11 +2,17 @@
 variant [35] is what makes a 32-bit datapath sufficient — exactly the
 paper's argument for extending NTT-128 to practical FHE).
 
-An ``RnsPoly`` is a stack of (n,) u32 residue rows, one per prime, in
-either coefficient or NTT (evaluation) form.  Base conversions here are
-*exact* because our digit decomposition uses single-prime digits
-(alpha=1): lifting a centered residue from one 30-bit prime to another
-basis involves no approximation.
+An ``RnsPoly`` is one device-stacked (k, n) u32 array of residue rows,
+one row per prime, in either coefficient or NTT (evaluation) form.  All
+ring ops are single vectorized modmath calls over the full stack — the
+per-prime moduli ride along as (k, 1) broadcast columns — and the
+NTT/iNTT go through the multi-prime "banks" entry points
+(``kernels.ops.ntt_banks``), so k residue rows transform in one fused
+(prime, batch_tile) dispatch instead of a Python per-row loop.
+
+Base conversions here are *exact* because our digit decomposition uses
+single-prime digits (alpha=1): lifting a centered residue from one
+30-bit prime to another basis involves no approximation.
 """
 from __future__ import annotations
 
@@ -16,7 +22,8 @@ import functools
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.modmath import addmod, submod, mulmod_barrett, shoup_precompute, mulmod_shoup
+from repro.core.modmath import (addmod, submod, mulmod_barrett, mulmod_shoup,
+                                shoup_precompute, barrett_precompute)
 from repro.core.params import NTTParams, make_ntt_params, gen_ntt_primes
 from repro.kernels import ops
 
@@ -24,6 +31,23 @@ from repro.kernels import ops
 @functools.lru_cache(maxsize=None)
 def prime_params(n: int, q: int) -> NTTParams:
     return make_ntt_params(n, q=q)
+
+
+@functools.lru_cache(maxsize=None)
+def basis_pack(primes: tuple[int, ...], n: int) -> dict:
+    """Stacked TablePack (see ``fhe.batched``) for a prime basis — the
+    twiddle layout the multi-prime bank kernels consume."""
+    from repro.fhe.batched import build_table_pack
+    return build_table_pack(list(primes), n)
+
+
+@functools.lru_cache(maxsize=None)
+def _basis_consts(primes: tuple[int, ...]):
+    """(k, 1) broadcast columns of q and the Barrett mu per prime."""
+    qs = jnp.asarray(np.array(primes, dtype=np.uint32))[:, None]
+    mus = np.array([barrett_precompute(q) if (1 << 28) < q < (1 << 30) else 0
+                    for q in primes], dtype=np.uint32)
+    return qs, jnp.asarray(mus)[:, None]
 
 
 @dataclasses.dataclass
@@ -37,52 +61,47 @@ class RnsPoly:
     def n(self) -> int:
         return self.data.shape[-1]
 
-    def _zip(self):
-        return zip(self.data, self.primes)
+    @property
+    def _q(self) -> jnp.ndarray:
+        return _basis_consts(self.primes)[0]
 
-    def map2(self, other: "RnsPoly", fn) -> "RnsPoly":
-        assert self.primes == other.primes and self.is_ntt == other.is_ntt
-        rows = [fn(a, b, q) for (a, q), b in zip(self._zip(), other.data)]
-        return RnsPoly(jnp.stack(rows), self.primes, self.is_ntt)
+    def _like(self, data, is_ntt: bool | None = None) -> "RnsPoly":
+        return RnsPoly(data, self.primes,
+                       self.is_ntt if is_ntt is None else is_ntt)
 
     def add(self, other: "RnsPoly") -> "RnsPoly":
-        return self.map2(other, lambda a, b, q: addmod(a, b, jnp.uint32(q)))
+        assert self.primes == other.primes and self.is_ntt == other.is_ntt
+        return self._like(addmod(self.data, other.data, self._q))
 
     def sub(self, other: "RnsPoly") -> "RnsPoly":
-        return self.map2(other, lambda a, b, q: submod(a, b, jnp.uint32(q)))
+        assert self.primes == other.primes and self.is_ntt == other.is_ntt
+        return self._like(submod(self.data, other.data, self._q))
 
     def mul(self, other: "RnsPoly") -> "RnsPoly":
         """Dyadic product — both operands must be in NTT form."""
-        assert self.is_ntt and other.is_ntt
-
-        def f(a, b, q):
-            p = prime_params(self.n, q)
-            return mulmod_barrett(a, b, jnp.uint32(q), jnp.uint32(p.barrett_mu))
-        return self.map2(other, f)
+        assert self.is_ntt and other.is_ntt and self.primes == other.primes
+        qs, mus = _basis_consts(self.primes)
+        return self._like(mulmod_barrett(self.data, other.data, qs, mus))
 
     def mul_scalar_per_prime(self, scalars: dict[int, int]) -> "RnsPoly":
-        rows = []
-        for a, q in self._zip():
-            s = scalars[q] % q
-            rows.append(mulmod_shoup(a, jnp.uint32(s),
-                                     jnp.uint32(shoup_precompute(s, q)), jnp.uint32(q)))
-        return RnsPoly(jnp.stack(rows), self.primes, self.is_ntt)
+        svals = np.array([scalars[q] % q for q in self.primes], dtype=np.uint32)
+        sps = np.array([shoup_precompute(int(s), q)
+                        for s, q in zip(svals, self.primes)], dtype=np.uint32)
+        return self._like(mulmod_shoup(self.data, jnp.asarray(svals)[:, None],
+                                       jnp.asarray(sps)[:, None], self._q))
 
     def neg(self) -> "RnsPoly":
-        rows = [submod(jnp.zeros_like(a), a, jnp.uint32(q)) for a, q in self._zip()]
-        return RnsPoly(jnp.stack(rows), self.primes, self.is_ntt)
+        return self._like(submod(jnp.zeros_like(self.data), self.data, self._q))
 
     def to_ntt(self) -> "RnsPoly":
         assert not self.is_ntt
-        rows = [ops.ntt(a, prime_params(self.n, q), negacyclic=True)
-                for a, q in self._zip()]
-        return RnsPoly(jnp.stack(rows), self.primes, True)
+        t = basis_pack(self.primes, self.n)
+        return self._like(ops.ntt_banks(self.data, t, negacyclic=True), True)
 
     def to_coeff(self) -> "RnsPoly":
         assert self.is_ntt
-        rows = [ops.intt(a, prime_params(self.n, q), negacyclic=True)
-                for a, q in self._zip()]
-        return RnsPoly(jnp.stack(rows), self.primes, False)
+        t = basis_pack(self.primes, self.n)
+        return self._like(ops.intt_banks(self.data, t, negacyclic=True), False)
 
     def drop_last(self) -> "RnsPoly":
         return RnsPoly(self.data[:-1], self.primes[:-1], self.is_ntt)
@@ -93,17 +112,17 @@ class RnsPoly:
 def from_int_coeffs(coeffs, primes: tuple[int, ...], n: int) -> RnsPoly:
     """coeffs: numpy object/int array of (possibly negative) integers."""
     coeffs = np.asarray(coeffs, dtype=object)
-    rows = []
-    for q in primes:
-        rows.append(jnp.asarray((coeffs % q).astype(np.uint64).astype(np.uint32)))
-    return RnsPoly(jnp.stack(rows), tuple(primes), False)
+    rows = np.stack([(coeffs % q).astype(np.uint64).astype(np.uint32)
+                     for q in primes])
+    return RnsPoly(jnp.asarray(rows), tuple(primes), False)
 
 
 def uniform_ntt(rng: np.random.Generator, primes, n: int) -> RnsPoly:
     """Uniform ring element, sampled directly in NTT form (CRT + NTT are
     bijections, so independent uniform residue rows are exactly uniform)."""
-    rows = [jnp.asarray(rng.integers(0, q, size=n, dtype=np.uint32)) for q in primes]
-    return RnsPoly(jnp.stack(rows), tuple(primes), True)
+    rows = np.stack([rng.integers(0, q, size=n, dtype=np.uint32)
+                     for q in primes])
+    return RnsPoly(jnp.asarray(rows), tuple(primes), True)
 
 
 def gaussian_coeffs(rng: np.random.Generator, n: int, sigma: float = 3.2) -> np.ndarray:
@@ -126,10 +145,9 @@ def extend_single(row, src_q: int, dst_primes: tuple[int, ...]):
     """EXACT base conversion of a centered single-prime residue row to
     dst_primes (the alpha=1 'mod-up' of the paper's Fig 22)."""
     c = center_row(np.asarray(row), src_q)
-    rows = []
-    for q in dst_primes:
-        rows.append(jnp.asarray(((c % q) + q) % q).astype(jnp.uint32))
-    return RnsPoly(jnp.stack(rows), tuple(dst_primes), False)
+    rows = np.stack([(((c % q) + q) % q).astype(np.uint32)
+                     for q in dst_primes])
+    return RnsPoly(jnp.asarray(rows), tuple(dst_primes), False)
 
 
 def crt_reconstruct_centered(poly: RnsPoly) -> np.ndarray:

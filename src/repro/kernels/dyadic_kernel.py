@@ -9,6 +9,11 @@ Kernels:
   * ``dyadic_mac``  — acc' = acc + a .* b mod q  (key-switch inner loop:
     the MM/MA array of paper Fig 22, fused so the accumulator never
     leaves VMEM)
+  * ``dyadic_inner_banks`` — out[j] = sum_i ext[i, j] .* evk[i, j] mod
+    q_j: the WHOLE key-switch digit inner product for one prime bank in
+    a single program.  Grid (prime, batch_tile); the digit loop is
+    unrolled inside the kernel so the accumulator stays in VMEM across
+    all digits (the paper's pipelined MM -> MA chain).
 """
 from __future__ import annotations
 
@@ -77,3 +82,42 @@ def dyadic_mul(a, b, *, q: int, mu: int, tile: int = 8, interpret: bool = True):
 def dyadic_mac(acc, a, b, *, q: int, mu: int, tile: int = 8, interpret: bool = True):
     kern = functools.partial(_mac_kernel, q=q, mu=mu)
     return _tile_call(kern, [acc, a, b], tile=tile, interpret=interpret)
+
+
+# ------------------------------------------------ multi-prime inner product
+
+def _inner_banks_kernel(ext_ref, evk_ref, q_ref, mu_ref, o_ref, *, digits: int):
+    """Program (p, i): acc = sum_d ext[d] .* evk[d] mod q_p over all
+    ``digits`` digit rows, accumulator VMEM-resident throughout."""
+    q = q_ref[0, 0]
+    mu = mu_ref[0, 0]
+    acc = _barrett(ext_ref[0, 0], evk_ref[0, 0], q, mu)
+    for d in range(1, digits):
+        prod = _barrett(ext_ref[d, 0], evk_ref[d, 0], q, mu)
+        s = acc + prod
+        acc = jnp.where(s >= q, s - q, s)
+    o_ref[0] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("digits", "tile", "interpret"))
+def dyadic_inner_banks(ext, evk, qs2, mus2, *, digits: int, tile: int = 8,
+                       interpret: bool = True):
+    """ext: (d, k, batch, n) NTT-domain digit extensions; evk: (d, k, n)
+    key digits; qs2/mus2: (k, 1) per-prime modulus/Barrett constants.
+    Returns (k, batch, n): the key-switch accumulator over all digits."""
+    d, k, b, n = ext.shape
+    assert d == digits and b % tile == 0
+    kern = functools.partial(_inner_banks_kernel, digits=digits)
+    return pl.pallas_call(
+        kern,
+        grid=(k, b // tile),
+        in_specs=[
+            pl.BlockSpec((d, 1, tile, n), lambda p, i: (0, p, i, 0)),
+            pl.BlockSpec((d, 1, n), lambda p, i: (0, p, 0)),
+            pl.BlockSpec((1, 1), lambda p, i: (p, 0)),
+            pl.BlockSpec((1, 1), lambda p, i: (p, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, tile, n), lambda p, i: (p, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((k, b, n), jnp.uint32),
+        interpret=interpret,
+    )(ext, evk, qs2, mus2)

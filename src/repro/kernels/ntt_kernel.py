@@ -11,6 +11,32 @@ Twiddles (and their Shoup TW' companions, paper §IV.A) are resident in
 VMEM for all programs; stage t reads row t — the materialized circulating
 CSRM.  All arithmetic is u32 (16-bit-limb mulhi), see core.modmath.
 
+Two kernel families live here:
+
+* Single-prime (``ntt_fwd_pallas`` / ``ntt_inv_pallas``): grid over
+  batch tiles only; the modulus and all derived constants are static.
+
+* Multi-prime "NTT banks" (``ntt_fwd_banks_pallas`` /
+  ``ntt_inv_banks_pallas``): the paper's Fig 22 bank array, where 8 NTT
+  units process the RNS prime rows in parallel.  The grid is
+  ``(prime, batch_tile)`` and the kernels consume the stacked TablePack
+  layout produced by ``fhe.batched.build_table_pack``:
+
+    qs            (k,)        u32 prime moduli (passed as (k, 1) so each
+                              program reads its scalar from row p)
+    tw/twp        (k, s, n/2) forward CG twiddles + Shoup companions;
+                              program (p, i) sees only row p, stage t
+                              reads tw[p, t, :]
+    itw/itwp      (k, s, n/2) inverse twiddles
+    ninv/ninv_p   (k,)        n^-1 per prime (cyclic inverse epilogue)
+    psi/psip      (k, n)      negacyclic psi^i pre-weights
+    ipsin/ipsinp  (k, n)      psi^-i * n^-1 fused post-weights
+
+  Because every per-prime table row is selected by the leading grid
+  coordinate, one ``pallas_call`` runs all k bank rows — no Python
+  per-prime loop, and on TPU the prime axis pipelines through the same
+  double-buffered VMEM machinery as the batch axis.
+
 VMEM budget per program (defaults, n=8192, tile=8):
   coeffs 8*8192*4 = 256 KiB, twiddles 2*13*4096*4 = 416 KiB,
   weights 2*8192*4 = 64 KiB  -> well under the ~16 MiB VMEM/core.
@@ -135,3 +161,97 @@ def ntt_inv_pallas(x, itw, itwp, post, postp, *, q: int, stages: int,
     kern = functools.partial(_ntt_inv_kernel, q=q, stages=stages,
                              negacyclic=negacyclic, ninv=ninv, ninv_p=ninv_p)
     return _grid_call(kern, x, [itw, itwp], [post, postp], tile=tile, interpret=interpret)
+
+
+# ------------------------------------------------ multi-prime NTT banks
+
+def _ntt_fwd_banks_kernel(x_ref, q_ref, tw_ref, twp_ref, pre_ref, prep_ref,
+                          o_ref, *, stages: int, negacyclic: bool):
+    """One bank row: program (p, i) transforms batch tile i under prime
+    row p.  The modulus is a per-program scalar read from q_ref."""
+    qc = q_ref[0, 0]
+    x = x_ref[0]                        # (tile, n)
+    bt, n = x.shape
+    if negacyclic:
+        x = _shoup(x, pre_ref[0], prep_ref[0], qc)
+    for t in range(stages):
+        w = tw_ref[0, t, :]             # (n/2,)
+        wp = twp_ref[0, t, :]
+        lo = x[:, : n // 2]
+        hi = x[:, n // 2:]
+        tt = _shoup(hi, w, wp, qc)
+        u = _addmod(lo, tt, qc)
+        v = _submod(lo, tt, qc)
+        x = jnp.stack([u, v], axis=-1).reshape(bt, n)
+    o_ref[0] = x
+
+
+def _ntt_inv_banks_kernel(x_ref, q_ref, ninv_ref, ninvp_ref, itw_ref, itwp_ref,
+                          post_ref, postp_ref, o_ref, *, stages: int,
+                          negacyclic: bool):
+    qc = q_ref[0, 0]
+    x = x_ref[0]
+    bt, n = x.shape
+    for t in range(stages - 1, -1, -1):
+        w = itw_ref[0, t, :]
+        wp = itwp_ref[0, t, :]
+        pairs = x.reshape(bt, n // 2, 2)
+        e = pairs[..., 0]
+        o = pairs[..., 1]
+        u = _addmod(e, o, qc)
+        v = _shoup(_submod(e, o, qc), w, wp, qc)
+        x = jnp.concatenate([u, v], axis=-1)
+    if negacyclic:
+        x = _shoup(x, post_ref[0], postp_ref[0], qc)    # psi^-i * n^-1 fused
+    else:
+        x = _shoup(x, ninv_ref[0, 0], ninvp_ref[0, 0], qc)
+    o_ref[0] = x
+
+
+def _banks_grid_call(kernel, x, scalars, tables, rows, *, tile: int,
+                     interpret: bool):
+    """Grid (prime, batch_tile).  ``scalars`` are (k, 1) per-prime values,
+    ``tables`` are (k, ...) twiddle stacks, ``rows`` are (k, n) weight
+    rows — every spec selects row p of its stack via the leading grid
+    coordinate, so each program sees exactly its bank's constants."""
+    k, b, n = x.shape
+    assert b % tile == 0
+
+    def row_spec(tail_ndim, shape):
+        return pl.BlockSpec((1,) + shape[1:],
+                            lambda p, i, nd=tail_ndim: (p,) + (0,) * nd)
+
+    in_specs = [pl.BlockSpec((1, tile, n), lambda p, i: (p, i, 0))]
+    in_specs += [pl.BlockSpec((1, 1), lambda p, i: (p, 0)) for _ in scalars]
+    in_specs += [row_spec(t.ndim - 1, t.shape) for t in tables]
+    in_specs += [pl.BlockSpec((1, n), lambda p, i: (p, 0)) for _ in rows]
+    return pl.pallas_call(
+        kernel,
+        grid=(k, b // tile),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, tile, n), lambda p, i: (p, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((k, b, n), jnp.uint32),
+        interpret=interpret,
+    )(x, *scalars, *tables, *rows)
+
+
+@functools.partial(jax.jit, static_argnames=("stages", "negacyclic", "tile", "interpret"))
+def ntt_fwd_banks_pallas(x, qs2, tw, twp, pre, prep, *, stages: int,
+                         negacyclic: bool, tile: int = 8,
+                         interpret: bool = True):
+    """x: (k, batch, n) u32, row i reduced mod qs2[i, 0].
+    qs2: (k, 1); tw/twp: (k, s, n/2); pre/prep: (k, n) psi rows."""
+    kern = functools.partial(_ntt_fwd_banks_kernel, stages=stages,
+                             negacyclic=negacyclic)
+    return _banks_grid_call(kern, x, [qs2], [tw, twp], [pre, prep],
+                            tile=tile, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("stages", "negacyclic", "tile", "interpret"))
+def ntt_inv_banks_pallas(x, qs2, ninv2, ninvp2, itw, itwp, post, postp, *,
+                         stages: int, negacyclic: bool, tile: int = 8,
+                         interpret: bool = True):
+    kern = functools.partial(_ntt_inv_banks_kernel, stages=stages,
+                             negacyclic=negacyclic)
+    return _banks_grid_call(kern, x, [qs2, ninv2, ninvp2], [itw, itwp],
+                            [post, postp], tile=tile, interpret=interpret)

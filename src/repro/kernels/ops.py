@@ -4,6 +4,16 @@ Dispatch policy: Pallas kernels target TPU; on CPU (this container) the
 kernels run in interpret mode for validation, but the *default* hot path
 on non-TPU backends is the pure-jnp reference (same math, faster under
 XLA:CPU).  ``use_pallas=True`` forces the kernel path (tests do this).
+
+Two entry-point families:
+
+* Single-prime (``ntt``/``intt``/``dyadic_mul``/``dyadic_mac``), taking
+  an ``NTTParams`` for one modulus.
+* Multi-prime banks (``ntt_banks``/``intt_banks``/``dyadic_inner_banks``),
+  taking a TablePack dict (see ``fhe.batched``) whose per-prime rows are
+  stacked on axis 0 — the paper's Fig 22 parallel NTT-bank array.  The
+  vmap reference path is the non-TPU default, mirroring the single-prime
+  policy.
 """
 from __future__ import annotations
 
@@ -88,3 +98,89 @@ def dyadic_mac(acc, a, b, p: NTTParams, *, use_pallas: bool | None = None, tile:
     out = dyadic_kernel.dyadic_mac(f(acc), f(a), f(b), q=p.q, mu=p.barrett_mu,
                                    tile=tile, interpret=not _on_tpu())
     return out[:nb].reshape(shape)
+
+
+# ------------------------------------------------ multi-prime NTT banks
+
+def _pad_mid(x3, tile):
+    """Pad the batch (middle) axis of (k, b, n) to a tile multiple."""
+    b = x3.shape[1]
+    pad = (-b) % tile
+    if pad:
+        z = jnp.zeros((x3.shape[0], pad, x3.shape[2]), x3.dtype)
+        x3 = jnp.concatenate([x3, z], axis=1)
+    return x3, b
+
+
+def _rows(t: dict, k: int, *names):
+    """First-k prime rows of the named TablePack entries (so a pack for
+    a superset basis, e.g. basis+special, works on k-row inputs)."""
+    return tuple(t[name][:k] for name in names)
+
+
+def ntt_banks(x, t: dict, *, negacyclic: bool = True,
+              use_pallas: bool | None = None, tile: int = 8):
+    """Batched multi-prime forward NTT.  x: (k, ..., n) u32, row i
+    reduced mod t['qs'][i]; t: TablePack for (at least) those k primes.
+    One fused kernel gridded over (prime, batch_tile) on the Pallas
+    path; a vmap over prime rows on the reference path."""
+    use_pallas = _on_tpu() if use_pallas is None else use_pallas
+    x = jnp.asarray(x)
+    k, n = x.shape[0], x.shape[-1]
+    qs, tw, twp, psi, psip = _rows(t, k, "qs", "tw", "twp", "psi", "psip")
+    if not use_pallas:
+        return ref.ntt_fwd_banks_ref(x, qs, tw, twp, psi, psip, negacyclic)
+    shape = x.shape
+    x3 = x.reshape(k, -1, n)
+    tile = max(1, min(tile, x3.shape[1]))   # don't 8x-pad tiny batches
+    x3, b = _pad_mid(x3, tile)
+    out = ntt_kernel.ntt_fwd_banks_pallas(
+        x3, qs[:, None], tw, twp, psi, psip,
+        stages=tw.shape[1], negacyclic=negacyclic, tile=tile,
+        interpret=not _on_tpu())
+    return out[:, :b].reshape(shape)
+
+
+def intt_banks(x, t: dict, *, negacyclic: bool = True,
+               use_pallas: bool | None = None, tile: int = 8):
+    use_pallas = _on_tpu() if use_pallas is None else use_pallas
+    x = jnp.asarray(x)
+    k, n = x.shape[0], x.shape[-1]
+    qs, ninv, ninv_p, itw, itwp, ipsin, ipsinp = _rows(
+        t, k, "qs", "ninv", "ninv_p", "itw", "itwp", "ipsin", "ipsinp")
+    if not use_pallas:
+        return ref.ntt_inv_banks_ref(x, qs, ninv, ninv_p, itw, itwp,
+                                     ipsin, ipsinp, negacyclic)
+    shape = x.shape
+    x3 = x.reshape(k, -1, n)
+    tile = max(1, min(tile, x3.shape[1]))
+    x3, b = _pad_mid(x3, tile)
+    out = ntt_kernel.ntt_inv_banks_pallas(
+        x3, qs[:, None], ninv[:, None], ninv_p[:, None],
+        itw, itwp, ipsin, ipsinp,
+        stages=itw.shape[1], negacyclic=negacyclic, tile=tile,
+        interpret=not _on_tpu())
+    return out[:, :b].reshape(shape)
+
+
+def dyadic_inner_banks(ext, evk, t: dict, *, use_pallas: bool | None = None,
+                       tile: int = 8):
+    """Fused key-switch inner product: out[j] = sum_i ext[i, j] .* evk[i, j]
+    mod q_j.  ext: (d, k, B, n) NTT-domain digit extensions;
+    evk: (d, k, n) key digits; t: TablePack whose rows align with axis 1."""
+    use_pallas = _on_tpu() if use_pallas is None else use_pallas
+    ext = jnp.asarray(ext)
+    evk = jnp.asarray(evk)
+    assert ext.ndim == 4 and evk.ndim == 3 and ext.shape[1] == t["qs"].shape[0]
+    if not use_pallas:
+        return ref.dyadic_inner_banks_ref(ext, evk, t["qs"], t["mu"])
+    d, k, b, n = ext.shape
+    tile = max(1, min(tile, b))
+    pad = (-b) % tile
+    if pad:
+        z = jnp.zeros((d, k, pad, n), ext.dtype)
+        ext = jnp.concatenate([ext, z], axis=2)
+    out = dyadic_kernel.dyadic_inner_banks(
+        ext, evk, t["qs"][:, None], t["mu"][:, None], digits=d, tile=tile,
+        interpret=not _on_tpu())
+    return out[:, :b]

@@ -5,10 +5,11 @@ kernel tests sweep shapes/dtypes and assert exact equality (integer
 arithmetic — no tolerance needed)."""
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 from repro.core import ntt as _ntt
-from repro.core.modmath import mulmod_barrett, addmod
+from repro.core.modmath import mulmod_barrett, mulmod_shoup, addmod
 from repro.core.params import NTTParams
 
 
@@ -33,3 +34,44 @@ def dyadic_mul_ref(a, b, q: int, mu: int):
 def dyadic_mac_ref(acc, a, b, q: int, mu: int):
     p = mulmod_barrett(jnp.asarray(a), jnp.asarray(b), jnp.uint32(q), jnp.uint32(mu))
     return addmod(jnp.asarray(acc), p, jnp.uint32(q))
+
+
+# ---------------------------------------------- multi-prime bank oracles
+
+def ntt_fwd_banks_ref(x, qs, tw, twp, pre, prep, negacyclic: bool):
+    """vmap over the prime axis: x (k, ..., n), per-prime tables stacked
+    on axis 0 (the TablePack layout).  Same math as the banks kernel."""
+
+    def per(xi, q, twi, twpi, ps, psp):
+        q = jnp.uint32(q)
+        if negacyclic:
+            xi = mulmod_shoup(xi, ps, psp, q)
+        return _ntt.cg_ntt(xi, twi, twpi, q, unroll=2)
+
+    return jax.vmap(per)(x, qs, tw, twp, pre, prep)
+
+
+def ntt_inv_banks_ref(x, qs, ninv, ninv_p, itw, itwp, post, postp,
+                      negacyclic: bool):
+    def per(xi, q, nv, nvp, itwi, itwpi, ips, ipsp):
+        q = jnp.uint32(q)
+        xi = _ntt.cg_intt(xi, itwi, itwpi, 0, 0, q, apply_ninv=False, unroll=2)
+        if negacyclic:
+            return mulmod_shoup(xi, ips, ipsp, q)       # psi^-i * n^-1 fused
+        return mulmod_shoup(xi, nv, nvp, q)
+
+    return jax.vmap(per)(x, qs, ninv, ninv_p, itw, itwp, post, postp)
+
+
+def dyadic_inner_banks_ref(ext, evk, qs, mus):
+    """ext: (d, k, B, n); evk: (d, k, n); qs/mus: (k,).  Accumulates the
+    digit products in the same order as the fused kernel (exact match)."""
+    q = qs[:, None, None]
+    mu = mus[:, None, None]
+    prods = mulmod_barrett(ext, evk[:, :, None, :], q[None], mu[None])
+
+    def body(acc, p):
+        return addmod(acc, p, q), None
+
+    acc, _ = jax.lax.scan(body, prods[0], prods[1:])
+    return acc

@@ -1,0 +1,13 @@
+"""Shared test plumbing.
+
+Puts ``src/`` and ``tests/`` on sys.path so the suite runs with a bare
+``python -m pytest`` (no PYTHONPATH needed), which also lets test
+modules import the ``hypcompat`` optional-hypothesis shim directly.
+"""
+import os
+import sys
+
+_HERE = os.path.dirname(os.path.abspath(__file__))
+for _p in (_HERE, os.path.join(os.path.dirname(_HERE), "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)

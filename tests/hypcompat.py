@@ -1,0 +1,76 @@
+"""Optional-hypothesis shim: property tests without the dependency.
+
+Tier-1 runs on a bare container without ``hypothesis``; CI installs it.
+``from hypcompat import given, settings, st`` resolves to the real
+hypothesis API when available, and otherwise to a deterministic
+fallback that sweeps each strategy over its boundary values plus seeded
+pseudo-random samples.  Tests written against this module therefore run
+in both environments — randomized search under hypothesis, a fixed
+reproducible sweep without it.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import functools
+    import inspect
+
+    import numpy as np
+
+    _DEFAULT_EXAMPLES = 25
+
+    class _IntStrategy:
+        """Deterministic stand-in for ``st.integers(lo, hi)``."""
+
+        def __init__(self, lo: int, hi: int):
+            self.lo, self.hi = int(lo), int(hi)
+
+        def sample(self, i: int, rng: np.random.Generator) -> int:
+            edges = (self.lo, self.hi, (self.lo + self.hi) // 2,
+                     min(self.lo + 1, self.hi), max(self.hi - 1, self.lo))
+            if i < len(edges):
+                return edges[i]
+            # numpy rejects bounds >= 2**64; ours are all well below that
+            return int(rng.integers(self.lo, self.hi, endpoint=True))
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value: int, max_value: int) -> _IntStrategy:
+            return _IntStrategy(min_value, max_value)
+
+    st = _Strategies()
+
+    def settings(max_examples: int = _DEFAULT_EXAMPLES, **_ignored):
+        """Applied above @given; records the sweep length on the wrapper."""
+
+        def deco(f):
+            f._hyp_max_examples = max_examples
+            return f
+
+        return deco
+
+    def given(*arg_strats, **kw_strats):
+        def deco(f):
+            names = list(inspect.signature(f).parameters)
+            mapping = dict(zip(names, arg_strats))
+            mapping.update(kw_strats)
+
+            @functools.wraps(f)
+            def wrapper():
+                n = getattr(wrapper, "_hyp_max_examples", _DEFAULT_EXAMPLES)
+                rng = np.random.default_rng(0x5CE017)
+                for i in range(n):
+                    f(**{k: s.sample(i, rng) for k, s in mapping.items()})
+
+            # pytest must see a zero-arg test, not f's strategy params
+            # (which it would misread as fixtures via __wrapped__)
+            del wrapper.__wrapped__
+            wrapper.__signature__ = inspect.Signature()
+            return wrapper
+
+        return deco

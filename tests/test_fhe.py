@@ -5,6 +5,8 @@ import pytest
 from repro.fhe.ckks import CkksContext
 from repro.fhe import rns
 
+pytestmark = pytest.mark.slow  # excluded from tier-1 (see pytest.ini)
+
 CTX = CkksContext(n=512, levels=3, scale_bits=28, seed=1)
 
 

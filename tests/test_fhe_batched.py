@@ -2,6 +2,7 @@
 the SAME function as the host-orchestrated fhe.rns/keyswitch path."""
 import numpy as np
 import jax.numpy as jnp
+import pytest
 
 from repro.fhe import batched as FB
 from repro.fhe import rns
@@ -35,6 +36,7 @@ def test_extend_matches_host():
     assert np.array_equal(np.asarray(got), np.asarray(want.data))
 
 
+@pytest.mark.slow   # tier-1 equivalent: test_keyswitch_banks (B=1, both paths)
 def test_batched_keyswitch_equals_host():
     """Feed identical random d2/evk data through both implementations."""
     basis = PRIMES[:-1]

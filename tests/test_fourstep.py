@@ -13,6 +13,8 @@ from repro.core.ntt import ntt_cyclic, ntt_negacyclic, intt_negacyclic, negacycl
 from repro.core.modmath import mulmod_np
 from repro.core.params import make_ntt_params
 
+pytestmark = pytest.mark.slow  # excluded from tier-1 (see pytest.ini)
+
 RNG = np.random.default_rng(2024)
 
 

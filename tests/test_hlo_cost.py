@@ -7,6 +7,8 @@ import pytest
 from repro.runtime import hlo_cost
 
 
+pytestmark = pytest.mark.slow  # excluded from tier-1 (see pytest.ini)
+
 def _compile(fn, *args):
     return jax.jit(fn).lower(*args).compile()
 

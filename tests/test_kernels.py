@@ -17,7 +17,8 @@ def _rand(p, batch):
     return RNG.integers(0, p.q, size=(batch, p.n), dtype=np.uint32)
 
 
-@pytest.mark.parametrize("n", [16, 128, 1024, 4096])
+@pytest.mark.parametrize(
+    "n", [16, 128, 1024, pytest.param(4096, marks=pytest.mark.slow)])
 @pytest.mark.parametrize("batch", [1, 8, 13])
 @pytest.mark.parametrize("negacyclic", [False, True])
 def test_ntt_fwd_kernel_sweep(n, batch, negacyclic):
@@ -39,7 +40,8 @@ def test_ntt_inv_kernel_sweep(n, batch, negacyclic):
     assert np.array_equal(got, want)
 
 
-@pytest.mark.parametrize("n", [128, 2048])
+@pytest.mark.parametrize(
+    "n", [128, pytest.param(2048, marks=pytest.mark.slow)])
 def test_kernel_roundtrip(n):
     p = make_ntt_params(n)
     x = _rand(p, 8)

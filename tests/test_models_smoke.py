@@ -10,6 +10,8 @@ from repro.configs import ARCHS, smoke_config, get_config
 from repro.models.model import build_model, padded_vocab
 from repro.models.common import MeshCtx
 
+pytestmark = pytest.mark.slow  # excluded from tier-1 (see pytest.ini)
+
 RNG = np.random.default_rng(0)
 
 

@@ -1,7 +1,7 @@
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypcompat import given, settings, st
 
 from repro.core import modmath as mm
 from repro.core.params import gen_ntt_primes, is_prime

@@ -15,6 +15,8 @@ from repro.models import moe as MOE
 from repro.models.common import MeshCtx, MoECfg
 
 
+pytestmark = pytest.mark.slow  # excluded from tier-1 (see pytest.ini)
+
 def _setup(impl, capacity_factor=8.0, seed=0):
     cfg = smoke_config("qwen3-moe-30b-a3b")
     cfg = dataclasses.replace(cfg, moe=dataclasses.replace(

@@ -2,7 +2,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypcompat import given, settings, st
 
 from repro.core import ntt as N
 from repro.core.params import make_ntt_params, gen_ntt_primes, bitrev_perm
@@ -25,7 +25,8 @@ def test_cg_ntt_matches_brute_force(n):
     assert np.array_equal(got, ref)
 
 
-@pytest.mark.parametrize("n", [128, 1024, 8192])
+@pytest.mark.parametrize(
+    "n", [128, 1024, pytest.param(8192, marks=pytest.mark.slow)])
 def test_roundtrip(n):
     p = make_ntt_params(n)
     a = _rand_poly(p, batch=(4,))

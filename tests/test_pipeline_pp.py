@@ -4,7 +4,10 @@ jax.grad through the pipeline matches sequential gradients."""
 import subprocess
 import sys
 import textwrap
+import pytest
 
+
+pytestmark = pytest.mark.slow  # excluded from tier-1 (see pytest.ini)
 
 def test_pipeline_matches_sequential_subprocess():
     script = textwrap.dedent("""

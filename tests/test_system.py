@@ -5,6 +5,7 @@ quickstart + examples without subprocesses."""
 import numpy as np
 import jax
 import jax.numpy as jnp
+import pytest
 
 from repro.configs import smoke_config
 from repro.core import srm_sim
@@ -19,6 +20,8 @@ from repro.serve.engine import ServeEngine, Request
 from repro.train.loop import train_loop, LoopConfig
 from repro.train.step import TrainConfig
 
+
+pytestmark = pytest.mark.slow  # excluded from tier-1 (see pytest.ini)
 
 def test_paper_pipeline_end_to_end():
     """NTT-128 (device) == SRM hardware sim (cycle-accurate), and the

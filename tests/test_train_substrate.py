@@ -19,6 +19,8 @@ from repro.data.pipeline import DataConfig, TokenPipeline
 from repro.ckpt import checkpoint as ckpt
 
 
+pytestmark = pytest.mark.slow  # excluded from tier-1 (see pytest.ini)
+
 def test_adamw_converges_quadratic():
     c = adamw.AdamWConfig(lr=0.1, weight_decay=0.0, schedule="const", warmup_steps=0)
     params = {"w": jnp.array([5.0, -3.0])}
