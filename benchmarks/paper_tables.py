@@ -7,8 +7,13 @@
                       latency, 531.25M NTT/s @34 GHz)
   fig21_large_ntt     2^14-point four-step latency model (§IX, 482 ns)
                       + functional four-step == direct check
+  ntt_fourstep_2_14   the large-N production path: 2^14 four-step on the
+                      multi-prime banks kernels (forward+inverse
+                      throughput over an RNS basis; §IX workload)
   fig22_keyswitch     key-switch cycle model (20,800 cycles -> 1.63M/s
                       vs HEAX 2,616/s) + measured CKKS key-switch
+  keyswitch_banks_2_14  bank-parallel key switch at the 2^14 ring through
+                      the four-step pack (fsp) dispatch
   validation_1e5      scaled version of §VII.C's 1e5 random-NTT check
 
 Each function returns a list of (name, us_per_call, derived) rows.
@@ -120,6 +125,34 @@ def fig21_large_ntt():
     ]
 
 
+def ntt_fourstep_2_14():
+    """§IX production path: N = 2^14 = 128 x 128 over a k-prime RNS
+    basis, both passes + fused twiddle on the banks kernels (vmap
+    reference path on CPU; the Pallas grid on TPU)."""
+    from repro.core.params import gen_ntt_primes
+    from repro.fhe import batched as FB
+    from repro.kernels import ops
+
+    n, k, B = 1 << 14, 2, 4
+    primes = gen_ntt_primes(k, n, bits=30)
+    fp = FB.build_fourstep_pack(primes, n)
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(np.stack([rng.integers(0, q, (B, n), dtype=np.uint32)
+                              for q in primes]))
+    fwd = jax.jit(lambda x: ops.ntt_fourstep_banks(x, fp))
+    inv = jax.jit(lambda x: ops.intt_fourstep_banks(x, fp))
+    t_f = _time(fwd, x)
+    y = fwd(x)
+    t_i = _time(inv, y)
+    ok = np.array_equal(np.asarray(inv(y)), np.asarray(x))
+    per = t_f / (k * B)
+    return [
+        ("ntt_fourstep_2_14_fwd_us", t_f, f"k={k} B={B} ({per:.1f} us/NTT)"),
+        ("ntt_fourstep_2_14_inv_us", t_i,
+         f"roundtrip={'OK' if ok else 'FAIL'}"),
+    ]
+
+
 # -------------------------------------------------------------- Fig 22
 
 def fig22_keyswitch():
@@ -176,6 +209,37 @@ def keyswitch_banks():
     ]
 
 
+def keyswitch_banks_2_14():
+    """Large-N key switch: the fused Fig 22 pipeline at the paper's 2^14
+    ring, every transform through the four-step banks dispatch (fsp).
+    Together with ``keyswitch_banks`` (n=1024) this brackets the
+    throughput trajectory toward the 1.63M keyswitch/s SCE target."""
+    from repro.core.params import gen_ntt_primes
+    from repro.fhe import batched as FB
+
+    n, k, B = 1 << 14, 2, 2
+    primes = gen_ntt_primes(k + 1, n, bits=30)
+    t = FB.build_scalar_pack(primes)       # twiddles live in fsp
+    fsp = FB.build_fourstep_pack(primes, n)
+    rng = np.random.default_rng(6)
+    d2 = np.stack([rng.integers(0, q, (B, n), dtype=np.uint32)
+                   for q in primes[:k]])
+    evk_b = np.stack([np.stack([rng.integers(0, q, n, dtype=np.uint32)
+                                for q in primes]) for _ in range(k)])
+    evk_a = np.stack([np.stack([rng.integers(0, q, n, dtype=np.uint32)
+                                for q in primes]) for _ in range(k)])
+
+    f = jax.jit(lambda d, eb, ea: FB.batched_keyswitch(d, eb, ea, t, fsp=fsp))
+    args = (jnp.asarray(d2), jnp.asarray(evk_b), jnp.asarray(evk_a))
+    t_us = _time(f, *args)
+    per_ct = t_us / B
+    return [
+        ("keyswitch_banks_2_14_batch_us", t_us, f"n={n} k={k} B={B}"),
+        ("keyswitch_banks_2_14_throughput", per_ct,
+         f"{1e6 / per_ct:.0f} keyswitch/s on CPU at the paper's ring size"),
+    ]
+
+
 # ---------------------------------------------------------- validation
 
 def validation_1e5():
@@ -198,9 +262,11 @@ def validation_1e5():
              f"oracle512={'OK' if ok else 'FAIL'} deterministic={'OK' if det else 'FAIL'}")]
 
 
-ALL = [table2_mulmod, table3_ntt128, fig21_large_ntt, fig22_keyswitch,
-       keyswitch_banks, validation_1e5]
+ALL = [table2_mulmod, table3_ntt128, fig21_large_ntt, ntt_fourstep_2_14,
+       fig22_keyswitch, keyswitch_banks, keyswitch_banks_2_14,
+       validation_1e5]
 
-# fast subset for CI / --smoke: NTT-128 rows + the bank-parallel
-# keyswitch throughput datapoint
-SMOKE = [table3_ntt128, keyswitch_banks]
+# fast subset for CI / --smoke: NTT-128 rows, the bank-parallel keyswitch
+# throughput datapoint, and the large-N (2^14) four-step + keyswitch rows
+SMOKE = [table3_ntt128, keyswitch_banks, ntt_fourstep_2_14,
+         keyswitch_banks_2_14]

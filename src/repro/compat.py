@@ -1,0 +1,38 @@
+"""Version-portable wrappers for JAX APIs that moved between releases.
+
+The repo targets current ``jax[cpu]`` in CI but must also run on older
+containers (e.g. 0.4.x) where ``jax.shard_map`` still lives in
+``jax.experimental.shard_map`` and ``jax.set_mesh`` does not exist yet.
+Everything multi-device in this codebase goes through these two shims so
+the sharded paths (four-step reorder network, MoE, pipeline parallel)
+work on both.
+"""
+from __future__ import annotations
+
+import jax
+
+try:  # jax >= 0.6 top-level API
+    _shard_map = jax.shard_map
+except AttributeError:  # pragma: no cover - exercised on old containers
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+
+def shard_map(f, *, mesh, in_specs, out_specs):
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+
+
+def pcast_varying(x, axis: str):
+    """``jax.lax.pcast(x, (axis,), to="varying")`` on new jax.  Old jax
+    has no varying-type system — every shard_map value is already
+    device-varying, so the cast is the identity there."""
+    if hasattr(jax.lax, "pcast"):
+        return jax.lax.pcast(x, (axis,), to="varying")
+    return x
+
+
+def use_mesh(mesh):
+    """``with use_mesh(mesh):`` — ``jax.set_mesh`` where available,
+    otherwise the (older) Mesh context-manager protocol."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh

@@ -11,11 +11,18 @@ the four-step (Bailey) decomposition with N = N1*N2:
   4. NTT_N2 along rows (root w^N1)               -> D[k1, k2]
   and A_hat[k2*N1 + k1] = D[k1, k2].
 
-On a TPU mesh, the paper's "K NTT-128 units + reorder network" becomes:
-columns sharded across chips -> local column NTTs + local twiddle ->
-**all-to-all** (the reorder network, one ICI collective) -> local row
-NTTs.  ``fourstep_ntt_sharded`` is the shard_map implementation; the
-local version is the oracle.
+On one device, ``fourstep_ntt``/``fourstep_intt`` dispatch both NTT
+passes to the fused multi-prime banks kernels (``kernels.ops``): the N2
+columns (then N1 rows) fold into the kernel batch so each pass is one
+(prime, batch_tile) grid, and the step-3 twiddle correction runs as the
+fused ``twiddle_mul_banks`` kernel — the software form of the paper's
+"K NTT-128 units + reorder network".  Off-TPU the same entry points
+fall back to the vmap reference path (see ``kernels.ops`` policy).
+
+On a TPU mesh the reorder network becomes a collective: columns sharded
+across chips -> local column NTTs + local twiddle -> **all-to-all** (one
+ICI collective) -> local row NTTs.  ``fourstep_ntt_sharded`` is the
+shard_map implementation; the local version is the oracle.
 
 The negacyclic wrap (for the FHE ring Z_q[x]/(x^N+1)) pre/post-weights
 with psi powers exactly like the single-kernel path.
@@ -30,25 +37,17 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core.modmath import mulmod_shoup, shoup_precompute
 from repro.core.ntt import cg_ntt, cg_intt
 from repro.core.params import NTTParams, make_ntt_params, root_of_unity, bitrev_perm
-
-
-def _unbitrev(x, n: int):
-    """Static inverse-bitrev gather -> natural frequency order."""
-    perm = np.argsort(bitrev_perm(n))
-    return x[..., perm]
+from repro.kernels import ops
 
 
 def ntt_natural(x, p: NTTParams):
-    return _unbitrev(cg_ntt(x, jnp.asarray(p.tw), jnp.asarray(p.twp), p.q), p.n)
-
-
-def intt_natural(x, p: NTTParams):
-    perm = bitrev_perm(p.n)
-    return cg_intt(x[..., perm], jnp.asarray(p.itw), jnp.asarray(p.itwp),
-                   p.ninv, p.ninv_p, p.q)
+    """Cyclic CG-NTT permuted to natural frequency order (bitrev is an
+    involution, so the same static gather converts either way)."""
+    return cg_ntt(x, jnp.asarray(p.tw), jnp.asarray(p.twp), p.q)[..., bitrev_perm(p.n)]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -121,38 +120,51 @@ def make_fourstep_params(n1: int, n2: int, q: int | None = None,
 
 # --------------------------------------------------------------- local
 
-def fourstep_ntt(a, fsp: FourStepParams, negacyclic: bool = False):
+@functools.lru_cache(maxsize=None)
+def _banks_pack(n1: int, n2: int, q: int) -> dict:
+    """Single-prime (k=1) FourStepPack for the banks pipeline."""
+    from repro.fhe.batched import fourstep_pack_from_params
+    return fourstep_pack_from_params([make_fourstep_params(n1, n2, q)])
+
+
+def fourstep_ntt(a, fsp: FourStepParams, negacyclic: bool = False, *,
+                 use_pallas: bool | None = None, tile: int = 8):
     """a: (..., n) u32 -> natural-order NTT via the four-step path.
-    This is the functional model of the paper's Fig 21 schedule."""
-    q = jnp.uint32(fsp.q)
-    x = a.reshape(a.shape[:-1] + (fsp.n1, fsp.n2))
-    if negacyclic:
-        x = mulmod_shoup(x, jnp.asarray(fsp.psi_mat), jnp.asarray(fsp.psi_mat_p), q)
-    # pass 1: column NTTs (the first bank of NTT-128 units)
-    xt = jnp.swapaxes(x, -1, -2)                  # (..., n2, n1)
-    xt = ntt_natural(xt, fsp.p1)
-    x = jnp.swapaxes(xt, -1, -2)                  # B[k1, j2]
-    # twiddle correction
-    x = mulmod_shoup(x, jnp.asarray(fsp.tw_mat), jnp.asarray(fsp.tw_mat_p), q)
-    # pass 2: row NTTs (the second bank)
-    x = ntt_natural(x, fsp.p2)                    # D[k1, k2]
-    # readout: A_hat[k2*n1 + k1] = D[k1, k2]
-    out = jnp.swapaxes(x, -1, -2).reshape(a.shape)
-    return out
+
+    The functional model of the paper's Fig 21 schedule, dispatched to
+    the fused banks kernels: both passes and the step-3 twiddle run
+    through ``kernels.ops.{ntt_banks,twiddle_mul_banks}`` as a k=1 bank
+    row (vmap reference off-TPU, Pallas grid on TPU)."""
+    fp = _banks_pack(fsp.n1, fsp.n2, fsp.q)
+    return ops.ntt_fourstep_banks(jnp.asarray(a)[None], fp,
+                                  negacyclic=negacyclic,
+                                  use_pallas=use_pallas, tile=tile)[0]
 
 
-def fourstep_intt(A, fsp: FourStepParams, negacyclic: bool = False):
-    q = jnp.uint32(fsp.q)
-    x = A.reshape(A.shape[:-1] + (fsp.n2, fsp.n1))
-    x = jnp.swapaxes(x, -1, -2)                   # D[k1, k2]
-    x = intt_natural(x, fsp.p2)
-    x = mulmod_shoup(x, jnp.asarray(fsp.itw_mat), jnp.asarray(fsp.itw_mat_p), q)
-    xt = jnp.swapaxes(x, -1, -2)
-    xt = intt_natural(xt, fsp.p1)
-    x = jnp.swapaxes(xt, -1, -2)                  # (n1, n2); 1/n1*1/n2 = 1/n done
-    if negacyclic:
-        x = mulmod_shoup(x, jnp.asarray(fsp.ipsi_mat), jnp.asarray(fsp.ipsi_mat_p), q)
-    return x.reshape(A.shape)
+def fourstep_intt(A, fsp: FourStepParams, negacyclic: bool = False, *,
+                  use_pallas: bool | None = None, tile: int = 8):
+    fp = _banks_pack(fsp.n1, fsp.n2, fsp.q)
+    return ops.intt_fourstep_banks(jnp.asarray(A)[None], fp,
+                                   negacyclic=negacyclic,
+                                   use_pallas=use_pallas, tile=tile)[0]
+
+
+def fourstep_schedule(n1: int, n2: int) -> dict:
+    """Static structure of the §IX schedule — what runs in each pass.
+
+    Used by tests to cross-validate ``srm_sim.large_ntt_cycles`` (the
+    paper's analytic 2^14 model: two passes, each a batch of 128 NTT-128
+    transforms through 128 units) against the actual four-step pipeline
+    shape, and by the dry-run cells to size the reorder collective."""
+    return {
+        "passes": 2,
+        # pass 1 runs one NTT-N1 per column, pass 2 one NTT-N2 per row
+        "transforms_per_pass": (n2, n1),
+        "transform_sizes": (n1, n2),
+        "butterfly_cycles_per_pass": (n2 * (n1 // 2), n1 * (n2 // 2)),
+        "reorders": 1,                  # the inter-pass transpose/all-to-all
+        "twiddle_muls": n1 * n2,        # fused step-3 correction
+    }
 
 
 # ------------------------------------------------------------- sharded
@@ -169,7 +181,7 @@ def fourstep_ntt_sharded(a2d, fsp: FourStepParams, mesh, axis: str = "model",
     q = jnp.uint32(fsp.q)
     tw1 = jnp.asarray(fsp.p1.tw)
     tw1p = jnp.asarray(fsp.p1.twp)
-    perm1 = np.argsort(bitrev_perm(fsp.n1))
+    perm1 = bitrev_perm(fsp.n1)             # involution: bitrev->natural
 
     def local(x, twm, twmp, psim, psimp):
         # x: (n1, n2/D) local block
@@ -186,7 +198,7 @@ def fourstep_ntt_sharded(a2d, fsp: FourStepParams, mesh, axis: str = "model",
 
     spec_cols = P(None, axis)
     spec_rows = P(axis, None)
-    fn = jax.shard_map(
+    fn = shard_map(
         local, mesh=mesh,
         in_specs=(spec_cols, spec_cols, spec_cols, spec_cols, spec_cols),
         out_specs=spec_rows)

@@ -103,6 +103,17 @@ def bitrev_perm(n: int) -> np.ndarray:
     return np.array([bitrev(i, s) for i in range(n)], dtype=np.int64)
 
 
+def fourstep_split(n: int) -> tuple[int, int]:
+    """Balanced (n1, n2) power-of-two factorization for the four-step
+    decomposition, n1 >= n2 (paper §IX: 2^14 = 128 x 128).  The column
+    pass then runs n2 transforms of the larger factor, matching the
+    paper's bank of NTT-N1 units."""
+    s = n.bit_length() - 1
+    assert n == 1 << s, "four-step split expects a power of two"
+    n1 = 1 << (s - s // 2)
+    return n1, n // n1
+
+
 def cg_twiddle_exponents(n: int) -> np.ndarray:
     """(log2 n, n/2) exponent table for the Pease CG-DIT network.
 

@@ -12,6 +12,20 @@ Table pack layout for a basis of ``k`` primes over ring n:
   ninv/ninv_p (k,)       n^-1 per prime
   psi/psip, ipsin/ipsinp (k, n)  negacyclic weights (ipsin folds n^-1)
   mu      (k,)  u32      Barrett constants (dyadic ct x ct products)
+
+FourStepPack layout (``build_fourstep_pack``) for large N = N1*N2 — the
+factor tables the §IX four-step banks pipeline consumes
+(``kernels.ops.ntt_fourstep_banks``):
+  qs        (k,)  u32    prime moduli
+  pack1     TablePack dict for the N1 column transform, whose psi is
+                         the big transform's psi^N2 (so omega1 = w^N2)
+  pack2     TablePack dict for the N2 row transform (psi^N1)
+  tw/twp    (k, n)       step-3 twiddle correction w^(j2*k1), flattened
+                         [k1*N2 + j2] to match the inter-pass layout
+  itw/itwp  (k, n)       its inverse
+  psi/psip  (k, n)       negacyclic psi^i pre-weights (natural order)
+  ipsi/ipsip(k, n)       psi^-i post-weights (NO n^-1 fold: the two
+                         sub-iNTT passes already contribute 1/N1 * 1/N2)
 """
 from __future__ import annotations
 
@@ -64,9 +78,17 @@ def table_pack_shapes(k: int, n: int):
 
 
 def build_table_pack(primes: list[int], n: int) -> dict:
+    return pack_from_ntt_params([make_ntt_params(n, q=q) for q in primes])
+
+
+def pack_from_ntt_params(params: list) -> dict:
+    """Stack per-prime ``NTTParams`` rows into the TablePack layout.  The
+    pinv rows treat the last prime as the special P (key-switch mod-down);
+    for packs that are not key-switch bases they simply ride along."""
     rows = {k: [] for k in table_pack_shapes(1, 1)}
-    for q in primes:
-        p = make_ntt_params(n, q=q)
+    primes = [p.q for p in params]
+    for p in params:
+        q = p.q
         rows["qs"].append(np.uint32(q))
         rows["tw"].append(p.tw)
         rows["twp"].append(p.twp)
@@ -79,12 +101,75 @@ def build_table_pack(primes: list[int], n: int) -> dict:
         rows["ipsin"].append(p.ipsi_ninv)
         rows["ipsinp"].append(p.ipsi_ninv_p)
         rows["mu"].append(np.uint32(barrett_precompute(q)))
-    P = primes[-1]
-    for q in (primes[:-1] if len(primes) > 1 else primes):
-        inv = pow(P, -1, q) if q != P else 1
-        rows["pinv"].append(np.uint32(inv))
-        rows["pinv_p"].append(np.uint32(shoup_precompute(inv, q)))
+    pinv, pinv_p = _pinv_rows(primes)
+    rows["pinv"], rows["pinv_p"] = list(pinv), list(pinv_p)
     return {k: jnp.asarray(np.stack(v)) for k, v in rows.items()}
+
+
+def _pinv_rows(primes) -> tuple[np.ndarray, np.ndarray]:
+    """P^-1 mod q_j rows (last prime = the special P) + Shoup companions
+    — the mod-down convention, shared by every pack builder."""
+    P = primes[-1]
+    src = primes[:-1] if len(primes) > 1 else primes
+    pinv = np.array([pow(P, -1, q) if q != P else 1 for q in src],
+                    dtype=np.uint32)
+    pinv_p = np.array([shoup_precompute(int(v), q)
+                       for v, q in zip(pinv, src)], dtype=np.uint32)
+    return pinv, pinv_p
+
+
+def build_scalar_pack(primes: list[int]) -> dict:
+    """Just the per-prime scalar rows of a TablePack (qs/mu/pinv/pinv_p).
+    ``batched_keyswitch(fsp=...)`` never touches the size-n twiddle
+    tables of ``t`` — the four-step pack carries its own — so large-N
+    callers can pass this instead of paying a full ``build_table_pack``
+    (which costs O(n log n) host modexps per prime)."""
+    qs = np.array(primes, dtype=np.uint32)
+    mu = np.array([barrett_precompute(q) for q in primes], dtype=np.uint32)
+    pinv, pinv_p = _pinv_rows(primes)
+    return {k: jnp.asarray(v) for k, v in
+            {"qs": qs, "mu": mu, "pinv": pinv, "pinv_p": pinv_p}.items()}
+
+
+def fourstep_pack_from_params(fsps: list) -> dict:
+    """Stack per-prime ``core.fourstep.FourStepParams`` into the
+    FourStepPack layout (see module docstring)."""
+    def flat(name):
+        return jnp.asarray(np.stack(
+            [np.asarray(getattr(f, name)).reshape(-1) for f in fsps]))
+
+    return {
+        "qs": jnp.asarray(np.array([f.q for f in fsps], dtype=np.uint32)),
+        "pack1": pack_from_ntt_params([f.p1 for f in fsps]),
+        "pack2": pack_from_ntt_params([f.p2 for f in fsps]),
+        "tw": flat("tw_mat"), "twp": flat("tw_mat_p"),
+        "itw": flat("itw_mat"), "itwp": flat("itw_mat_p"),
+        "psi": flat("psi_mat"), "psip": flat("psi_mat_p"),
+        "ipsi": flat("ipsi_mat"), "ipsip": flat("ipsi_mat_p"),
+    }
+
+
+def build_fourstep_pack(primes: list[int], n: int, n1: int | None = None,
+                        n2: int | None = None) -> dict:
+    """FourStepPack for a prime basis over ring n = n1*n2 (defaults to the
+    balanced ``params.fourstep_split``).  Building this costs two small
+    ``make_ntt_params`` per prime plus O(n) host twiddle tables — far
+    cheaper than a full size-n parameter build."""
+    from repro.core.fourstep import make_fourstep_params
+    from repro.core.params import fourstep_split
+    if n1 is None or n2 is None:
+        n1, n2 = fourstep_split(n)
+    assert n1 * n2 == n
+    return fourstep_pack_from_params(
+        [make_fourstep_params(n1, n2, q) for q in primes])
+
+
+def slice_fourstep_pack(fp: dict, rows) -> dict:
+    """View of a FourStepPack restricted to prime rows ``rows``."""
+    flat = ("qs", "tw", "twp", "itw", "itwp", "psi", "psip", "ipsi", "ipsip")
+    return {"pack1": slice_pack(fp["pack1"], rows),
+            "pack2": slice_pack(fp["pack2"], rows),
+            **{k: fp[k][rows] for k in flat}}
 
 
 # ------------------------------------------------ per-prime primitives
@@ -128,7 +213,7 @@ def slice_pack(t: dict, rows) -> dict:
     return {k: (v if k in basis_relative else v[rows]) for k, v in t.items()}
 
 
-def batched_keyswitch(d2, evk_b, evk_a, t: dict, *,
+def batched_keyswitch(d2, evk_b, evk_a, t: dict, *, fsp: dict | None = None,
                       use_pallas: bool | None = None, tile: int = 8):
     """Paper Fig 22 pipeline, vectorized over a ciphertext batch AND the
     RNS prime rows — the bank-parallel production path.
@@ -136,6 +221,14 @@ def batched_keyswitch(d2, evk_b, evk_a, t: dict, *,
     d2:      (k, B, n) u32, NTT form over the k-prime basis (digit rows)
     evk_b/a: (k, k+1, n) key-switch key digits over basis+special
     t:       TablePack for k+1 primes (row k = the special prime P)
+    fsp:     optional FourStepPack for the same k+1 primes — when given,
+             every NTT/iNTT stage dispatches through the large-N
+             four-step banks pipeline (``ops.ntt_fourstep_banks``)
+             instead of the single fused kernel.  Required for rings
+             past the single-kernel tile budget (n >= ops.FOURSTEP_MIN_N);
+             d2 and the evk digits must then hold natural-order NTT rows
+             (the four-step convention), and ``t`` may be the cheap
+             ``build_scalar_pack`` (its twiddle tables go unused).
     Returns (ks0, ks1): (k, B, n) over the original basis.
 
     Every stage is one multi-prime dispatch (see ``kernels.ops``): the
@@ -149,13 +242,22 @@ def batched_keyswitch(d2, evk_b, evk_a, t: dict, *,
     kp1 = k + 1
     kw = dict(use_pallas=use_pallas, tile=tile)
     tb = slice_pack(t, slice(0, k))
+    fs_last = slice_fourstep_pack(fsp, slice(k, kp1)) if fsp is not None else None
 
-    ci = ops.intt_banks(d2, tb, **kw)                         # INTT units
+    def fwd(x, pack, fpk):
+        return (ops.ntt_fourstep_banks(x, fpk, **kw) if fpk is not None
+                else ops.ntt_banks(x, pack, **kw))
+
+    def inv(x, pack, fpk):
+        return (ops.intt_fourstep_banks(x, fpk, **kw) if fpk is not None
+                else ops.intt_banks(x, pack, **kw))
+
+    ci = inv(d2, tb, fsp)                                     # INTT units
     ext = jax.vmap(lambda c, q: extend_centered(c, q, t["qs"])
                    )(ci, t["qs"][:k])                         # mod-up: (k, k+1, B, n)
     # NTT banks: fold the digit axis into the batch so all k*(k+1)
     # transforms run in ONE (prime, batch_tile) grid.
-    y = ops.ntt_banks(ext.transpose(1, 0, 2, 3), t, **kw)     # (k+1, k, B, n)
+    y = fwd(ext.transpose(1, 0, 2, 3), t, fsp)                # (k+1, k, B, n)
     y = y.transpose(1, 0, 2, 3)                               # (digit, prime, B, n)
     acc0 = ops.dyadic_inner_banks(y, evk_b, t, **kw)          # MM/MA arrays
     acc1 = ops.dyadic_inner_banks(y, evk_a, t, **kw)
@@ -165,9 +267,9 @@ def batched_keyswitch(d2, evk_b, evk_a, t: dict, *,
     pinv_p = t["pinv_p"][:, None, None]
 
     def mod_down(acc):                                        # RNS floor + MS
-        lastc = ops.intt_banks(acc[k:], slice_pack(t, slice(k, kp1)), **kw)
+        lastc = inv(acc[k:], slice_pack(t, slice(k, kp1)), fs_last)
         ext = extend_centered(lastc[0], t["qs"][k], t["qs"][:k])
-        extn = ops.ntt_banks(ext, tb, **kw)
+        extn = fwd(ext, tb, fsp)
         d = submod(acc[:k], extn, qcol)
         return mulmod_shoup(d, pinv, pinv_p, qcol)
 

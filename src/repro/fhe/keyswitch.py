@@ -14,6 +14,14 @@ dispatch (one fused (prime, batch_tile) kernel / vmap per NTT stack —
 see ``kernels.ops``).  The fully fused production path that also folds
 the digit loop into device axes is ``fhe.batched.batched_keyswitch``;
 tests pin the two together bit-exactly.
+
+Large-N dispatch: at ring sizes n >= ``kernels.ops.FOURSTEP_MIN_N``
+(2^13), every ``RnsPoly`` transform below automatically routes through
+the §IX four-step banks pipeline (natural-order NTT rows); the fused
+path takes the matching FourStepPack via ``batched_keyswitch(fsp=...)``.
+Both sides of the oracle pin switch conventions together, so key
+switching at the paper's 2^14 ring runs end to end on the large-N
+kernels (see tests/test_fourstep_banks.py).
 """
 from __future__ import annotations
 

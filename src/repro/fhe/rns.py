@@ -42,6 +42,15 @@ def basis_pack(primes: tuple[int, ...], n: int) -> dict:
 
 
 @functools.lru_cache(maxsize=None)
+def fourstep_basis_pack(primes: tuple[int, ...], n: int) -> dict:
+    """FourStepPack for a prime basis — the factor-table layout of the
+    large-N four-step banks pipeline (rings with n >= ops.FOURSTEP_MIN_N
+    dispatch through it; see ``RnsPoly.to_ntt``)."""
+    from repro.fhe.batched import build_fourstep_pack
+    return build_fourstep_pack(list(primes), n)
+
+
+@functools.lru_cache(maxsize=None)
 def _basis_consts(primes: tuple[int, ...]):
     """(k, 1) broadcast columns of q and the Barrett mu per prime."""
     qs = jnp.asarray(np.array(primes, dtype=np.uint32))[:, None]
@@ -94,12 +103,29 @@ class RnsPoly:
         return self._like(submod(jnp.zeros_like(self.data), self.data, self._q))
 
     def to_ntt(self) -> "RnsPoly":
+        """Negacyclic NTT of every residue row in one banks dispatch.
+
+        Large-N dispatch rule: rings with n >= ``ops.FOURSTEP_MIN_N``
+        (2^13, past the single-kernel tile budget) go through the §IX
+        four-step banks pipeline and hold *natural-order* NTT rows;
+        smaller rings use the single fused kernel (bitrev order).  The
+        order is an internal convention per ring size — to_coeff, the
+        dyadic ops and key switching all stay inside one convention, so
+        the two never mix."""
         assert not self.is_ntt
+        if self.n >= ops.FOURSTEP_MIN_N:
+            fp = fourstep_basis_pack(self.primes, self.n)
+            return self._like(
+                ops.ntt_fourstep_banks(self.data, fp, negacyclic=True), True)
         t = basis_pack(self.primes, self.n)
         return self._like(ops.ntt_banks(self.data, t, negacyclic=True), True)
 
     def to_coeff(self) -> "RnsPoly":
         assert self.is_ntt
+        if self.n >= ops.FOURSTEP_MIN_N:
+            fp = fourstep_basis_pack(self.primes, self.n)
+            return self._like(
+                ops.intt_fourstep_banks(self.data, fp, negacyclic=True), False)
         t = basis_pack(self.primes, self.n)
         return self._like(ops.intt_banks(self.data, t, negacyclic=True), False)
 

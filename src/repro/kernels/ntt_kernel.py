@@ -17,8 +17,9 @@ Two kernel families live here:
   batch tiles only; the modulus and all derived constants are static.
 
 * Multi-prime "NTT banks" (``ntt_fwd_banks_pallas`` /
-  ``ntt_inv_banks_pallas``): the paper's Fig 22 bank array, where 8 NTT
-  units process the RNS prime rows in parallel.  The grid is
+  ``ntt_inv_banks_pallas``, plus the four-step step-3 companion
+  ``twiddle_mul_banks_pallas``): the paper's Fig 22 bank array, where 8
+  NTT units process the RNS prime rows in parallel.  The grid is
   ``(prime, batch_tile)`` and the kernels consume the stacked TablePack
   layout produced by ``fhe.batched.build_table_pack``:
 
@@ -255,3 +256,23 @@ def ntt_inv_banks_pallas(x, qs2, ninv2, ninvp2, itw, itwp, post, postp, *,
                              negacyclic=negacyclic)
     return _banks_grid_call(kern, x, [qs2, ninv2, ninvp2], [itw, itwp],
                             [post, postp], tile=tile, interpret=interpret)
+
+
+# ------------------------------------------- four-step twiddle multiply
+
+def _twiddle_mul_banks_kernel(x_ref, q_ref, w_ref, wp_ref, o_ref):
+    """Step 3 of the four-step schedule (paper §IX): the pointwise
+    w^(j2*k1) correction between the column and row NTT passes, fused as
+    one (prime, batch_tile) Shoup multiply.  The same kernel applies the
+    negacyclic psi^i pre-weights / psi^-i post-weights, which share the
+    per-prime (k, n) weight-row layout."""
+    o_ref[0] = _shoup(x_ref[0], w_ref[0], wp_ref[0], q_ref[0, 0])
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def twiddle_mul_banks_pallas(x, qs2, w, wp, *, tile: int = 8,
+                             interpret: bool = True):
+    """x: (k, batch, n) u32; qs2: (k, 1); w/wp: (k, n) weight rows +
+    Shoup companions.  out[p, i, :] = x[p, i, :] * w[p, :] mod qs[p]."""
+    return _banks_grid_call(_twiddle_mul_banks_kernel, x, [qs2], [], [w, wp],
+                            tile=tile, interpret=interpret)

@@ -17,12 +17,21 @@ Two entry-point families:
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.params import NTTParams
+from repro.core.params import NTTParams, bitrev_perm
 from repro.kernels import ntt_kernel, dyadic_kernel, ref
+
+# Single-kernel tile budget: below this ring size the whole log2(n)-stage
+# transform runs as ONE fused banks kernel; at or above it the large-N
+# four-step pipeline (``ntt_fourstep_banks``) takes over — two batched
+# banks passes + the fused twiddle-correction kernel (paper §IX, and the
+# ROADMAP "every FHE workload with N >= 2^13" north star).
+FOURSTEP_MIN_N = 1 << 13
 
 
 def _on_tpu() -> bool:
@@ -161,6 +170,116 @@ def intt_banks(x, t: dict, *, negacyclic: bool = True,
         stages=itw.shape[1], negacyclic=negacyclic, tile=tile,
         interpret=not _on_tpu())
     return out[:, :b].reshape(shape)
+
+
+def twiddle_mul_banks(x, w, wp, qs, *, use_pallas: bool | None = None,
+                      tile: int = 8):
+    """Fused per-prime weight-row multiply: x (k, ..., n) u32, w/wp (k, n)
+    weight rows + Shoup companions, qs (k,).  This is the four-step step-3
+    twiddle correction (and the negacyclic psi pre/post-weights) as one
+    (prime, batch_tile) kernel on the Pallas path."""
+    use_pallas = _on_tpu() if use_pallas is None else use_pallas
+    x = jnp.asarray(x)
+    if not use_pallas:
+        return ref.twiddle_mul_banks_ref(x, qs, w, wp)
+    k, n = x.shape[0], x.shape[-1]
+    shape = x.shape
+    x3 = x.reshape(k, -1, n)
+    tile = max(1, min(tile, x3.shape[1]))
+    x3, b = _pad_mid(x3, tile)
+    out = ntt_kernel.twiddle_mul_banks_pallas(x3, qs[:, None], w, wp,
+                                              tile=tile, interpret=not _on_tpu())
+    return out[:, :b].reshape(shape)
+
+
+# ------------------------------------------- large-N four-step pipeline
+
+@functools.lru_cache(maxsize=None)
+def _brev(n: int) -> np.ndarray:
+    """Bit-reversal permutation — an involution, so the same gather
+    converts bitrev->natural and natural->bitrev."""
+    return bitrev_perm(n)
+
+
+def fourstep_dims(fp: dict) -> tuple[int, int]:
+    """(n1, n2) of a four-step pack, read from static table shapes (the
+    pack holds no Python ints so it can ride through jit as a pytree)."""
+    return fp["pack1"]["tw"].shape[-1] * 2, fp["pack2"]["tw"].shape[-1] * 2
+
+
+def ntt_fourstep_banks(x, fp: dict, *, negacyclic: bool = True,
+                       use_pallas: bool | None = None, tile: int = 8):
+    """Large-N forward NTT via the four-step (Bailey) decomposition with
+    every pass on the banks kernels — the paper's §IX schedule (two
+    passes of batched NTT-N1/NTT-N2 units with a reorder in between).
+
+    x: (k, ..., n) u32 with row i reduced mod fp["qs"][i]; fp: a
+    FourStepPack from ``fhe.batched.build_fourstep_pack`` for at least
+    those k primes (extra rows are ignored, like ``ntt_banks``).
+
+    Pipeline:  [psi pre-weight] -> column NTT-N1 bank pass (batch folds
+    the N2 columns) -> fused w^(j2*k1) twiddle kernel -> row NTT-N2 bank
+    pass -> transpose readout.  Output is in *natural* frequency order
+    (A_hat[k2*n1 + k1]), unlike the bitrev order of the single-kernel
+    path; ``intt_fourstep_banks`` consumes the same convention, so any
+    NTT-domain data stays internally consistent per ring size."""
+    x = jnp.asarray(x)
+    k = x.shape[0]
+    n1, n2 = fourstep_dims(fp)
+    n = n1 * n2
+    assert x.shape[-1] == n, (x.shape, n1, n2)
+    kw = dict(use_pallas=use_pallas, tile=tile)
+    qs = fp["qs"][:k]
+    shape = x.shape
+    x = x.reshape(k, -1, n)
+    b = x.shape[1]
+    if negacyclic:
+        x = twiddle_mul_banks(x, fp["psi"][:k], fp["psip"][:k], qs, **kw)
+    # pass 1: column NTT-N1 units; the N2 columns fold into the kernel
+    # batch so all k*b*n2 transforms run in one (prime, tile) grid
+    xt = x.reshape(k, b, n1, n2).swapaxes(-1, -2).reshape(k, b * n2, n1)
+    xt = ntt_banks(xt, fp["pack1"], negacyclic=False, **kw)[..., _brev(n1)]
+    x = xt.reshape(k, b, n2, n1).swapaxes(-1, -2).reshape(k, b, n)
+    # step 3: fused twiddle correction (the inter-pass reorder weights)
+    x = twiddle_mul_banks(x, fp["tw"][:k], fp["twp"][:k], qs, **kw)
+    # pass 2: row NTT-N2 units
+    xr = x.reshape(k, b * n1, n2)
+    xr = ntt_banks(xr, fp["pack2"], negacyclic=False, **kw)[..., _brev(n2)]
+    # readout: A_hat[k2*n1 + k1] = D[k1, k2]
+    return xr.reshape(k, b, n1, n2).swapaxes(-1, -2).reshape(shape)
+
+
+def intt_fourstep_banks(x, fp: dict, *, negacyclic: bool = True,
+                        use_pallas: bool | None = None, tile: int = 8):
+    """Inverse of ``ntt_fourstep_banks`` (natural-order input).  The two
+    sub-iNTT bank passes each contribute 1/Ni, so no separate n^-1; the
+    negacyclic psi^-i post-weight is the plain inverse-psi row."""
+    x = jnp.asarray(x)
+    k = x.shape[0]
+    n1, n2 = fourstep_dims(fp)
+    n = n1 * n2
+    assert x.shape[-1] == n, (x.shape, n1, n2)
+    kw = dict(use_pallas=use_pallas, tile=tile)
+    qs = fp["qs"][:k]
+    shape = x.shape
+    x = x.reshape(k, -1, n)
+    b = x.shape[1]
+    # undo the readout: D[k1, k2] from A_hat[k2*n1 + k1]
+    x = x.reshape(k, b, n2, n1).swapaxes(-1, -2)            # (k, b, n1, n2)
+    # inverse pass 2: row iNTT-N2 banks (bitrev input order)
+    xr = x.reshape(k, b * n1, n2)[..., _brev(n2)]
+    xr = intt_banks(xr, fp["pack2"], negacyclic=False, **kw)
+    # undo the twiddle correction
+    x = twiddle_mul_banks(xr.reshape(k, b, n), fp["itw"][:k], fp["itwp"][:k],
+                          qs, **kw)
+    # inverse pass 1: column iNTT-N1 banks
+    xt = (x.reshape(k, b, n1, n2).swapaxes(-1, -2)
+          .reshape(k, b * n2, n1)[..., _brev(n1)])
+    xt = intt_banks(xt, fp["pack1"], negacyclic=False, **kw)
+    x = xt.reshape(k, b, n2, n1).swapaxes(-1, -2).reshape(k, b, n)
+    if negacyclic:
+        x = twiddle_mul_banks(x, fp["ipsi"][:k], fp["ipsip"][:k], qs, **kw)
+    return x.reshape(shape)
 
 
 def dyadic_inner_banks(ext, evk, t: dict, *, use_pallas: bool | None = None,

@@ -63,6 +63,16 @@ def ntt_inv_banks_ref(x, qs, ninv, ninv_p, itw, itwp, post, postp,
     return jax.vmap(per)(x, qs, ninv, ninv_p, itw, itwp, post, postp)
 
 
+def twiddle_mul_banks_ref(x, qs, w, wp):
+    """Four-step twiddle correction: x (k, ..., n) times per-prime weight
+    rows w/wp (k, n) mod qs (k,) — same math as the fused kernel."""
+    ex = (1,) * (x.ndim - 2)
+    k, n = w.shape
+    return mulmod_shoup(x, w.reshape((k,) + ex + (n,)),
+                        wp.reshape((k,) + ex + (n,)),
+                        qs.reshape((k,) + ex + (1,)))
+
+
 def dyadic_inner_banks_ref(ext, evk, qs, mus):
     """ext: (d, k, B, n); evk: (d, k, n); qs/mus: (k,).  Accumulates the
     digit products in the same order as the fused kernel (exact match)."""

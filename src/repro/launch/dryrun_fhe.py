@@ -20,6 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.configs.sce_ntt import CONFIG as SCE
 from repro.core.ntt import cg_ntt
 from repro.core.params import bitrev_perm
@@ -89,7 +90,7 @@ def _cell_fourstep(mctx):
     tab_specs = {k2: (P(None, None) if k2.startswith("tw1") or k2.startswith("twp1")
                       or k2.startswith("tw2") or k2.startswith("twp2")
                       else col) for k2 in tabs}
-    fn = jax.shard_map(local, mesh=mesh,
+    fn = shard_map(local, mesh=mesh,
                        in_specs=(P(mctx.dp, None, tp), tab_specs),
                        out_specs=P(mctx.dp, tp, None))
     jf = jax.jit(fn, in_shardings=(

@@ -15,6 +15,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.models.common import ModelConfig, MeshCtx, truncated_normal_init
 
 
@@ -133,7 +134,7 @@ def moe_ffn(p, x, cfg: ModelConfig, mctx: MeshCtx):
             aux = jax.lax.pmean(aux, mctx.dp)
             return out, aux
 
-        fn = jax.shard_map(
+        fn = shard_map(
             shard_fn, mesh=mctx.mesh,
             in_specs=(P(mctx.dp, None), P(None, None),
                       P(tp, fsdp, None), P(tp, fsdp, None), P(tp, None, fsdp)),
@@ -152,7 +153,7 @@ def moe_ffn(p, x, cfg: ModelConfig, mctx: MeshCtx):
         aux = jax.lax.pmean(aux, mctx.dp)
         return out, aux
 
-    fn = jax.shard_map(
+    fn = shard_map(
         shard_fn, mesh=mctx.mesh,
         in_specs=(P(mctx.dp, None), P(None, None),
                   P(fsdp, None, tp), P(fsdp, None, tp), P(fsdp, tp, None)),

@@ -10,6 +10,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compat import shard_map
 from repro.models.common import ModelConfig, MeshCtx, truncated_normal_init
 from repro.models.ssm import _causal_conv
 
@@ -93,7 +94,7 @@ def _seq_scan(a, gx, cfg: ModelConfig, mctx: MeshCtx):
         # compose the incoming prefix state pb into the local scan
         return ha * pb[:, None, :] + hb
 
-    fn = jax.shard_map(
+    fn = shard_map(
         local, mesh=mctx.mesh,
         in_specs=(jax.P(mctx.dp, tp, None), jax.P(mctx.dp, tp, None)),
         out_specs=jax.P(mctx.dp, tp, None))

@@ -18,6 +18,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import pcast_varying, shard_map
+
 
 def pipeline_apply(stage_params, x_mb, block_fn, mesh, axis: str = "pod"):
     """Run microbatched inputs through a pipelined layer stack.
@@ -56,15 +58,15 @@ def pipeline_apply(stage_params, x_mb, block_fn, mesh, axis: str = "pod"):
 
         outs0 = jnp.zeros_like(xm)
         # carries become device-varying inside the loop (axis_index use)
-        bubble_v = jax.lax.pcast(bubble, (axis,), to="varying")
-        outs0_v = jax.lax.pcast(outs0, (axis,), to="varying")
+        bubble_v = pcast_varying(bubble, axis)
+        outs0_v = pcast_varying(outs0, axis)
         (_, outs), _ = jax.lax.scan(tick, (bubble_v, outs0_v), jnp.arange(T))
         # only the last stage holds real outputs; broadcast them
         outs = jax.lax.psum(
             jnp.where(sid == nstages - 1, outs, jnp.zeros_like(outs)), axis)
         return outs
 
-    fn = jax.shard_map(
+    fn = shard_map(
         shard_fn, mesh=mesh,
         in_specs=(jax.tree.map(lambda _: P(axis), stage_params), P()),
         out_specs=P())

@@ -1,13 +1,13 @@
 """Four-step (paper §IX) functional tests + the sharded version in a
-subprocess (needs >1 device; smoke tests must keep seeing 1 device)."""
-import subprocess
-import sys
-import textwrap
-
+subprocess (needs >1 device; smoke tests must keep seeing 1 device).
+The tier-1 conformance suite for the banks-kernel four-step pipeline
+lives in test_fourstep_banks.py; this module keeps the slower
+oracle-vs-direct and sharded checks."""
 import numpy as np
 import jax.numpy as jnp
 import pytest
 
+from subproc import run_multidevice
 from repro.core import fourstep as fs
 from repro.core.ntt import ntt_cyclic, ntt_negacyclic, intt_negacyclic, negacyclic_convolve_np
 from repro.core.modmath import mulmod_np
@@ -68,31 +68,26 @@ def test_batched_fourstep():
     assert np.array_equal(back, a)
 
 
-SHARDED_SCRIPT = textwrap.dedent("""
-    import os
-    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+SHARDED_SCRIPT = """
     import numpy as np, jax, jax.numpy as jnp
+    from repro.compat import use_mesh
     from repro.core import fourstep as fs
     fsp = fs.make_fourstep_params(32, 32)
     mesh = jax.make_mesh((8,), ("model",))
     rng = np.random.default_rng(0)
     a = rng.integers(0, fsp.q, size=fsp.n, dtype=np.uint32)
     a2d = jnp.asarray(a).reshape(fsp.n1, fsp.n2)
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         D = fs.fourstep_ntt_sharded(a2d, fsp, mesh, axis="model", negacyclic=True)
     D = np.asarray(D)
     want = np.asarray(fs.fourstep_ntt(jnp.asarray(a), fsp, negacyclic=True))
     got = D.T.reshape(-1)          # A_hat[k2*n1+k1] = D[k1,k2]
     assert np.array_equal(got, want), "sharded four-step mismatch"
     print("SHARDED_OK")
-""")
+"""
 
 
 def test_fourstep_sharded_8dev_subprocess():
     """The all-to-all 'reorder network' across 8 devices reproduces the
-    local oracle exactly."""
-    r = subprocess.run([sys.executable, "-c", SHARDED_SCRIPT],
-                       capture_output=True, text=True, timeout=300,
-                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
-                       cwd="/root/repo")
-    assert "SHARDED_OK" in r.stdout, f"stdout={r.stdout}\nstderr={r.stderr}"
+    local (banks-kernel) oracle exactly."""
+    run_multidevice(SHARDED_SCRIPT, token="SHARDED_OK", devices=8, timeout=300)

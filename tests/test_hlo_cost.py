@@ -1,16 +1,30 @@
-"""Validates the HLO-text cost analyzer against known-cost programs."""
+"""Validates the HLO-text cost analyzer against known-cost programs.
+
+Tier-1 since PR 2 (was quarantined as ``slow``): the seed failure was
+``Compiled.cost_analysis()`` returning a per-partition *list* on older
+jax and a dict on current jax — normalized by ``_xla_cost`` below.  The
+one multi-device subprocess test stays ``slow``-marked with the shared
+timeout/skip discipline (tests/subproc.py), like every other
+multi-device test.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from subproc import run_multidevice
 from repro.runtime import hlo_cost
 
 
-pytestmark = pytest.mark.slow  # excluded from tier-1 (see pytest.ini)
-
 def _compile(fn, *args):
     return jax.jit(fn).lower(*args).compile()
+
+
+def _xla_cost(compiled) -> dict:
+    """XLA's own analysis: dict on current jax, [dict] per partition on
+    0.4.x — normalize to one dict."""
+    ca = compiled.cost_analysis()
+    return ca[0] if isinstance(ca, (list, tuple)) else ca
 
 
 def test_single_matmul_flops():
@@ -33,7 +47,7 @@ def test_scan_multiplies_by_trip_count():
     want = 10 * 2 * 512**3
     assert abs(cost.flops - want) / want < 0.1, cost.flops
     # and XLA's own undercount would fail this:
-    xla = float(c.cost_analysis()["flops"])
+    xla = float(_xla_cost(c)["flops"])
     assert xla < 0.3 * want
 
 
@@ -61,11 +75,9 @@ def test_bytes_reasonable():
     assert 0.5 * want <= cost.bytes <= 3 * want
 
 
+@pytest.mark.slow  # multi-device subprocess (see tests/subproc.py)
 def test_collectives_in_scan_counted():
-    import subprocess, sys, textwrap
-    script = textwrap.dedent("""
-        import os
-        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    script = """
         import jax, jax.numpy as jnp
         from jax.sharding import PartitionSpec as P, NamedSharding
         from repro.runtime import hlo_cost
@@ -85,9 +97,5 @@ def test_collectives_in_scan_counted():
         print("COLL", n, cost.coll_traffic)
         assert n >= 6, f"collectives inside scan must be multiplied: {n}"
         print("OK")
-    """)
-    r = subprocess.run([sys.executable, "-c", script], capture_output=True,
-                       text=True, timeout=300,
-                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
-                       cwd="/root/repo")
-    assert "OK" in r.stdout, f"{r.stdout}\n{r.stderr}"
+    """
+    run_multidevice(script, token="OK", devices=8, timeout=300)

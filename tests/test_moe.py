@@ -1,15 +1,14 @@
 """MoE implementations: capacity vs dropless equivalence, drop behavior,
-aux loss, and the multi-device shard_map path (subprocess)."""
+aux loss, and the multi-device shard_map path (subprocess; see
+tests/subproc.py for the timeout/skip discipline)."""
 import dataclasses
-import subprocess
-import sys
-import textwrap
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
 
+from subproc import run_multidevice
 from repro.configs import smoke_config
 from repro.models import moe as MOE
 from repro.models.common import MeshCtx, MoECfg
@@ -61,11 +60,10 @@ def test_moe_grads_flow_both_impls():
 
 
 def test_moe_shard_map_multidevice_subprocess():
-    script = textwrap.dedent("""
-        import os
-        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    script = """
         import dataclasses
         import numpy as np, jax, jax.numpy as jnp
+        from repro.compat import use_mesh
         from repro.configs import smoke_config
         from repro.models import moe as MOE
         from repro.models.common import MeshCtx
@@ -76,7 +74,7 @@ def test_moe_shard_map_multidevice_subprocess():
         p = MOE.init_moe(jax.random.key(0), cfg, jnp.float32)
         rng = np.random.default_rng(0)
         x = jnp.asarray(rng.normal(0, 1, (4, 16, cfg.d_model)), jnp.float32)
-        with jax.set_mesh(mesh):
+        with use_mesh(mesh):
             out, aux = MOE.moe_ffn(p, x, cfg, mctx)
             out = jax.block_until_ready(out)
         ref, aux_ref = MOE.moe_ffn(p, x, cfg, MeshCtx())
@@ -84,9 +82,5 @@ def test_moe_shard_map_multidevice_subprocess():
         # routed independently) so results must match
         np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-3, atol=2e-3)
         print("MOE_SHARDED_OK")
-    """)
-    r = subprocess.run([sys.executable, "-c", script], capture_output=True,
-                       text=True, timeout=600,
-                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
-                       cwd="/root/repo")
-    assert "MOE_SHARDED_OK" in r.stdout, f"{r.stdout}\n{r.stderr}"
+    """
+    run_multidevice(script, token="MOE_SHARDED_OK", devices=8, timeout=600)

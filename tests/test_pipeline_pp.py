@@ -1,19 +1,18 @@
 """GPipe pipeline parallelism over a 4-stage mesh axis (subprocess:
-needs multiple devices) — forward equals the sequential stack, and
-jax.grad through the pipeline matches sequential gradients."""
-import subprocess
-import sys
-import textwrap
+needs multiple devices; see tests/subproc.py for the timeout/skip
+discipline) — forward equals the sequential stack, and jax.grad through
+the pipeline matches sequential gradients."""
 import pytest
+
+from subproc import run_multidevice
 
 
 pytestmark = pytest.mark.slow  # excluded from tier-1 (see pytest.ini)
 
 def test_pipeline_matches_sequential_subprocess():
-    script = textwrap.dedent("""
-        import os
-        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    script = """
         import numpy as np, jax, jax.numpy as jnp
+        from repro.compat import use_mesh
         from repro.train.pipeline import pipeline_apply
 
         mesh = jax.make_mesh((4,), ("pod",))
@@ -31,7 +30,7 @@ def test_pipeline_matches_sequential_subprocess():
             out, _ = jax.lax.scan(body, xm.reshape(-1, 4, D), ws)
             return out.reshape(xm.shape)
 
-        with jax.set_mesh(mesh):
+        with use_mesh(mesh):
             got = pipeline_apply(Ws, x, block, mesh, axis="pod")
             want = seq(Ws, x)
             np.testing.assert_allclose(np.asarray(got), np.asarray(want),
@@ -47,9 +46,5 @@ def test_pipeline_matches_sequential_subprocess():
             np.testing.assert_allclose(np.asarray(g1), np.asarray(g2),
                                        rtol=1e-4, atol=1e-4)
         print("PP_OK")
-    """)
-    r = subprocess.run([sys.executable, "-c", script], capture_output=True,
-                       text=True, timeout=600,
-                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
-                       cwd="/root/repo")
-    assert "PP_OK" in r.stdout, f"{r.stdout}\n{r.stderr}"
+    """
+    run_multidevice(script, token="PP_OK", devices=4, timeout=600)

@@ -131,3 +131,34 @@ def test_keyswitch_model():
 def test_large_ntt_k_scaling(k_units):
     m = srm_sim.large_ntt_cycles(k_units=k_units)
     assert m["cycles"] == (128 * 64 // k_units) * 2 + 400
+
+
+def test_large_ntt_model_matches_fourstep_structure():
+    """§IX cross-validation: the analytic 2^14 cycle model (two passes of
+    128 NTT-128 transforms; ~482 ns ideal) describes exactly the schedule
+    the four-step banks pipeline executes (core.fourstep/kernels.ops)."""
+    from repro.core.fourstep import fourstep_schedule
+    from repro.core.params import fourstep_split
+
+    n1, n2 = fourstep_split(1 << 14)
+    assert (n1, n2) == (128, 128)          # the paper's 128 x 128 factoring
+    sched = fourstep_schedule(n1, n2)
+    m = srm_sim.large_ntt_cycles()
+
+    # pass structure: 2 passes, each a batch of 128 NTT-128 transforms
+    assert sched["passes"] == 2
+    assert sched["transforms_per_pass"] == (128, 128)
+    assert sched["transform_sizes"] == (128, 128)
+    assert sched["reorders"] == 1          # one inter-pass reorder network
+
+    # cycle content: each pass streams 128 transforms x N/2 = 64 cycles
+    # through an NTT-128 unit -> per-pass 8192, total = the model's ideal
+    per_pass = [t * (s // 2) for t, s in
+                zip(sched["transforms_per_pass"], sched["transform_sizes"])]
+    assert sched["butterfly_cycles_per_pass"] == tuple(per_pass)
+    assert m["ideal_cycles"] == sum(per_pass) == 16384
+    assert abs(m["ideal_latency_ns"] - 482) < 1.0
+
+    # the step-3 twiddle corrections are pointwise over the full ring —
+    # they pipeline into the MS stage, never adding transform passes
+    assert sched["twiddle_muls"] == 1 << 14
