@@ -240,6 +240,41 @@ def keyswitch_banks_2_14():
     ]
 
 
+def ckks_ops():
+    """EvalPlan scheme-op throughput (the device-resident CKKS layer):
+    ``multiply`` (tensor + fused relinearization) and ``rotate`` (NTT-
+    domain Galois gather + fused key switch), each one jitted device
+    program over the banks kernels — the throughput-trajectory rows for
+    the paper's 'whole ciphertext op on the SCE side' claim."""
+    from repro.fhe.ckks import CkksContext
+
+    ctx = CkksContext(n=1024, levels=2, scale_bits=28, seed=13)
+    rng = np.random.default_rng(14)
+    z1 = rng.uniform(-1, 1, ctx.slots) + 1j * rng.uniform(-1, 1, ctx.slots)
+    z2 = rng.uniform(-1, 1, ctx.slots) + 1j * rng.uniform(-1, 1, ctx.slots)
+    ct1 = ctx.encrypt(ctx.encode(z1))
+    ct2 = ctx.encrypt(ctx.encode(z2))
+    plan = ctx.plan().prepare(rotations=(1,))
+
+    def mul():
+        ct = plan.multiply(ct1, ct2)
+        return ct.c0.data, ct.c1.data
+
+    def rot():
+        ct = plan.rotate(ct1, 1)
+        return ct.c0.data, ct.c1.data
+
+    t_m = _time(mul)
+    t_r = _time(rot)
+    k = len(ctx.qs)
+    return [
+        ("ckks_multiply_us", t_m,
+         f"n={ctx.n} k={k} {1e6 / t_m:.0f} mult/s (jitted EvalPlan program)"),
+        ("ckks_rotate_us", t_r,
+         f"n={ctx.n} k={k} {1e6 / t_r:.0f} rot/s (galois gather + fused KS)"),
+    ]
+
+
 # ---------------------------------------------------------- validation
 
 def validation_1e5():
@@ -263,10 +298,11 @@ def validation_1e5():
 
 
 ALL = [table2_mulmod, table3_ntt128, fig21_large_ntt, ntt_fourstep_2_14,
-       fig22_keyswitch, keyswitch_banks, keyswitch_banks_2_14,
+       fig22_keyswitch, keyswitch_banks, keyswitch_banks_2_14, ckks_ops,
        validation_1e5]
 
 # fast subset for CI / --smoke: NTT-128 rows, the bank-parallel keyswitch
-# throughput datapoint, and the large-N (2^14) four-step + keyswitch rows
+# throughput datapoint, the large-N (2^14) four-step + keyswitch rows,
+# and the EvalPlan ckks_multiply/ckks_rotate scheme-op rows
 SMOKE = [table3_ntt128, keyswitch_banks, ntt_fourstep_2_14,
-         keyswitch_banks_2_14]
+         keyswitch_banks_2_14, ckks_ops]

@@ -4,9 +4,14 @@ Prints ``name,us_per_call,derived`` CSV (plus a roofline summary row per
 dry-run cell if experiments/dryrun JSONs exist).
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--skip-slow | --smoke]
+                                               [--json PATH]
 
-``--smoke`` runs the fast CI subset (NTT-128 + the bank-parallel
-keyswitch throughput datapoint) and exits nonzero on any ERROR row.
+``--smoke`` runs the fast CI subset (NTT-128, the bank-parallel
+keyswitch throughput datapoints, and the EvalPlan ckks_multiply /
+ckks_rotate scheme-op rows) and exits nonzero on any ERROR row.
+``--json PATH`` additionally writes the rows as a JSON record — CI
+uploads the smoke run's file as a ``BENCH_*.json`` artifact so a bench
+trajectory accumulates across PRs.
 """
 from __future__ import annotations
 
@@ -14,7 +19,9 @@ import argparse
 import glob
 import json
 import os
+import platform
 import sys
+import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
@@ -24,21 +31,36 @@ def main() -> None:
     ap.add_argument("--skip-slow", action="store_true")
     ap.add_argument("--smoke", action="store_true",
                     help="fast CI subset; nonzero exit on any ERROR row")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write rows as a JSON record (bench trajectory)")
     args = ap.parse_args()
 
     from benchmarks import paper_tables
     fns = paper_tables.SMOKE if args.smoke else paper_tables.ALL
     failed = False
+    rows = []
     print("name,us_per_call,derived")
     for fn in fns:
         if args.skip_slow and fn.__name__ in ("fig22_keyswitch",):
             continue
         try:
             for name, us, derived in fn():
+                rows.append({"name": name, "us_per_call": us, "derived": derived})
                 print(f"{name},{us:.2f},{derived}")
         except Exception as e:  # keep the harness running
             failed = True
+            rows.append({"name": fn.__name__, "us_per_call": None,
+                         "derived": f"ERROR: {type(e).__name__}: {e}"})
             print(f"{fn.__name__},NaN,ERROR: {type(e).__name__}: {e}")
+    if args.json:
+        rec = {"suite": "smoke" if args.smoke else "all",
+               "unix_time": int(time.time()),
+               "platform": platform.platform(),
+               "git": os.environ.get("GITHUB_SHA", ""),
+               "rows": rows}
+        with open(args.json, "w") as f:
+            json.dump(rec, f, indent=2)
+        print(f"# wrote {len(rows)} rows to {args.json}", file=sys.stderr)
     if args.smoke and failed:
         sys.exit(1)
 

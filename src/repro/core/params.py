@@ -114,6 +114,40 @@ def fourstep_split(n: int) -> tuple[int, int]:
     return n1, n // n1
 
 
+@functools.lru_cache(maxsize=None)
+def galois_coeff_tables(g: int, n: int) -> tuple[np.ndarray, np.ndarray]:
+    """Gather form of the coefficient-domain automorphism sigma_g
+    (X^t -> X^(g t mod 2n) with X^n = -1): out[j] = +c[src[j]] if pos[j]
+    else -c[src[j]].  Derivation: the unique t contributing to output j
+    satisfies g*t = j or j+n (mod 2n); t1 = g^-1 * j mod 2n lands below n
+    for the + branch and at t1 - n (sign flip from X^n = -1) otherwise."""
+    ginv = pow(g, -1, 2 * n)
+    t1 = (ginv * np.arange(n, dtype=np.int64)) % (2 * n)
+    return t1 % n, t1 < n
+
+
+@functools.lru_cache(maxsize=None)
+def galois_eval_perm(g: int, n: int, natural: bool) -> np.ndarray:
+    """NTT-domain automorphism as a pure slot permutation: out = in[perm].
+
+    Slot j of a negacyclic NTT row holds the evaluation at psi^(1+2*ord(j))
+    where ord is the row's frequency ordering — ord(j) = bitrev(j) for the
+    single-kernel CG path, ord(j) = j for the ``natural`` four-step order
+    (see kernels.ops).  sigma_g maps the evaluation at root r to the one
+    at r^g, so perm[j] is the slot holding psi^(g*(1+2*ord(j)) mod 2n).
+    No sign corrections: in the evaluation domain the automorphism is a
+    bijection on roots, which is what makes the device op a single gather
+    (``ops.galois_banks``)."""
+    j = np.arange(n, dtype=np.int64)
+    if natural:
+        e = 1 + 2 * j
+    else:
+        br = bitrev_perm(n)
+        e = 1 + 2 * br[j]
+    m = ((g * e) % (2 * n) - 1) // 2
+    return m if natural else bitrev_perm(n)[m]
+
+
 def cg_twiddle_exponents(n: int) -> np.ndarray:
     """(log2 n, n/2) exponent table for the Pease CG-DIT network.
 

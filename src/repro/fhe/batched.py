@@ -30,6 +30,7 @@ factor tables the §IX four-step banks pipeline consumes
 from __future__ import annotations
 
 import dataclasses
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -213,6 +214,45 @@ def slice_pack(t: dict, rows) -> dict:
     return {k: (v if k in basis_relative else v[rows]) for k, v in t.items()}
 
 
+def _fwd_banks(x, pack, fpk, kw):
+    return (ops.ntt_fourstep_banks(x, fpk, **kw) if fpk is not None
+            else ops.ntt_banks(x, pack, **kw))
+
+
+def _inv_banks(x, pack, fpk, kw):
+    return (ops.intt_fourstep_banks(x, fpk, **kw) if fpk is not None
+            else ops.intt_banks(x, pack, **kw))
+
+
+def mod_down_banks(acc, t: dict, *, fsp: dict | None = None,
+                   use_pallas: bool | None = None, tile: int = 8):
+    """RNS floor by the *last* prime of ``t``'s basis, fully batched —
+    the paper's Fig 22 stage 4 (INTT + base-ext + NTT + MS) as one fused
+    device program.
+
+    acc: (k+1, B, n) u32 NTT form over t's k+1 primes; returns
+    (k, B, n) over the first k.  The last row runs one banks iNTT, the
+    centered lift broadcasts it back over the basis (``extend_centered``),
+    one banks NTT returns it to evaluation form, and the subtract +
+    per-prime scalar multiply by last^-1 (the precomputed ``pinv``
+    columns) finish the floor.  This single routine serves both the
+    key-switch mod-down by the special prime P (``batched_keyswitch``)
+    and ciphertext rescale by q_l (``evalplan.rescale_banks``) — pass a
+    pack whose basis ends with the prime being dropped.  ``fsp`` routes
+    every transform through the large-N four-step pipeline, exactly as in
+    ``batched_keyswitch``."""
+    k = acc.shape[0] - 1
+    kw = dict(use_pallas=use_pallas, tile=tile)
+    fs_last = slice_fourstep_pack(fsp, slice(k, k + 1)) if fsp is not None else None
+    lastc = _inv_banks(acc[k:], slice_pack(t, slice(k, k + 1)), fs_last, kw)
+    ext = extend_centered(lastc[0], t["qs"][k], t["qs"][:k])
+    extn = _fwd_banks(ext, slice_pack(t, slice(0, k)), fsp, kw)
+    qcol = t["qs"][:k, None, None]
+    d = submod(acc[:k], extn, qcol)
+    return mulmod_shoup(d, t["pinv"][:, None, None], t["pinv_p"][:, None, None],
+                        qcol)
+
+
 def batched_keyswitch(d2, evk_b, evk_a, t: dict, *, fsp: dict | None = None,
                       use_pallas: bool | None = None, tile: int = 8):
     """Paper Fig 22 pipeline, vectorized over a ciphertext batch AND the
@@ -239,38 +279,19 @@ def batched_keyswitch(d2, evk_b, evk_a, t: dict, *, fsp: dict | None = None,
     Python-level per-prime loop left in this hot path.
     """
     k, B, n = d2.shape
-    kp1 = k + 1
     kw = dict(use_pallas=use_pallas, tile=tile)
     tb = slice_pack(t, slice(0, k))
-    fs_last = slice_fourstep_pack(fsp, slice(k, kp1)) if fsp is not None else None
 
-    def fwd(x, pack, fpk):
-        return (ops.ntt_fourstep_banks(x, fpk, **kw) if fpk is not None
-                else ops.ntt_banks(x, pack, **kw))
-
-    def inv(x, pack, fpk):
-        return (ops.intt_fourstep_banks(x, fpk, **kw) if fpk is not None
-                else ops.intt_banks(x, pack, **kw))
-
-    ci = inv(d2, tb, fsp)                                     # INTT units
+    ci = _inv_banks(d2, tb, fsp, kw)                          # INTT units
     ext = jax.vmap(lambda c, q: extend_centered(c, q, t["qs"])
                    )(ci, t["qs"][:k])                         # mod-up: (k, k+1, B, n)
     # NTT banks: fold the digit axis into the batch so all k*(k+1)
     # transforms run in ONE (prime, batch_tile) grid.
-    y = fwd(ext.transpose(1, 0, 2, 3), t, fsp)                # (k+1, k, B, n)
+    y = _fwd_banks(ext.transpose(1, 0, 2, 3), t, fsp, kw)     # (k+1, k, B, n)
     y = y.transpose(1, 0, 2, 3)                               # (digit, prime, B, n)
     acc0 = ops.dyadic_inner_banks(y, evk_b, t, **kw)          # MM/MA arrays
     acc1 = ops.dyadic_inner_banks(y, evk_a, t, **kw)
 
-    qcol = t["qs"][:k, None, None]
-    pinv = t["pinv"][:, None, None]
-    pinv_p = t["pinv_p"][:, None, None]
-
-    def mod_down(acc):                                        # RNS floor + MS
-        lastc = inv(acc[k:], slice_pack(t, slice(k, kp1)), fs_last)
-        ext = extend_centered(lastc[0], t["qs"][k], t["qs"][:k])
-        extn = fwd(ext, tb, fsp)
-        d = submod(acc[:k], extn, qcol)
-        return mulmod_shoup(d, pinv, pinv_p, qcol)
-
-    return mod_down(acc0), mod_down(acc1)
+    md = functools.partial(mod_down_banks, t=t, fsp=fsp,      # RNS floor + MS
+                           use_pallas=use_pallas, tile=tile)
+    return md(acc0), md(acc1)

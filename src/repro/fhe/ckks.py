@@ -2,9 +2,12 @@
 
 Host/device split mirrors the paper's Fig 1: key generation, encoding
 (canonical embedding) and CRT decode run on the host ("CMOS-FHE
-coprocessor"); every ring operation on ciphertexts — NTT, iNTT, dyadic
-multiply/add, key switch — runs through the device NTT layer
-("SCE-NTT coprocessor").
+coprocessor"); every ciphertext ring op — NTT, iNTT, dyadic
+multiply/add, Galois automorphism, key switch, RNS floor — runs on the
+device through a jitted ``fhe.evalplan.EvalPlan`` program over the
+banks kernels.  ``multiply``/``rescale``/``rotate``/``conjugate`` each
+lower to a single device dispatch; the host-orchestrated digit loop of
+``fhe.keyswitch`` survives only as the bit-exact test oracle.
 
 Supported: encode/decode (complex slots), sk/pk encryption, add/sub,
 multiply + relinearization (digit keyswitch), rescale, slot rotation
@@ -13,30 +16,18 @@ ciphertext, so prime-vs-scale drift cancels in decode.
 """
 from __future__ import annotations
 
-import dataclasses
 import functools
 
 import numpy as np
 import jax.numpy as jnp
 
+from repro.core.modmath import submod
+from repro.core.params import galois_coeff_tables
 from repro.fhe import rns
+from repro.fhe.evalplan import Ciphertext, EvalPlan
 from repro.fhe.rns import RnsPoly
-from repro.fhe.keyswitch import keyswitch, mod_down_by_last
 
-
-@dataclasses.dataclass
-class Ciphertext:
-    c0: RnsPoly
-    c1: RnsPoly
-    scale: float
-
-    @property
-    def primes(self):
-        return self.c0.primes
-
-    @property
-    def level(self) -> int:
-        return len(self.primes) - 1
+__all__ = ["Ciphertext", "CkksContext", "galois_int_coeffs", "galois_poly"]
 
 
 class CkksContext:
@@ -60,6 +51,14 @@ class CkksContext:
         e = self._noise_poly(full)
         s = self._secret_poly(full)
         self.pk = (e.sub(a.mul(s)), a)                    # (b, a) = (-as + e, a)
+        self._plan: EvalPlan | None = None
+
+    def plan(self) -> EvalPlan:
+        """The device-resident evaluation plan for this context (built
+        lazily, cached; see ``EvalPlan.prepare`` for eager warm-up)."""
+        if self._plan is None:
+            self._plan = EvalPlan(self)
+        return self._plan
 
     # ------------------------------------------------------------ keys
 
@@ -130,8 +129,7 @@ class CkksContext:
 
     def decode(self, pt: RnsPoly, scale: float) -> np.ndarray:
         big = rns.crt_reconstruct_centered(pt if not pt.is_ntt else pt.to_coeff())
-        cf = np.array([float(x) for x in big]) / scale
-        return self._decode_coeffs(cf)
+        return self._decode_coeffs(rns.centered_to_float(big, scale))
 
     # ------------------------------------------------ encrypt / decrypt
 
@@ -171,66 +169,49 @@ class CkksContext:
         return Ciphertext(a.c0.mul(pt), a.c1.mul(pt), a.scale * pt_scale)
 
     def multiply(self, a: Ciphertext, b: Ciphertext) -> Ciphertext:
-        """Tensor + relinearize (paper Table I 'Homomorphic Mult':
-        NTT/INTT + dyadic work all on the SCE-NTT side)."""
-        assert a.primes == b.primes
-        d0 = a.c0.mul(b.c0)
-        d1 = a.c0.mul(b.c1).add(a.c1.mul(b.c0))
-        d2 = a.c1.mul(b.c1)
-        ks0, ks1 = keyswitch(d2, self.relin_keys(a.primes), self.special)
-        return Ciphertext(d0.add(ks0), d1.add(ks1), a.scale * b.scale)
+        """Tensor + relinearize (paper Table I 'Homomorphic Mult'), one
+        jitted device program: dyadic MM/MA + the fused bank-parallel
+        key switch (``evalplan.multiply_banks``)."""
+        return self.plan().multiply(a, b)
 
     def rescale(self, a: Ciphertext) -> Ciphertext:
-        q_last = a.primes[-1]
-        return Ciphertext(mod_down_by_last(a.c0), mod_down_by_last(a.c1),
-                          a.scale / q_last)
+        """RNS floor by q_l, both halves through one fused
+        ``mod_down_banks`` pipeline (``evalplan.rescale_banks``)."""
+        return self.plan().rescale(a)
 
     def rotate(self, a: Ciphertext, r: int) -> Ciphertext:
-        """Rotate slots left by r (Galois automorphism X -> X^(5^r))."""
-        g = pow(5, r, 2 * self.n)
-        return self._apply_galois(a, g)
+        """Rotate slots left by r (Galois automorphism X -> X^(5^r)),
+        applied as an NTT-domain gather + fused key switch."""
+        return self.plan().rotate(a, r)
 
     def conjugate(self, a: Ciphertext) -> Ciphertext:
-        return self._apply_galois(a, 2 * self.n - 1)
-
-    def _apply_galois(self, a: Ciphertext, g: int) -> Ciphertext:
-        c0g = galois_poly(a.c0, g)
-        c1g = galois_poly(a.c1, g)
-        ks0, ks1 = keyswitch(c1g, self.galois_keys(g, a.primes), self.special)
-        return Ciphertext(c0g.add(ks0), ks1, a.scale)
+        return self.plan().conjugate(a)
 
 
 # ------------------------------------------------- Galois automorphism
+#
+# Coefficient-domain forms.  The device hot path never runs these — it
+# uses the NTT-domain gather (``ops.galois_banks``); they serve keygen
+# (galois_int_coeffs on the ternary secret) and as the oracle the
+# eval-domain path is pinned against.
 
 def galois_int_coeffs(coeffs: np.ndarray, g: int, n: int) -> np.ndarray:
     """sigma_g on integer coefficient vectors: X^t -> X^(g t mod 2n),
-    with X^n = -1 folding."""
-    out = np.zeros(n, dtype=np.int64)
-    for t in range(n):
-        u = (g * t) % (2 * n)
-        if u < n:
-            out[u] += coeffs[t]
-        else:
-            out[u - n] -= coeffs[t]
-    return out
+    with X^n = -1 folding — one vectorized gather + sign flip."""
+    src, pos = galois_coeff_tables(g, n)
+    c = np.asarray(coeffs)
+    return np.where(pos, c[src], -c[src])
 
 
 def galois_poly(p: RnsPoly, g: int) -> RnsPoly:
-    """Automorphism applied per residue row (coefficient domain), then
-    back to NTT form."""
+    """Automorphism applied per residue row in the coefficient domain
+    (one gather + modular negate over the whole stack), then back to NTT
+    form if the input was in NTT form."""
     was_ntt = p.is_ntt
     if was_ntt:
         p = p.to_coeff()
-    n = p.n
-    t = np.arange(n)
-    u = (g * t) % (2 * n)
-    dst = np.where(u < n, u, u - n)
-    neg = u >= n
-    rows = []
-    for row, q in zip(np.asarray(p.data), p.primes):
-        out = np.zeros(n, dtype=np.uint32)
-        vals = np.where(neg, (q - row.astype(np.int64)) % q, row.astype(np.int64))
-        out[dst] = vals.astype(np.uint32)
-        rows.append(jnp.asarray(out))
-    res = RnsPoly(jnp.stack(rows), p.primes, False)
+    src, pos = galois_coeff_tables(g, p.n)
+    rows = p.data[:, src]
+    neg = submod(jnp.zeros_like(rows), rows, p._q)
+    res = RnsPoly(jnp.where(jnp.asarray(pos), rows, neg), p.primes, False)
     return res.to_ntt() if was_ntt else res

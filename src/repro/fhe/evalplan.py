@@ -1,0 +1,272 @@
+"""Device-resident CKKS evaluation plans (paper Fig 1 / Fig 22).
+
+The paper's architectural claim is that *every* ciphertext ring op —
+NTT, iNTT, dyadic MM/MA, base extension, RNS floor — lives on the
+SCE-NTT side, with only keygen/encode/decode on the CMOS host, and that
+key-switch throughput comes from running the whole op as one deeply
+pipelined dataflow rather than per-stage host round trips.  An
+``EvalPlan`` is that boundary in code: it precomputes, per
+``(primes, n)`` basis,
+
+  * the stacked twiddle tables the bank kernels consume (TablePack for
+    single-kernel rings, FourStepPack + scalar pack past
+    ``ops.FOURSTEP_MIN_N``),
+  * stacked evaluation / Galois key tensors — ``(k_digits, k+1, n)``
+    device arrays instead of Python lists of RnsPoly pairs,
+  * NTT-domain Galois gather rows (``core.params.galois_eval_perm``)
+    plus the coefficient-domain index/sign tables, and
+  * the per-prime ``pinv`` scalar columns of every mod-down,
+
+and then lowers each hot scheme op to ONE jitted device program over
+raw (k, n) residue stacks:
+
+  multiply   -> ``multiply_banks``  (tensor + fused batched_keyswitch)
+  rescale    -> ``rescale_banks``   (fused mod_down_banks, both halves
+                                     batched through one pipeline)
+  rotate/conjugate -> ``galois_ks_banks`` (one NTT-domain gather kernel
+                                     + fused batched_keyswitch)
+
+``RnsPoly`` stays as a thin (data, primes, is_ntt) view around the
+stacks; no Python loop over primes, digits or rows survives in any of
+these paths.  The host-orchestrated ``fhe.keyswitch`` module remains as
+the bit-exact oracle the tests pin against.
+
+Key generation is host-side by design (the CMOS coprocessor role): the
+plan asks its ``CkksContext`` for key material once per basis and keeps
+only the stacked device tensors.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.modmath import addmod, mulmod_barrett
+from repro.core.params import galois_eval_perm
+from repro.fhe import batched as FB
+from repro.fhe import rns
+from repro.fhe.batched import batched_keyswitch, mod_down_banks
+from repro.fhe.rns import RnsPoly
+from repro.kernels import ops
+
+
+@dataclasses.dataclass
+class Ciphertext:
+    c0: RnsPoly
+    c1: RnsPoly
+    scale: float
+
+    @property
+    def primes(self):
+        return self.c0.primes
+
+    @property
+    def level(self) -> int:
+        return len(self.primes) - 1
+
+
+# ------------------------------------------------- jitted device programs
+#
+# Each program takes its tables/keys as explicit pytree arguments, so one
+# trace is shared by every plan with the same (k, n) signature; the
+# ``use_pallas``/``tile`` dispatch knobs are static.
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "tile"))
+def multiply_banks(a0, a1, b0, b1, evk_b, evk_a, t, fsp=None, *,
+                   use_pallas: bool | None = None, tile: int = 8):
+    """Ciphertext tensor + relinearization as one device program.
+
+    a0/a1/b0/b1: (k, n) u32 NTT-form halves over the k-prime basis;
+    evk_b/evk_a: (k, k+1, n) stacked relin key digits; t (+ optional
+    fsp) the basis+special tables.  Returns the (c0, c1) stacks."""
+    k = a0.shape[0]
+    q = t["qs"][:k, None]
+    mu = t["mu"][:k, None]
+    d0 = mulmod_barrett(a0, b0, q, mu)
+    d1 = addmod(mulmod_barrett(a0, b1, q, mu),
+                mulmod_barrett(a1, b0, q, mu), q)
+    d2 = mulmod_barrett(a1, b1, q, mu)
+    ks0, ks1 = batched_keyswitch(d2[:, None], evk_b, evk_a, t, fsp=fsp,
+                                 use_pallas=use_pallas, tile=tile)
+    return addmod(d0, ks0[:, 0], q), addmod(d1, ks1[:, 0], q)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "tile"))
+def rescale_banks(c0, c1, t, fsp=None, *, use_pallas: bool | None = None,
+                  tile: int = 8):
+    """Rescale by the last basis prime: both ciphertext halves ride one
+    fused ``mod_down_banks`` pipeline as a batch of two.  t's basis is
+    the ciphertext basis itself (its last prime is the one dropped)."""
+    acc = jnp.stack([c0, c1], axis=1)                 # (k+1, 2, n)
+    out = mod_down_banks(acc, t, fsp=fsp, use_pallas=use_pallas, tile=tile)
+    return out[:, 0], out[:, 1]
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "tile"))
+def galois_ks_banks(c0, c1, idx, evk_b, evk_a, t, fsp=None, *,
+                    use_pallas: bool | None = None, tile: int = 8):
+    """Slot rotation / conjugation: NTT-domain gather on both halves
+    (one ``galois_banks`` kernel each — no iNTT/NTT round trip), then the
+    fused key switch of the permuted c1 under the Galois key."""
+    k = c0.shape[0]
+    q = t["qs"][:k, None]
+    c0g = ops.galois_banks(c0, idx, use_pallas=use_pallas, tile=tile)
+    c1g = ops.galois_banks(c1, idx, use_pallas=use_pallas, tile=tile)
+    ks0, ks1 = batched_keyswitch(c1g[:, None], evk_b, evk_a, t, fsp=fsp,
+                                 use_pallas=use_pallas, tile=tile)
+    return addmod(c0g, ks0[:, 0], q), ks1[:, 0]
+
+
+@functools.lru_cache(maxsize=None)
+def _scalar_pack(primes: tuple[int, ...]) -> dict:
+    return FB.build_scalar_pack(list(primes))
+
+
+class EvalPlan:
+    """Precomputed device tables + jitted programs for one CkksContext.
+
+    The plan caches per-basis artifacts (packs, stacked keys, gather
+    rows) so a serving loop pays keygen/stacking once; ``prepare`` makes
+    the warm-up explicit for latency-sensitive callers (see
+    examples/private_inference.py)."""
+
+    def __init__(self, ctx, *, use_pallas: bool | None = None, tile: int = 8):
+        self.ctx = ctx
+        self.n = ctx.n
+        self.natural = self.n >= ops.FOURSTEP_MIN_N
+        self._kw = dict(use_pallas=use_pallas, tile=tile)
+        self._keys: dict = {}        # ('relin', basis) | ('galois', g, basis)
+        self._idx: dict[int, jnp.ndarray] = {}
+        self._rescale_tables: dict = {}      # basis -> (t, fsp) views
+
+    # ------------------------------------------------------------ tables
+
+    def _packs(self, full: tuple[int, ...]):
+        """(t, fsp) for a basis whose *last* prime is the special/dropped
+        one.  Past the four-step threshold the size-n twiddles live in
+        the FourStepPack and t shrinks to the per-prime scalar columns."""
+        if self.natural:
+            return _scalar_pack(full), rns.fourstep_basis_pack(full, self.n)
+        return rns.basis_pack(full, self.n), None
+
+    def keyswitch_tables(self, basis: tuple[int, ...]):
+        return self._packs(basis + (self.ctx.special,))
+
+    def rescale_tables(self, basis: tuple[int, ...]):
+        if basis not in self._rescale_tables:
+            if self.natural:
+                # the FourStepPack carries no basis-relative rows, so
+                # rescale shares a slice of the keyswitch pack
+                # (basis+special) instead of building a second full pack
+                # per basis; only the cheap scalar columns (pinv =
+                # q_l^-1) are rescale-specific
+                _, ks_fsp = self.keyswitch_tables(basis)
+                self._rescale_tables[basis] = (
+                    _scalar_pack(basis),
+                    FB.slice_fourstep_pack(ks_fsp, slice(0, len(basis))))
+            else:
+                self._rescale_tables[basis] = self._packs(basis)
+        return self._rescale_tables[basis]
+
+    # -------------------------------------------------------------- keys
+
+    def _stacked(self, key, builder):
+        if key not in self._keys:
+            evk = builder()
+            self._keys[key] = (jnp.stack([p[0].data for p in evk]),
+                               jnp.stack([p[1].data for p in evk]))
+        return self._keys[key]
+
+    def relin_key(self, basis: tuple[int, ...]):
+        """(k, k+1, n) stacked relinearization key digit tensors."""
+        return self._stacked(("relin", basis),
+                             lambda: self.ctx.relin_keys(basis))
+
+    def galois_key(self, g: int, basis: tuple[int, ...]):
+        return self._stacked(("galois", g, basis),
+                             lambda: self.ctx.galois_keys(g, basis))
+
+    def eval_idx(self, g: int) -> jnp.ndarray:
+        """(n,) NTT-domain gather row for sigma_g under this ring's
+        frequency-order convention (natural past the four-step threshold,
+        bitrev below it)."""
+        if g not in self._idx:
+            self._idx[g] = jnp.asarray(
+                galois_eval_perm(g, self.n, self.natural), jnp.int32)
+        return self._idx[g]
+
+    def rotation_group_element(self, r: int) -> int:
+        return pow(5, r, 2 * self.n)
+
+    def prepare(self, basis: tuple[int, ...] | None = None,
+                rotations=(), conjugate: bool = False, relin: bool = True,
+                warm_jit: bool = True):
+        """Eagerly build every table/key/gather-row a serving loop will
+        need, so no request pays keygen or pack construction.
+
+        ``warm_jit`` additionally traces and compiles each jitted scheme
+        program with a zero ciphertext, so the first real request is a
+        pure device dispatch (the programs are shape-keyed: one warm-up
+        covers every rotation amount at the same basis)."""
+        basis = tuple(basis if basis is not None else self.ctx.qs)
+        self.keyswitch_tables(basis)
+        self.rescale_tables(basis)
+        if relin:
+            self.relin_key(basis)
+        gs = [g for g in (self.rotation_group_element(r) for r in rotations)
+              if g != 1]
+        if conjugate:
+            gs.append(2 * self.n - 1)
+        for g in gs:
+            self.galois_key(g, basis)
+            self.eval_idx(g)
+        if warm_jit:
+            z = RnsPoly(jnp.zeros((len(basis), self.n), jnp.uint32), basis, True)
+            zct = Ciphertext(z, z, 1.0)
+            if relin:
+                self.multiply(zct, zct)
+            if len(basis) > 1:
+                self.rescale(zct)
+            if gs:
+                self.apply_galois(zct, gs[0])
+        return self
+
+    # ------------------------------------------------------- scheme ops
+
+    def multiply(self, a: Ciphertext, b: Ciphertext) -> Ciphertext:
+        assert a.primes == b.primes
+        basis = a.primes
+        t, fsp = self.keyswitch_tables(basis)
+        eb, ea = self.relin_key(basis)
+        c0, c1 = multiply_banks(a.c0.data, a.c1.data, b.c0.data, b.c1.data,
+                                eb, ea, t, fsp, **self._kw)
+        return Ciphertext(RnsPoly(c0, basis, True), RnsPoly(c1, basis, True),
+                          a.scale * b.scale)
+
+    def rescale(self, a: Ciphertext) -> Ciphertext:
+        basis = a.primes
+        t, fsp = self.rescale_tables(basis)
+        c0, c1 = rescale_banks(a.c0.data, a.c1.data, t, fsp, **self._kw)
+        rest = basis[:-1]
+        return Ciphertext(RnsPoly(c0, rest, True), RnsPoly(c1, rest, True),
+                          a.scale / basis[-1])
+
+    def apply_galois(self, a: Ciphertext, g: int) -> Ciphertext:
+        basis = a.primes
+        t, fsp = self.keyswitch_tables(basis)
+        eb, ea = self.galois_key(g, basis)
+        c0, c1 = galois_ks_banks(a.c0.data, a.c1.data, self.eval_idx(g),
+                                 eb, ea, t, fsp, **self._kw)
+        return Ciphertext(RnsPoly(c0, basis, True), RnsPoly(c1, basis, True),
+                          a.scale)
+
+    def rotate(self, a: Ciphertext, r: int) -> Ciphertext:
+        g = self.rotation_group_element(r)
+        if g == 1:                       # identity automorphism: no-op
+            return Ciphertext(a.c0, a.c1, a.scale)   # fresh ct, no aliasing
+        return self.apply_galois(a, g)
+
+    def conjugate(self, a: Ciphertext) -> Ciphertext:
+        return self.apply_galois(a, 2 * self.n - 1)

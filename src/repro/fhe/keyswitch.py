@@ -11,9 +11,12 @@ Paper architecture -> code mapping:
 This module is the host-orchestrated *oracle* path: the digit loop is a
 Python loop, but every ring op inside it is already a multi-prime bank
 dispatch (one fused (prime, batch_tile) kernel / vmap per NTT stack —
-see ``kernels.ops``).  The fully fused production path that also folds
-the digit loop into device axes is ``fhe.batched.batched_keyswitch``;
-tests pin the two together bit-exactly.
+see ``kernels.ops``).  Since the EvalPlan refactor the CKKS scheme layer
+no longer calls it: ``CkksContext.multiply/rescale/rotate`` lower to the
+fully fused ``fhe.batched.batched_keyswitch`` / ``mod_down_banks``
+programs via ``fhe.evalplan``, and this module survives purely as the
+bit-exact test pin for those paths (tests/test_keyswitch_banks.py,
+tests/test_evalplan.py).
 
 Large-N dispatch: at ring sizes n >= ``kernels.ops.FOURSTEP_MIN_N``
 (2^13), every ``RnsPoly`` transform below automatically routes through

@@ -18,6 +18,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import math
 
 import jax.numpy as jnp
 import numpy as np
@@ -132,6 +133,13 @@ class RnsPoly:
     def drop_last(self) -> "RnsPoly":
         return RnsPoly(self.data[:-1], self.primes[:-1], self.is_ntt)
 
+    def automorphism(self, idx) -> "RnsPoly":
+        """NTT-domain Galois automorphism: one gather over the stack
+        (``ops.galois_banks``); idx from ``core.params.galois_eval_perm``
+        for this ring's frequency-order convention."""
+        assert self.is_ntt
+        return self._like(ops.galois_banks(self.data, idx))
+
 
 # ------------------------------------------------------- constructions
 
@@ -191,6 +199,31 @@ def crt_reconstruct_centered(poly: RnsPoly) -> np.ndarray:
         acc += row.astype(object) * (Qi * t)
     acc %= Q
     return np.where(acc > Q // 2, acc - Q, acc)
+
+
+def centered_to_float(big: np.ndarray, scale: float = 1.0) -> np.ndarray:
+    """Centered big-int object array -> float64, divided by ``scale``.
+
+    The common case is one vectorized C-level cast (replacing the old
+    per-coefficient ``float(x) for x in big`` Python loop in decode);
+    the exact object-int path survives only for magnitudes past float64
+    range (modulus products beyond ~2^1024).  There each coefficient is
+    shifted down to a 64-bit mantissa, divided by the (possibly
+    non-integral) scale in float, and rescaled with ``ldexp`` — so the
+    division is exact to float64 precision whenever x/scale itself is
+    representable, for any basis depth."""
+    try:
+        return big.astype(np.float64) / scale
+    except OverflowError:
+        def lift(x):
+            a = -x if x < 0 else x
+            sh = max(0, a.bit_length() - 64)
+            try:
+                v = math.ldexp(float(a >> sh) / scale, sh)
+            except OverflowError:         # x/scale itself beyond float64:
+                v = math.inf              # saturate rather than crash decode
+            return -v if x < 0 else v
+        return np.array([lift(int(x)) for x in big])
 
 
 def make_primes(n: int, count: int, bits: int = 30) -> list[int]:

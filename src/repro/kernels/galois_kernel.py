@@ -1,0 +1,44 @@
+"""Galois automorphism as a fused NTT-domain gather kernel.
+
+In the evaluation domain the automorphism sigma_g is a pure permutation
+of NTT slots (no sign corrections — see ``core.params.galois_eval_perm``),
+and the permutation is the *same* for every RNS prime row: the roots are
+psi-powers whose exponent arithmetic never touches q.  So the whole
+ciphertext automorphism is one (prime, batch_tile) gather over the
+stacked (k, B, n) layout, with a single shared (n,) index row resident
+in VMEM — the device op that lets ``rotate``/``conjugate`` skip the
+iNTT -> permute -> NTT round trip the host path pays.
+
+The index row rides in as a (1, n) int32 block broadcast to every
+program (like the TablePack weight rows of ``ntt_kernel``); the gather
+itself is a ``jnp.take`` along the lane axis, which Mosaic lowers to a
+dynamic-gather and interpret mode executes directly.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _galois_banks_kernel(x_ref, idx_ref, o_ref):
+    o_ref[0] = jnp.take(x_ref[0], idx_ref[0], axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def galois_banks_pallas(x, idx2, *, tile: int = 8, interpret: bool = True):
+    """x: (k, batch, n) u32; idx2: (1, n) int32 gather row shared by all
+    prime rows.  out[p, b, j] = x[p, b, idx2[0, j]]."""
+    k, b, n = x.shape
+    assert b % tile == 0
+    return pl.pallas_call(
+        _galois_banks_kernel,
+        grid=(k, b // tile),
+        in_specs=[pl.BlockSpec((1, tile, n), lambda p, i: (p, i, 0)),
+                  pl.BlockSpec((1, n), lambda p, i: (0, 0))],
+        out_specs=pl.BlockSpec((1, tile, n), lambda p, i: (p, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((k, b, n), jnp.uint32),
+        interpret=interpret,
+    )(x, idx2)

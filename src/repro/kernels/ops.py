@@ -24,7 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.params import NTTParams, bitrev_perm
-from repro.kernels import ntt_kernel, dyadic_kernel, ref
+from repro.kernels import ntt_kernel, dyadic_kernel, galois_kernel, ref
 
 # Single-kernel tile budget: below this ring size the whole log2(n)-stage
 # transform runs as ONE fused banks kernel; at or above it the large-N
@@ -189,6 +189,30 @@ def twiddle_mul_banks(x, w, wp, qs, *, use_pallas: bool | None = None,
     x3, b = _pad_mid(x3, tile)
     out = ntt_kernel.twiddle_mul_banks_pallas(x3, qs[:, None], w, wp,
                                               tile=tile, interpret=not _on_tpu())
+    return out[:, :b].reshape(shape)
+
+
+def galois_banks(x, idx, *, use_pallas: bool | None = None, tile: int = 8):
+    """Galois automorphism in the NTT domain: out[..., j] = x[..., idx[j]].
+
+    x: (k, ..., n) u32 NTT-form residue rows; idx: (n,) int32 slot
+    permutation from ``core.params.galois_eval_perm`` (the same row for
+    every prime — root-exponent arithmetic never touches q).  One fused
+    (prime, batch_tile) gather kernel on the Pallas path; a single jnp
+    gather on the reference path.  This replaces the host
+    iNTT -> permute -> NTT round trip for rotate/conjugate."""
+    use_pallas = _on_tpu() if use_pallas is None else use_pallas
+    x = jnp.asarray(x)
+    idx = jnp.asarray(idx, jnp.int32)
+    if not use_pallas:
+        return ref.galois_banks_ref(x, idx)
+    k, n = x.shape[0], x.shape[-1]
+    shape = x.shape
+    x3 = x.reshape(k, -1, n)
+    tile = max(1, min(tile, x3.shape[1]))
+    x3, b = _pad_mid(x3, tile)
+    out = galois_kernel.galois_banks_pallas(x3, idx[None, :], tile=tile,
+                                            interpret=not _on_tpu())
     return out[:, :b].reshape(shape)
 
 

@@ -73,6 +73,13 @@ def twiddle_mul_banks_ref(x, qs, w, wp):
                         qs.reshape((k,) + ex + (1,)))
 
 
+def galois_banks_ref(x, idx):
+    """NTT-domain Galois automorphism: a pure gather along the lane axis,
+    identical for every prime row (see ``core.params.galois_eval_perm``).
+    x: (k, ..., n); idx: (n,) int32."""
+    return jnp.take(jnp.asarray(x), jnp.asarray(idx), axis=-1)
+
+
 def dyadic_inner_banks_ref(ext, evk, qs, mus):
     """ext: (d, k, B, n); evk: (d, k, n); qs/mus: (k,).  Accumulates the
     digit products in the same order as the fused kernel (exact match)."""

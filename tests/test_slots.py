@@ -1,0 +1,65 @@
+"""Slot-semantics depth chains against a plaintext slot oracle.
+
+Every homomorphic op is mirrored on a cleartext slot vector and the
+chain is decoded once at the end, so an ordering/convention bug anywhere
+in the device pipeline (Galois gather rows, four-step natural-order
+dispatch, rescale scale tracking) shows up as O(1) garbage rather than
+rounding noise.  Runs at n=2^10 (CG bitrev rows, tier-1) and n=2^14
+(four-step natural-order rows end to end, slow suite)."""
+import numpy as np
+import pytest
+
+from repro.fhe.ckks import CkksContext
+
+
+def _chain(ctx, atol):
+    rng = np.random.default_rng(77)
+    z1 = rng.uniform(-1, 1, ctx.slots) + 1j * rng.uniform(-1, 1, ctx.slots)
+    z2 = rng.uniform(-1, 1, ctx.slots) + 1j * rng.uniform(-1, 1, ctx.slots)
+    mask = rng.uniform(-1, 1, ctx.slots)
+
+    ct = ctx.encrypt(ctx.encode(z1))
+    oracle = z1.copy()
+
+    ct = ctx.rotate(ct, 3)                       # slots left by 3
+    oracle = np.roll(oracle, -3)
+    ct = ctx.mul_plain(ct, ctx.encode(mask))     # slotwise plaintext mask
+    oracle = oracle * mask
+    ct = ctx.rescale(ct)
+    got = ctx.decrypt_decode(ct)
+    np.testing.assert_allclose(got, oracle, atol=atol)
+
+    ct = ctx.conjugate(ct)                       # slotwise conjugate
+    oracle = np.conj(oracle)
+    ct2 = ctx.rotate(ctx.encrypt(ctx.encode(z2)), 5)
+    # level-align ct2 with the once-rescaled ct (scale-matched constant-1
+    # product, as in test_fhe.test_two_level_multiply)
+    ct2 = ctx.rescale(ctx.mul_plain(ct2, ctx.encode(np.ones(ctx.slots))))
+    assert ct2.primes == ct.primes
+    z2r = np.roll(z2, -5)
+    prod = ctx.multiply(ct, ct2)                 # ct x ct, depth 2
+    oracle = oracle * z2r
+    prod = ctx.rescale(prod)
+    got = ctx.decrypt_decode(prod)
+    np.testing.assert_allclose(got, oracle, atol=atol)
+
+    # rotation composition: rot(a) then rot(b) == rot(a+b)
+    back = ctx.rotate(ctx.rotate(prod, 2), ctx.slots - 2)
+    got = ctx.decrypt_decode(back)
+    np.testing.assert_allclose(got, oracle, atol=atol)
+
+
+def test_slot_chain_2_10():
+    """CG ring: rotate/conjugate/mul_plain/multiply/rescale depth chain
+    vs the slot oracle (bitrev NTT rows)."""
+    _chain(CkksContext(n=1 << 10, levels=2, scale_bits=28, seed=41), atol=1e-2)
+
+
+@pytest.mark.slow  # ~60 s: full scheme chain at the paper's 2^14 ring
+def test_slot_chain_2_14():
+    """Four-step ring: the same chain with every transform on the
+    large-N banks pipeline (natural-order NTT rows) — the scheme layer
+    exercising the §IX path end to end."""
+    # post-rescale scale is ~2^26 at this ring, so depth-2 noise sits
+    # around 1e-2 relative; a convention bug is O(1) garbage
+    _chain(CkksContext(n=1 << 14, levels=2, scale_bits=28, seed=43), atol=3e-2)
