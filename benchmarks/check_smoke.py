@@ -1,0 +1,62 @@
+"""Gate on the smoke-bench JSON: the batched-ciphertext rows must exist
+and batching must actually pay.
+
+Usage: python -m benchmarks.check_smoke BENCH_smoke.json
+
+Checks (CI runs this right after ``benchmarks.run --smoke --json``):
+
+  1. every required ``ckks_*_b{B}`` row is present with a numeric
+     ``us_per_call`` (an ERROR row has ``null``),
+  2. per-op time of the batch-32 multiply (``us_per_call / 32``) is
+     strictly lower than the batch-1 row — the whole point of the
+     batched EvalPlan layer is amortizing dispatch overhead across a
+     ciphertext batch, so a regression here means the serving layer's
+     throughput claim no longer holds.
+"""
+from __future__ import annotations
+
+import json
+import re
+import sys
+
+REQUIRED = ("ckks_multiply_b1", "ckks_multiply_b8", "ckks_multiply_b32",
+            "ckks_rotate_b32")
+
+
+def per_op_us(row: dict) -> float:
+    """us_per_call is one batched dispatch; the batch size rides in the
+    row name's ``_b{B}`` suffix."""
+    b = int(re.search(r"_b(\d+)$", row["name"]).group(1))
+    return row["us_per_call"] / b
+
+
+def check(path: str) -> int:
+    with open(path) as f:
+        rec = json.load(f)
+    rows = {r["name"]: r for r in rec.get("rows", [])}
+    bad = False
+    for name in REQUIRED:
+        row = rows.get(name)
+        if row is None or not isinstance(row.get("us_per_call"), (int, float)):
+            print(f"check_smoke: FAIL — row {name!r} missing or errored "
+                  f"({row.get('derived') if row else 'absent'})")
+            bad = True
+    if bad:
+        return 1
+    b1 = per_op_us(rows["ckks_multiply_b1"])
+    b32 = per_op_us(rows["ckks_multiply_b32"])
+    print(f"check_smoke: multiply per-op b1={b1:.1f}us b32={b32:.1f}us "
+          f"(x{b1 / b32:.2f} amortization)")
+    if not b32 < b1:
+        print("check_smoke: FAIL — batch-32 multiply is not faster per op "
+              "than batch-1; the batched dispatch layer regressed")
+        return 1
+    print("check_smoke: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    if len(sys.argv) != 2:
+        print(__doc__)
+        sys.exit(2)
+    sys.exit(check(sys.argv[1]))

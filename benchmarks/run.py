@@ -7,11 +7,13 @@ Usage: PYTHONPATH=src python -m benchmarks.run [--skip-slow | --smoke]
                                                [--json PATH]
 
 ``--smoke`` runs the fast CI subset (NTT-128, the bank-parallel
-keyswitch throughput datapoints, and the EvalPlan ckks_multiply /
-ckks_rotate scheme-op rows) and exits nonzero on any ERROR row.
-``--json PATH`` additionally writes the rows as a JSON record — CI
-uploads the smoke run's file as a ``BENCH_*.json`` artifact so a bench
-trajectory accumulates across PRs.
+keyswitch throughput datapoints, the EvalPlan ckks_multiply /
+ckks_rotate scheme-op rows, and the ciphertext-batched
+ckks_multiply_b{1,8,32} / ckks_rotate_b32 rows) and exits nonzero on
+any ERROR row.  ``--json PATH`` additionally writes the rows as a JSON
+record — CI uploads the smoke run's file as a ``BENCH_*.json`` artifact
+so a bench trajectory accumulates across PRs, then gates it through
+``benchmarks.check_smoke`` (batch-32 multiply must beat batch-1 per op).
 """
 from __future__ import annotations
 

@@ -258,8 +258,12 @@ def batched_keyswitch(d2, evk_b, evk_a, t: dict, *, fsp: dict | None = None,
     """Paper Fig 22 pipeline, vectorized over a ciphertext batch AND the
     RNS prime rows — the bank-parallel production path.
 
-    d2:      (k, B, n) u32, NTT form over the k-prime basis (digit rows)
-    evk_b/a: (k, k+1, n) key-switch key digits over basis+special
+    d2:      (k, B, n) u32, NTT form over the k-prime basis (digit rows);
+             a ciphertext batch folds into the B axis (the batched
+             EvalPlan programs dispatch B independent ciphertexts here)
+    evk_b/a: (k, k+1, n) key-switch key digits over basis+special,
+             shared by the whole batch — or (k, k+1, B, n) per-batch
+             digits, for a Galois batch mixing rotation keys
     t:       TablePack for k+1 primes (row k = the special prime P)
     fsp:     optional FourStepPack for the same k+1 primes — when given,
              every NTT/iNTT stage dispatches through the large-N

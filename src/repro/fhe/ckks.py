@@ -24,7 +24,7 @@ import jax.numpy as jnp
 from repro.core.modmath import submod
 from repro.core.params import galois_coeff_tables
 from repro.fhe import rns
-from repro.fhe.evalplan import Ciphertext, EvalPlan
+from repro.fhe.evalplan import Ciphertext, EvalPlan, check_same_basis
 from repro.fhe.rns import RnsPoly
 
 __all__ = ["Ciphertext", "CkksContext", "galois_int_coeffs", "galois_poly"]
@@ -154,11 +154,11 @@ class CkksContext:
     # --------------------------------------------------------- homomorphic
 
     def add(self, a: Ciphertext, b: Ciphertext) -> Ciphertext:
-        assert a.primes == b.primes and abs(a.scale - b.scale) / a.scale < 1e-9
+        check_same_basis("add", a, b, check_scale=True)
         return Ciphertext(a.c0.add(b.c0), a.c1.add(b.c1), a.scale)
 
     def sub(self, a: Ciphertext, b: Ciphertext) -> Ciphertext:
-        assert a.primes == b.primes
+        check_same_basis("sub", a, b, check_scale=True)
         return Ciphertext(a.c0.sub(b.c0), a.c1.sub(b.c1), a.scale)
 
     def add_plain(self, a: Ciphertext, pt: RnsPoly) -> Ciphertext:
@@ -186,6 +186,26 @@ class CkksContext:
 
     def conjugate(self, a: Ciphertext) -> Ciphertext:
         return self.plan().conjugate(a)
+
+    # ------------------------------------------------- batched (B cts, 1 dispatch)
+
+    def multiply_many(self, As, Bs) -> list[Ciphertext]:
+        """B independent products at one basis as ONE device dispatch
+        (``evalplan.multiply_many_banks``); bit-identical to a Python
+        loop of ``multiply``."""
+        return self.plan().multiply_many(As, Bs)
+
+    def rescale_many(self, cts) -> list[Ciphertext]:
+        return self.plan().rescale_many(cts)
+
+    def rotate_many(self, cts, rs) -> list[Ciphertext]:
+        """Rotate B ciphertexts by per-ciphertext amounts in one
+        dispatch — the batch may mix rotation amounts (per-ciphertext
+        Galois gather rows + key digits)."""
+        return self.plan().rotate_many(cts, rs)
+
+    def conjugate_many(self, cts) -> list[Ciphertext]:
+        return self.plan().conjugate_many(cts)
 
 
 # ------------------------------------------------- Galois automorphism

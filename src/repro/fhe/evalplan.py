@@ -26,6 +26,18 @@ raw (k, n) residue stacks:
   rotate/conjugate -> ``galois_ks_banks`` (one NTT-domain gather kernel
                                      + fused batched_keyswitch)
 
+Each program also has a ciphertext-batched ``*_many`` twin
+(``multiply_many_banks`` / ``rescale_many_banks`` /
+``galois_ks_many_banks``) taking (B, k, n) leading-batch stacks: B
+independent ciphertexts at the same basis ride ONE dispatch, with the
+batch folded into the same (prime, batch_tile) kernel grids — the
+throughput layer a serving loop runs on (``fhe.serve``).  A Galois
+batch carries a per-ciphertext gather row and per-ciphertext key
+digits, so one dispatch can mix rotation amounts.  Batching never
+crosses bases: ciphertexts at different levels shape-mismatch at the
+kernel grid, so the engine (and ``EvalPlan.*_many``) group by basis
+first and mixed-basis batches raise ``ValueError``.
+
 ``RnsPoly`` stays as a thin (data, primes, is_ntt) view around the
 stacks; no Python loop over primes, digits or rows survives in any of
 these paths.  The host-orchestrated ``fhe.keyswitch`` module remains as
@@ -65,6 +77,43 @@ class Ciphertext:
     @property
     def level(self) -> int:
         return len(self.primes) - 1
+
+
+# ------------------------------------------------------- scheme-API checks
+#
+# Public scheme entry points validate with explicit ``ValueError``s, not
+# ``assert`` — asserts are stripped under ``python -O`` and a basis or
+# scale mismatch would then produce silently wrong ciphertexts.
+
+def _ct_desc(ct: Ciphertext) -> str:
+    return f"primes={ct.primes} (level {ct.level}, scale {ct.scale:g})"
+
+
+def check_same_basis(op: str, a: Ciphertext, b: Ciphertext,
+                     check_scale: bool = False):
+    """Raise ``ValueError`` (never assert) when two operands disagree on
+    basis — or on scale, for ops like ``add`` that require it."""
+    if a.primes != b.primes:
+        raise ValueError(
+            f"{op}: operand bases differ — lhs {_ct_desc(a)} vs rhs "
+            f"{_ct_desc(b)}; rescale / level-align both operands first "
+            "(mixed bases never combine or batch)")
+    if check_scale and abs(a.scale - b.scale) > 1e-9 * abs(a.scale):
+        raise ValueError(
+            f"{op}: operand scales differ — lhs {_ct_desc(a)} vs rhs "
+            f"{_ct_desc(b)}; rescale or scale-match the operands first")
+
+
+def check_level(op: str, ct: Ciphertext, need: int = 0):
+    """Explicit level-exhaustion check: ``rescale`` needs a modulus to
+    drop (need=1) and every op needs a non-empty basis, otherwise the
+    failure surfaces as an opaque shape error deep in the kernel stack."""
+    if ct.level < need:
+        raise ValueError(
+            f"{op}: prime chain exhausted — ciphertext has "
+            f"{len(ct.primes)} modulus(es) left ({_ct_desc(ct)}) but "
+            f"{op} needs level >= {need}; build the CkksContext with "
+            "more levels for deeper circuits")
 
 
 # ------------------------------------------------- jitted device programs
@@ -119,6 +168,71 @@ def galois_ks_banks(c0, c1, idx, evk_b, evk_a, t, fsp=None, *,
     return addmod(c0g, ks0[:, 0], q), ks1[:, 0]
 
 
+# ------------------------------------- ciphertext-batched device programs
+#
+# The ``*_many`` twins take (B, k, n) leading-batch stacks — B
+# independent ciphertexts at the same basis — and fold the batch into
+# the same fused pipelines, so a serving loop pays ONE dispatch (and one
+# jit cache entry per (B, k, n) signature) for the whole group.  Every
+# stage is elementwise per batch row, so the results are bit-identical
+# to a Python loop of the single-ciphertext programs above (pinned in
+# tests/test_batched_eval.py).
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "tile"))
+def multiply_many_banks(a0, a1, b0, b1, evk_b, evk_a, t, fsp=None, *,
+                        use_pallas: bool | None = None, tile: int = 8):
+    """B ciphertext tensor products + relinearization, one program.
+
+    a0/a1/b0/b1: (B, k, n) u32 NTT-form halves; evk_b/evk_a: (k, k+1, n)
+    relin key digits shared by the batch.  Returns (B, k, n) stacks."""
+    k = a0.shape[1]
+    q = t["qs"][:k][None, :, None]
+    mu = t["mu"][:k][None, :, None]
+    d0 = mulmod_barrett(a0, b0, q, mu)
+    d1 = addmod(mulmod_barrett(a0, b1, q, mu),
+                mulmod_barrett(a1, b0, q, mu), q)
+    d2 = mulmod_barrett(a1, b1, q, mu)
+    ks0, ks1 = batched_keyswitch(d2.swapaxes(0, 1), evk_b, evk_a, t, fsp=fsp,
+                                 use_pallas=use_pallas, tile=tile)
+    return (addmod(d0, ks0.swapaxes(0, 1), q),
+            addmod(d1, ks1.swapaxes(0, 1), q))
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "tile"))
+def rescale_many_banks(c0, c1, t, fsp=None, *, use_pallas: bool | None = None,
+                       tile: int = 8):
+    """Rescale B ciphertexts by the last basis prime: all 2B halves ride
+    one fused ``mod_down_banks`` pipeline.  c0/c1: (B, k+1, n)."""
+    B, kp1, n = c0.shape
+    acc = jnp.stack([c0, c1], axis=1)                  # (B, 2, k+1, n)
+    acc = acc.reshape(2 * B, kp1, n).swapaxes(0, 1)    # (k+1, 2B, n)
+    out = mod_down_banks(acc, t, fsp=fsp, use_pallas=use_pallas, tile=tile)
+    out = out.swapaxes(0, 1).reshape(B, 2, kp1 - 1, n)
+    return out[:, 0], out[:, 1]
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "tile"))
+def galois_ks_many_banks(c0, c1, idx, evk_b, evk_a, t, fsp=None, *,
+                         use_pallas: bool | None = None, tile: int = 8):
+    """B slot rotations / conjugations, one program — the batch may MIX
+    automorphisms: idx is a (B, n) stack of per-ciphertext gather rows
+    and evk_b/evk_a are (k, k+1, B, n) per-ciphertext Galois key digits
+    (the batched ``dyadic_inner_banks`` consumes them elementwise).  A
+    uniform batch passes the shared (n,) row + (k, k+1, n) digits
+    instead — the underlying kernels broadcast either layout.
+
+    c0/c1: (B, k, n) u32 NTT-form halves.  Returns (B, k, n) stacks."""
+    k = c0.shape[1]
+    q = t["qs"][:k][None, :, None]
+    c0g = ops.galois_banks(c0, idx, use_pallas=use_pallas, tile=tile,
+                           batch_leading=True)
+    c1g = ops.galois_banks(c1, idx, use_pallas=use_pallas, tile=tile,
+                           batch_leading=True)
+    ks0, ks1 = batched_keyswitch(c1g.swapaxes(0, 1), evk_b, evk_a, t,
+                                 fsp=fsp, use_pallas=use_pallas, tile=tile)
+    return addmod(c0g, ks0.swapaxes(0, 1), q), ks1.swapaxes(0, 1)
+
+
 @functools.lru_cache(maxsize=None)
 def _scalar_pack(primes: tuple[int, ...]) -> dict:
     return FB.build_scalar_pack(list(primes))
@@ -138,6 +252,7 @@ class EvalPlan:
         self.natural = self.n >= ops.FOURSTEP_MIN_N
         self._kw = dict(use_pallas=use_pallas, tile=tile)
         self._keys: dict = {}        # ('relin', basis) | ('galois', g, basis)
+        self._batch_keys: dict = {}  # (gs tuple, basis) -> stacked, bounded
         self._idx: dict[int, jnp.ndarray] = {}
         self._rescale_tables: dict = {}      # basis -> (t, fsp) views
 
@@ -188,6 +303,33 @@ class EvalPlan:
         return self._stacked(("galois", g, basis),
                              lambda: self.ctx.galois_keys(g, basis))
 
+    # The stacked mixed-batch tensors are big ((k, k+1, B, n) x2 per
+    # pattern) and the pattern space is order-sensitive (the serve
+    # engine canonicalizes by sorting each galois group by g), so this
+    # cache is a BOUNDED LRU: steady-state traffic that re-dispatches
+    # the same g sequences stays resident, adversarially random traffic
+    # evicts instead of growing device memory forever.
+    _BATCH_KEY_CACHE_MAX = 32
+
+    def _galois_batch_key(self, gs: tuple[int, ...], basis: tuple[int, ...]):
+        """(k, k+1, B, n) per-ciphertext key stacks + (B, n) gather rows
+        for a mixed-automorphism batch, cached per (gs, basis) — a
+        steady-state serving pattern re-dispatches the same g sequence,
+        and restacking B full key tensors per call is pure waste."""
+        key = (gs, basis)
+        if key in self._batch_keys:
+            # LRU touch: steady-state patterns stay resident
+            self._batch_keys[key] = self._batch_keys.pop(key)
+        else:
+            if len(self._batch_keys) >= self._BATCH_KEY_CACHE_MAX:
+                self._batch_keys.pop(next(iter(self._batch_keys)))
+            keys = [self.galois_key(g, basis) for g in gs]
+            self._batch_keys[key] = (
+                jnp.stack([kb for kb, _ in keys], axis=2),   # (k, k+1, B, n)
+                jnp.stack([ka for _, ka in keys], axis=2),
+                jnp.stack([self.eval_idx(g) for g in gs]))
+        return self._batch_keys[key]
+
     def eval_idx(self, g: int) -> jnp.ndarray:
         """(n,) NTT-domain gather row for sigma_g under this ring's
         frequency-order convention (natural past the four-step threshold,
@@ -202,14 +344,19 @@ class EvalPlan:
 
     def prepare(self, basis: tuple[int, ...] | None = None,
                 rotations=(), conjugate: bool = False, relin: bool = True,
-                warm_jit: bool = True):
+                warm_jit: bool = True, batch_sizes=()):
         """Eagerly build every table/key/gather-row a serving loop will
         need, so no request pays keygen or pack construction.
 
         ``warm_jit`` additionally traces and compiles each jitted scheme
         program with a zero ciphertext, so the first real request is a
         pure device dispatch (the programs are shape-keyed: one warm-up
-        covers every rotation amount at the same basis)."""
+        covers every rotation amount at the same basis).  A serving
+        engine should pass its padded batch signatures as
+        ``batch_sizes`` (e.g. the multiples of its batch tile it expects
+        to see): the ``*_many`` programs are shape-keyed on B, and an
+        unwarmed batch size pays full XLA compilation on the first real
+        request group."""
         basis = tuple(basis if basis is not None else self.ctx.qs)
         self.keyswitch_tables(basis)
         self.rescale_tables(basis)
@@ -231,12 +378,24 @@ class EvalPlan:
                 self.rescale(zct)
             if gs:
                 self.apply_galois(zct, gs[0])
+            for B in batch_sizes:
+                cts = [zct] * B
+                if relin:
+                    self.multiply_many(cts, cts)
+                if len(basis) > 1:
+                    self.rescale_many(cts)
+                if gs:                       # uniform batch (shared key)...
+                    self.galois_ks_many(cts, [gs[0]] * B)
+                if len(set(gs)) > 1 and B > 1:  # ...and the mixed signature
+                    mix = [gs[i % len(gs)] for i in range(B)]
+                    self.galois_ks_many(cts, mix)
         return self
 
     # ------------------------------------------------------- scheme ops
 
     def multiply(self, a: Ciphertext, b: Ciphertext) -> Ciphertext:
-        assert a.primes == b.primes
+        check_same_basis("multiply", a, b)
+        check_level("multiply", a)
         basis = a.primes
         t, fsp = self.keyswitch_tables(basis)
         eb, ea = self.relin_key(basis)
@@ -246,6 +405,7 @@ class EvalPlan:
                           a.scale * b.scale)
 
     def rescale(self, a: Ciphertext) -> Ciphertext:
+        check_level("rescale", a, need=1)
         basis = a.primes
         t, fsp = self.rescale_tables(basis)
         c0, c1 = rescale_banks(a.c0.data, a.c1.data, t, fsp, **self._kw)
@@ -254,6 +414,7 @@ class EvalPlan:
                           a.scale / basis[-1])
 
     def apply_galois(self, a: Ciphertext, g: int) -> Ciphertext:
+        check_level("apply_galois", a)
         basis = a.primes
         t, fsp = self.keyswitch_tables(basis)
         eb, ea = self.galois_key(g, basis)
@@ -270,3 +431,109 @@ class EvalPlan:
 
     def conjugate(self, a: Ciphertext) -> Ciphertext:
         return self.apply_galois(a, 2 * self.n - 1)
+
+    # --------------------------------------------- batched scheme ops
+    #
+    # B independent ciphertexts at ONE basis -> one jitted dispatch.
+    # Mixed bases raise (batching never crosses levels — group by basis
+    # upstream; ``fhe.serve.CkksServeEngine`` does exactly that).
+
+    def _common_basis(self, op: str, cts) -> tuple[int, ...]:
+        basis = cts[0].primes
+        for ct in cts[1:]:
+            if ct.primes != basis:
+                raise ValueError(
+                    f"{op}: batch mixes bases — {sorted({c.primes for c in cts}, key=len)}; "
+                    "batched dispatch requires every ciphertext at the "
+                    "same basis (group by level first)")
+        return basis
+
+    def multiply_many(self, As, Bs) -> list[Ciphertext]:
+        """B tensor+relinearize products as one ``multiply_many_banks``
+        dispatch.  As/Bs: equal-length ciphertext lists, all at one
+        basis; pairwise scales may differ (tracked per result)."""
+        if len(As) != len(Bs):
+            raise ValueError(f"multiply_many: {len(As)} lhs vs {len(Bs)} rhs")
+        if not As:
+            return []
+        for a, b in zip(As, Bs):
+            check_same_basis("multiply_many", a, b)
+            check_level("multiply_many", a)
+        basis = self._common_basis("multiply_many", list(As) + list(Bs))
+        t, fsp = self.keyswitch_tables(basis)
+        eb, ea = self.relin_key(basis)
+        stack = lambda ps: jnp.stack([p.data for p in ps])
+        c0, c1 = multiply_many_banks(
+            stack([a.c0 for a in As]), stack([a.c1 for a in As]),
+            stack([b.c0 for b in Bs]), stack([b.c1 for b in Bs]),
+            eb, ea, t, fsp, **self._kw)
+        return [Ciphertext(RnsPoly(c0[i], basis, True),
+                           RnsPoly(c1[i], basis, True),
+                           As[i].scale * Bs[i].scale)
+                for i in range(len(As))]
+
+    def rescale_many(self, cts) -> list[Ciphertext]:
+        """Rescale B ciphertexts (one basis) as one fused mod-down over
+        all 2B halves."""
+        if not cts:
+            return []
+        for ct in cts:
+            check_level("rescale_many", ct, need=1)
+        basis = self._common_basis("rescale_many", cts)
+        t, fsp = self.rescale_tables(basis)
+        c0, c1 = rescale_many_banks(
+            jnp.stack([ct.c0.data for ct in cts]),
+            jnp.stack([ct.c1.data for ct in cts]), t, fsp, **self._kw)
+        rest = basis[:-1]
+        return [Ciphertext(RnsPoly(c0[i], rest, True),
+                           RnsPoly(c1[i], rest, True),
+                           ct.scale / basis[-1])
+                for i, ct in enumerate(cts)]
+
+    def galois_ks_many(self, cts, gs) -> list[Ciphertext]:
+        """B automorphisms (one basis, possibly MIXED group elements gs)
+        as one ``galois_ks_many_banks`` dispatch: per-ciphertext gather
+        rows + per-ciphertext stacked Galois key digits.  A uniform
+        batch (every g equal — conjugate_many, same-amount rotation
+        groups) keeps the SHARED (k, k+1, n) key and (n,) gather row
+        instead of replicating them B times; both layouts flow through
+        the same program (the kernels broadcast the 3-D evk / 1-D idx)."""
+        if len(cts) != len(gs):
+            raise ValueError(f"galois_ks_many: {len(cts)} cts vs {len(gs)} gs")
+        if not cts:
+            return []
+        for ct in cts:
+            check_level("galois_ks_many", ct)
+        basis = self._common_basis("galois_ks_many", cts)
+        t, fsp = self.keyswitch_tables(basis)
+        if len(set(gs)) == 1:
+            eb, ea = self.galois_key(gs[0], basis)
+            idx = self.eval_idx(gs[0])
+        else:
+            eb, ea, idx = self._galois_batch_key(tuple(gs), basis)
+        c0, c1 = galois_ks_many_banks(
+            jnp.stack([ct.c0.data for ct in cts]),
+            jnp.stack([ct.c1.data for ct in cts]),
+            idx, eb, ea, t, fsp, **self._kw)
+        return [Ciphertext(RnsPoly(c0[i], basis, True),
+                           RnsPoly(c1[i], basis, True), ct.scale)
+                for i, ct in enumerate(cts)]
+
+    def rotate_many(self, cts, rs) -> list[Ciphertext]:
+        """Rotate B ciphertexts by per-ciphertext amounts ``rs`` in one
+        dispatch (identity rotations are returned as-is, exactly like
+        ``rotate``; the rest batch through ``galois_ks_many``)."""
+        if len(cts) != len(rs):
+            raise ValueError(f"rotate_many: {len(cts)} cts vs {len(rs)} rs")
+        gs = [self.rotation_group_element(r) for r in rs]
+        live = [i for i, g in enumerate(gs) if g != 1]
+        out = [Ciphertext(ct.c0, ct.c1, ct.scale) for ct in cts]
+        if live:
+            rotated = self.galois_ks_many([cts[i] for i in live],
+                                          [gs[i] for i in live])
+            for i, ct in zip(live, rotated):
+                out[i] = ct
+        return out
+
+    def conjugate_many(self, cts) -> list[Ciphertext]:
+        return self.galois_ks_many(cts, [2 * self.n - 1] * len(cts))

@@ -1,3 +1,19 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+import jax
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """Shared Pallas dispatch policy for every kernel entry point.
+
+    ``None`` (the default everywhere) resolves from the active backend:
+    compiled Mosaic kernels on TPU, interpret mode elsewhere.  Call
+    sites pass an explicit bool only to force a mode (the kernel
+    conformance tests do).  Centralizing this means a call site that
+    forgets to thread the flag gets the correct backend-resolved mode
+    instead of silently running the interpreter on TPU.
+    """
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return bool(interpret)

@@ -24,6 +24,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.modmath import MASK16
+from repro.kernels import resolve_interpret
 
 
 def _mulhi(a, b):
@@ -58,7 +59,8 @@ def _mac_kernel(acc_ref, a_ref, b_ref, o_ref, *, q: int, mu: int):
     o_ref[...] = jnp.where(s >= qc, s - qc, s)
 
 
-def _tile_call(kernel, args, *, tile: int, interpret: bool):
+def _tile_call(kernel, args, *, tile: int, interpret: bool | None):
+    interpret = resolve_interpret(interpret)
     b, n = args[0].shape
     assert b % tile == 0
     spec = pl.BlockSpec((tile, n), lambda i: (i, 0))
@@ -73,13 +75,13 @@ def _tile_call(kernel, args, *, tile: int, interpret: bool):
 
 
 @functools.partial(jax.jit, static_argnames=("q", "mu", "tile", "interpret"))
-def dyadic_mul(a, b, *, q: int, mu: int, tile: int = 8, interpret: bool = True):
+def dyadic_mul(a, b, *, q: int, mu: int, tile: int = 8, interpret: bool | None = None):
     kern = functools.partial(_mul_kernel, q=q, mu=mu)
     return _tile_call(kern, [a, b], tile=tile, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("q", "mu", "tile", "interpret"))
-def dyadic_mac(acc, a, b, *, q: int, mu: int, tile: int = 8, interpret: bool = True):
+def dyadic_mac(acc, a, b, *, q: int, mu: int, tile: int = 8, interpret: bool | None = None):
     kern = functools.partial(_mac_kernel, q=q, mu=mu)
     return _tile_call(kern, [acc, a, b], tile=tile, interpret=interpret)
 
@@ -88,7 +90,10 @@ def dyadic_mac(acc, a, b, *, q: int, mu: int, tile: int = 8, interpret: bool = T
 
 def _inner_banks_kernel(ext_ref, evk_ref, q_ref, mu_ref, o_ref, *, digits: int):
     """Program (p, i): acc = sum_d ext[d] .* evk[d] mod q_p over all
-    ``digits`` digit rows, accumulator VMEM-resident throughout."""
+    ``digits`` digit rows, accumulator VMEM-resident throughout.  The
+    evk block is either (d, 1, n) — one key row broadcast over the batch
+    tile — or (d, 1, tile, n) — per-batch-element key digits; both
+    broadcast against the (tile, n) ext rows."""
     q = q_ref[0, 0]
     mu = mu_ref[0, 0]
     acc = _barrett(ext_ref[0, 0], evk_ref[0, 0], q, mu)
@@ -101,19 +106,27 @@ def _inner_banks_kernel(ext_ref, evk_ref, q_ref, mu_ref, o_ref, *, digits: int):
 
 @functools.partial(jax.jit, static_argnames=("digits", "tile", "interpret"))
 def dyadic_inner_banks(ext, evk, qs2, mus2, *, digits: int, tile: int = 8,
-                       interpret: bool = True):
+                       interpret: bool | None = None):
     """ext: (d, k, batch, n) NTT-domain digit extensions; evk: (d, k, n)
-    key digits; qs2/mus2: (k, 1) per-prime modulus/Barrett constants.
-    Returns (k, batch, n): the key-switch accumulator over all digits."""
+    key digits shared by the whole batch, or (d, k, batch, n) per-batch
+    key digits (a ciphertext batch mixing Galois keys); qs2/mus2: (k, 1)
+    per-prime modulus/Barrett constants.  Returns (k, batch, n): the
+    key-switch accumulator over all digits."""
+    interpret = resolve_interpret(interpret)
     d, k, b, n = ext.shape
     assert d == digits and b % tile == 0
+    if evk.ndim == 4:
+        assert evk.shape == (d, k, b, n)
+        evk_spec = pl.BlockSpec((d, 1, tile, n), lambda p, i: (0, p, i, 0))
+    else:
+        evk_spec = pl.BlockSpec((d, 1, n), lambda p, i: (0, p, 0))
     kern = functools.partial(_inner_banks_kernel, digits=digits)
     return pl.pallas_call(
         kern,
         grid=(k, b // tile),
         in_specs=[
             pl.BlockSpec((d, 1, tile, n), lambda p, i: (0, p, i, 0)),
-            pl.BlockSpec((d, 1, n), lambda p, i: (0, p, 0)),
+            evk_spec,
             pl.BlockSpec((1, 1), lambda p, i: (p, 0)),
             pl.BlockSpec((1, 1), lambda p, i: (p, 0)),
         ],

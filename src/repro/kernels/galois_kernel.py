@@ -13,6 +13,13 @@ The index row rides in as a (1, n) int32 block broadcast to every
 program (like the TablePack weight rows of ``ntt_kernel``); the gather
 itself is a ``jnp.take`` along the lane axis, which Mosaic lowers to a
 dynamic-gather and interpret mode executes directly.
+
+``galois_banks_multi_pallas`` is the ciphertext-batch variant: idx is a
+(B, n) stack with one gather row PER batch element, so a batch of
+rotations with *different* amounts still runs as one (prime, batch_tile)
+grid — program (p, i) reads the idx block matching its batch tile and
+applies row j to batch row j (``take_along_axis``).  This is what lets
+the serving layer group mixed-rotation requests into one dispatch.
 """
 from __future__ import annotations
 
@@ -22,15 +29,18 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import resolve_interpret
+
 
 def _galois_banks_kernel(x_ref, idx_ref, o_ref):
     o_ref[0] = jnp.take(x_ref[0], idx_ref[0], axis=-1)
 
 
 @functools.partial(jax.jit, static_argnames=("tile", "interpret"))
-def galois_banks_pallas(x, idx2, *, tile: int = 8, interpret: bool = True):
+def galois_banks_pallas(x, idx2, *, tile: int = 8, interpret: bool | None = None):
     """x: (k, batch, n) u32; idx2: (1, n) int32 gather row shared by all
     prime rows.  out[p, b, j] = x[p, b, idx2[0, j]]."""
+    interpret = resolve_interpret(interpret)
     k, b, n = x.shape
     assert b % tile == 0
     return pl.pallas_call(
@@ -42,3 +52,27 @@ def galois_banks_pallas(x, idx2, *, tile: int = 8, interpret: bool = True):
         out_shape=jax.ShapeDtypeStruct((k, b, n), jnp.uint32),
         interpret=interpret,
     )(x, idx2)
+
+
+def _galois_banks_multi_kernel(x_ref, idx_ref, o_ref):
+    # x_ref[0]: (tile, n); idx_ref: (tile, n) — row j permutes batch row j
+    o_ref[0] = jnp.take_along_axis(x_ref[0], idx_ref[...], axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def galois_banks_multi_pallas(x, idx, *, tile: int = 8,
+                              interpret: bool | None = None):
+    """x: (k, batch, n) u32; idx: (batch, n) int32 per-batch gather rows
+    (shared across the prime axis).  out[p, b, j] = x[p, b, idx[b, j]]."""
+    interpret = resolve_interpret(interpret)
+    k, b, n = x.shape
+    assert b % tile == 0 and idx.shape == (b, n)
+    return pl.pallas_call(
+        _galois_banks_multi_kernel,
+        grid=(k, b // tile),
+        in_specs=[pl.BlockSpec((1, tile, n), lambda p, i: (p, i, 0)),
+                  pl.BlockSpec((tile, n), lambda p, i: (i, 0))],
+        out_specs=pl.BlockSpec((1, tile, n), lambda p, i: (p, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((k, b, n), jnp.uint32),
+        interpret=interpret,
+    )(x, idx)

@@ -54,6 +54,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.modmath import MASK16
+from repro.kernels import resolve_interpret
 
 
 # --------------------------------------------------- in-kernel helpers
@@ -127,9 +128,10 @@ def _ntt_inv_kernel(x_ref, itw_ref, itwp_ref, post_ref, postp_ref, o_ref, *,
 
 # ------------------------------------------------------------- wrappers
 
-def _grid_call(kernel, x, tables, row_args, *, tile: int, interpret: bool):
+def _grid_call(kernel, x, tables, row_args, *, tile: int, interpret: bool | None):
     """Common grid/BlockSpec plumbing: grid over batch tiles; twiddle
     tables and per-coefficient weight rows fully VMEM-resident."""
+    interpret = resolve_interpret(interpret)
     b, n = x.shape
     assert b % tile == 0
     s_tables = [
@@ -148,7 +150,7 @@ def _grid_call(kernel, x, tables, row_args, *, tile: int, interpret: bool):
 
 @functools.partial(jax.jit, static_argnames=("q", "stages", "negacyclic", "tile", "interpret"))
 def ntt_fwd_pallas(x, tw, twp, pre, prep, *, q: int, stages: int,
-                   negacyclic: bool, tile: int = 8, interpret: bool = True):
+                   negacyclic: bool, tile: int = 8, interpret: bool | None = None):
     """x: (batch, n) u32.  pre/prep: (1, n) psi-power rows (ignored when
     not negacyclic but still passed to keep one kernel signature)."""
     kern = functools.partial(_ntt_fwd_kernel, q=q, stages=stages, negacyclic=negacyclic)
@@ -158,7 +160,7 @@ def ntt_fwd_pallas(x, tw, twp, pre, prep, *, q: int, stages: int,
 @functools.partial(jax.jit, static_argnames=("q", "stages", "negacyclic", "ninv", "ninv_p", "tile", "interpret"))
 def ntt_inv_pallas(x, itw, itwp, post, postp, *, q: int, stages: int,
                    negacyclic: bool, ninv: int, ninv_p: int,
-                   tile: int = 8, interpret: bool = True):
+                   tile: int = 8, interpret: bool | None = None):
     kern = functools.partial(_ntt_inv_kernel, q=q, stages=stages,
                              negacyclic=negacyclic, ninv=ninv, ninv_p=ninv_p)
     return _grid_call(kern, x, [itw, itwp], [post, postp], tile=tile, interpret=interpret)
@@ -210,11 +212,12 @@ def _ntt_inv_banks_kernel(x_ref, q_ref, ninv_ref, ninvp_ref, itw_ref, itwp_ref,
 
 
 def _banks_grid_call(kernel, x, scalars, tables, rows, *, tile: int,
-                     interpret: bool):
+                     interpret: bool | None):
     """Grid (prime, batch_tile).  ``scalars`` are (k, 1) per-prime values,
     ``tables`` are (k, ...) twiddle stacks, ``rows`` are (k, n) weight
     rows — every spec selects row p of its stack via the leading grid
     coordinate, so each program sees exactly its bank's constants."""
+    interpret = resolve_interpret(interpret)
     k, b, n = x.shape
     assert b % tile == 0
 
@@ -239,7 +242,7 @@ def _banks_grid_call(kernel, x, scalars, tables, rows, *, tile: int,
 @functools.partial(jax.jit, static_argnames=("stages", "negacyclic", "tile", "interpret"))
 def ntt_fwd_banks_pallas(x, qs2, tw, twp, pre, prep, *, stages: int,
                          negacyclic: bool, tile: int = 8,
-                         interpret: bool = True):
+                         interpret: bool | None = None):
     """x: (k, batch, n) u32, row i reduced mod qs2[i, 0].
     qs2: (k, 1); tw/twp: (k, s, n/2); pre/prep: (k, n) psi rows."""
     kern = functools.partial(_ntt_fwd_banks_kernel, stages=stages,
@@ -251,7 +254,7 @@ def ntt_fwd_banks_pallas(x, qs2, tw, twp, pre, prep, *, stages: int,
 @functools.partial(jax.jit, static_argnames=("stages", "negacyclic", "tile", "interpret"))
 def ntt_inv_banks_pallas(x, qs2, ninv2, ninvp2, itw, itwp, post, postp, *,
                          stages: int, negacyclic: bool, tile: int = 8,
-                         interpret: bool = True):
+                         interpret: bool | None = None):
     kern = functools.partial(_ntt_inv_banks_kernel, stages=stages,
                              negacyclic=negacyclic)
     return _banks_grid_call(kern, x, [qs2, ninv2, ninvp2], [itw, itwp],
@@ -271,7 +274,7 @@ def _twiddle_mul_banks_kernel(x_ref, q_ref, w_ref, wp_ref, o_ref):
 
 @functools.partial(jax.jit, static_argnames=("tile", "interpret"))
 def twiddle_mul_banks_pallas(x, qs2, w, wp, *, tile: int = 8,
-                             interpret: bool = True):
+                             interpret: bool | None = None):
     """x: (k, batch, n) u32; qs2: (k, 1); w/wp: (k, n) weight rows +
     Shoup companions.  out[p, i, :] = x[p, i, :] * w[p, :] mod qs[p]."""
     return _banks_grid_call(_twiddle_mul_banks_kernel, x, [qs2], [], [w, wp],

@@ -14,6 +14,21 @@ Two entry-point families:
   stacked on axis 0 — the paper's Fig 22 parallel NTT-bank array.  The
   vmap reference path is the non-TPU default, mirroring the single-prime
   policy.
+
+Ciphertext-batch axis convention: every banks entry point also accepts
+``batch_leading=True``, meaning the input is a ``(b, k, ..., n)`` stack
+of ``b`` independent ciphertext polynomials over the same k-prime basis.
+The leading axis is folded into the existing (prime, batch_tile) kernel
+grid — one dispatch transforms all ``b*k`` residue rows — and the output
+keeps the leading layout.  This is the layout the batched EvalPlan
+programs (``fhe.evalplan.multiply_many_banks`` etc.) and the serving
+engine (``fhe.serve``) ride on.
+
+Pallas interpret-mode resolution lives in ONE place:
+``kernels.resolve_interpret`` (the kernel wrappers' default when no
+explicit flag is passed), so no call site here needs to thread
+``interpret=...`` and none can silently leave the interpreter on for a
+TPU backend.
 """
 from __future__ import annotations
 
@@ -59,8 +74,7 @@ def ntt(x, p: NTTParams, *, negacyclic: bool = True, use_pallas: bool | None = N
     out = ntt_kernel.ntt_fwd_pallas(
         x2, jnp.asarray(p.tw), jnp.asarray(p.twp),
         jnp.asarray(p.psi_pows)[None, :], jnp.asarray(p.psi_pows_p)[None, :],
-        q=p.q, stages=p.stages, negacyclic=negacyclic, tile=tile,
-        interpret=not _on_tpu())
+        q=p.q, stages=p.stages, negacyclic=negacyclic, tile=tile)
     return out[:b].reshape(shape)
 
 
@@ -77,7 +91,7 @@ def intt(x, p: NTTParams, *, negacyclic: bool = True, use_pallas: bool | None = 
         x2, jnp.asarray(p.itw), jnp.asarray(p.itwp),
         jnp.asarray(p.ipsi_ninv)[None, :], jnp.asarray(p.ipsi_ninv_p)[None, :],
         q=p.q, stages=p.stages, negacyclic=negacyclic,
-        ninv=p.ninv, ninv_p=p.ninv_p, tile=tile, interpret=not _on_tpu())
+        ninv=p.ninv, ninv_p=p.ninv_p, tile=tile)
     return out[:b].reshape(shape)
 
 
@@ -91,8 +105,7 @@ def dyadic_mul(a, b, p: NTTParams, *, use_pallas: bool | None = None, tile: int 
     b2 = jnp.asarray(b).reshape(-1, p.n)
     a2, nb = _pad_batch(a2, tile)
     b2, _ = _pad_batch(b2, tile)
-    out = dyadic_kernel.dyadic_mul(a2, b2, q=p.q, mu=p.barrett_mu, tile=tile,
-                                   interpret=not _on_tpu())
+    out = dyadic_kernel.dyadic_mul(a2, b2, q=p.q, mu=p.barrett_mu, tile=tile)
     return out[:nb].reshape(shape)
 
 
@@ -105,7 +118,7 @@ def dyadic_mac(acc, a, b, p: NTTParams, *, use_pallas: bool | None = None, tile:
     f = lambda t: _pad_batch(jnp.asarray(t).reshape(-1, p.n), tile)[0]
     nb = acc.reshape(-1, p.n).shape[0]
     out = dyadic_kernel.dyadic_mac(f(acc), f(a), f(b), q=p.q, mu=p.barrett_mu,
-                                   tile=tile, interpret=not _on_tpu())
+                                   tile=tile)
     return out[:nb].reshape(shape)
 
 
@@ -127,12 +140,40 @@ def _rows(t: dict, k: int, *names):
     return tuple(t[name][:k] for name in names)
 
 
+def _swap_ct_axis(x):
+    """(b, k, ..., n) ciphertext-batch stack -> (k, b, ..., n) prime-major
+    layout (and back — it's its own inverse).  The moved axis lands in
+    the middle dims every banks entry point already folds into the
+    (prime, batch_tile) kernel grid."""
+    return jnp.swapaxes(jnp.asarray(x), 0, 1)
+
+
+def _ct_batch_axis(fn):
+    """Give a banks entry point the ciphertext-batch convention in one
+    place: ``batch_leading=True`` reads the first argument as a
+    (b, k, ..., n) stack — b independent polynomials over the same
+    basis — swaps the ciphertext axis behind the prime axis, re-enters
+    the prime-major path (which folds it into the (prime, batch_tile)
+    grid), and swaps the output back."""
+    @functools.wraps(fn)
+    def wrapper(x, *args, batch_leading: bool = False, **kw):
+        if batch_leading:
+            return _swap_ct_axis(fn(_swap_ct_axis(x), *args, **kw))
+        return fn(x, *args, **kw)
+    return wrapper
+
+
+@_ct_batch_axis
 def ntt_banks(x, t: dict, *, negacyclic: bool = True,
               use_pallas: bool | None = None, tile: int = 8):
     """Batched multi-prime forward NTT.  x: (k, ..., n) u32, row i
     reduced mod t['qs'][i]; t: TablePack for (at least) those k primes.
     One fused kernel gridded over (prime, batch_tile) on the Pallas
-    path; a vmap over prime rows on the reference path."""
+    path; a vmap over prime rows on the reference path.
+
+    ``batch_leading=True`` flips the convention to a (b, k, ..., n)
+    ciphertext-batch stack: b independent polynomials over the same
+    basis, folded into the one kernel grid (see module docstring)."""
     use_pallas = _on_tpu() if use_pallas is None else use_pallas
     x = jnp.asarray(x)
     k, n = x.shape[0], x.shape[-1]
@@ -145,11 +186,11 @@ def ntt_banks(x, t: dict, *, negacyclic: bool = True,
     x3, b = _pad_mid(x3, tile)
     out = ntt_kernel.ntt_fwd_banks_pallas(
         x3, qs[:, None], tw, twp, psi, psip,
-        stages=tw.shape[1], negacyclic=negacyclic, tile=tile,
-        interpret=not _on_tpu())
+        stages=tw.shape[1], negacyclic=negacyclic, tile=tile)
     return out[:, :b].reshape(shape)
 
 
+@_ct_batch_axis
 def intt_banks(x, t: dict, *, negacyclic: bool = True,
                use_pallas: bool | None = None, tile: int = 8):
     use_pallas = _on_tpu() if use_pallas is None else use_pallas
@@ -167,11 +208,11 @@ def intt_banks(x, t: dict, *, negacyclic: bool = True,
     out = ntt_kernel.ntt_inv_banks_pallas(
         x3, qs[:, None], ninv[:, None], ninv_p[:, None],
         itw, itwp, ipsin, ipsinp,
-        stages=itw.shape[1], negacyclic=negacyclic, tile=tile,
-        interpret=not _on_tpu())
+        stages=itw.shape[1], negacyclic=negacyclic, tile=tile)
     return out[:, :b].reshape(shape)
 
 
+@_ct_batch_axis
 def twiddle_mul_banks(x, w, wp, qs, *, use_pallas: bool | None = None,
                       tile: int = 8):
     """Fused per-prime weight-row multiply: x (k, ..., n) u32, w/wp (k, n)
@@ -188,10 +229,11 @@ def twiddle_mul_banks(x, w, wp, qs, *, use_pallas: bool | None = None,
     tile = max(1, min(tile, x3.shape[1]))
     x3, b = _pad_mid(x3, tile)
     out = ntt_kernel.twiddle_mul_banks_pallas(x3, qs[:, None], w, wp,
-                                              tile=tile, interpret=not _on_tpu())
+                                              tile=tile)
     return out[:, :b].reshape(shape)
 
 
+@_ct_batch_axis
 def galois_banks(x, idx, *, use_pallas: bool | None = None, tile: int = 8):
     """Galois automorphism in the NTT domain: out[..., j] = x[..., idx[j]].
 
@@ -200,19 +242,35 @@ def galois_banks(x, idx, *, use_pallas: bool | None = None, tile: int = 8):
     every prime — root-exponent arithmetic never touches q).  One fused
     (prime, batch_tile) gather kernel on the Pallas path; a single jnp
     gather on the reference path.  This replaces the host
-    iNTT -> permute -> NTT round trip for rotate/conjugate."""
+    iNTT -> permute -> NTT round trip for rotate/conjugate.
+
+    A (B, n) ``idx`` applies gather row j to batch row j (B must equal
+    the product of x's middle dims), so one dispatch can mix rotation
+    amounts across a ciphertext batch; ``batch_leading=True`` reads x as
+    a (b, k, ..., n) ciphertext-batch stack as in ``ntt_banks``."""
     use_pallas = _on_tpu() if use_pallas is None else use_pallas
     x = jnp.asarray(x)
     idx = jnp.asarray(idx, jnp.int32)
-    if not use_pallas:
-        return ref.galois_banks_ref(x, idx)
     k, n = x.shape[0], x.shape[-1]
+    if idx.ndim == 2:
+        assert idx.shape[0] == int(np.prod(x.shape[1:-1], dtype=np.int64)), \
+            (idx.shape, x.shape)
+    if not use_pallas:
+        if idx.ndim == 2:
+            out = ref.galois_banks_ref(x.reshape(k, -1, n), idx)
+            return out.reshape(x.shape)
+        return ref.galois_banks_ref(x, idx)
     shape = x.shape
     x3 = x.reshape(k, -1, n)
     tile = max(1, min(tile, x3.shape[1]))
     x3, b = _pad_mid(x3, tile)
-    out = galois_kernel.galois_banks_pallas(x3, idx[None, :], tile=tile,
-                                            interpret=not _on_tpu())
+    if idx.ndim == 2:
+        pad = x3.shape[1] - b
+        if pad:     # padded batch rows gather through the identity row 0s
+            idx = jnp.concatenate([idx, jnp.zeros((pad, n), jnp.int32)], axis=0)
+        out = galois_kernel.galois_banks_multi_pallas(x3, idx, tile=tile)
+    else:
+        out = galois_kernel.galois_banks_pallas(x3, idx[None, :], tile=tile)
     return out[:, :b].reshape(shape)
 
 
@@ -231,15 +289,17 @@ def fourstep_dims(fp: dict) -> tuple[int, int]:
     return fp["pack1"]["tw"].shape[-1] * 2, fp["pack2"]["tw"].shape[-1] * 2
 
 
+@_ct_batch_axis
 def ntt_fourstep_banks(x, fp: dict, *, negacyclic: bool = True,
                        use_pallas: bool | None = None, tile: int = 8):
     """Large-N forward NTT via the four-step (Bailey) decomposition with
     every pass on the banks kernels — the paper's §IX schedule (two
     passes of batched NTT-N1/NTT-N2 units with a reorder in between).
 
-    x: (k, ..., n) u32 with row i reduced mod fp["qs"][i]; fp: a
-    FourStepPack from ``fhe.batched.build_fourstep_pack`` for at least
-    those k primes (extra rows are ignored, like ``ntt_banks``).
+    x: (k, ..., n) u32 with row i reduced mod fp["qs"][i] (or a
+    (b, k, ..., n) ciphertext-batch stack with ``batch_leading=True``);
+    fp: a FourStepPack from ``fhe.batched.build_fourstep_pack`` for at
+    least those k primes (extra rows are ignored, like ``ntt_banks``).
 
     Pipeline:  [psi pre-weight] -> column NTT-N1 bank pass (batch folds
     the N2 columns) -> fused w^(j2*k1) twiddle kernel -> row NTT-N2 bank
@@ -273,6 +333,7 @@ def ntt_fourstep_banks(x, fp: dict, *, negacyclic: bool = True,
     return xr.reshape(k, b, n1, n2).swapaxes(-1, -2).reshape(shape)
 
 
+@_ct_batch_axis
 def intt_fourstep_banks(x, fp: dict, *, negacyclic: bool = True,
                         use_pallas: bool | None = None, tile: int = 8):
     """Inverse of ``ntt_fourstep_banks`` (natural-order input).  The two
@@ -309,12 +370,18 @@ def intt_fourstep_banks(x, fp: dict, *, negacyclic: bool = True,
 def dyadic_inner_banks(ext, evk, t: dict, *, use_pallas: bool | None = None,
                        tile: int = 8):
     """Fused key-switch inner product: out[j] = sum_i ext[i, j] .* evk[i, j]
-    mod q_j.  ext: (d, k, B, n) NTT-domain digit extensions;
-    evk: (d, k, n) key digits; t: TablePack whose rows align with axis 1."""
+    mod q_j.  ext: (d, k, B, n) NTT-domain digit extensions — a
+    ciphertext batch folds into the B axis; evk: (d, k, n) key digits
+    shared by the whole batch, or (d, k, B, n) per-batch-element digits
+    (a Galois batch mixing rotation keys); t: TablePack whose rows align
+    with axis 1."""
     use_pallas = _on_tpu() if use_pallas is None else use_pallas
     ext = jnp.asarray(ext)
     evk = jnp.asarray(evk)
-    assert ext.ndim == 4 and evk.ndim == 3 and ext.shape[1] == t["qs"].shape[0]
+    assert ext.ndim == 4 and evk.ndim in (3, 4) \
+        and ext.shape[1] == t["qs"].shape[0]
+    if evk.ndim == 4:
+        assert evk.shape == ext.shape, (evk.shape, ext.shape)
     if not use_pallas:
         return ref.dyadic_inner_banks_ref(ext, evk, t["qs"], t["mu"])
     d, k, b, n = ext.shape
@@ -323,7 +390,8 @@ def dyadic_inner_banks(ext, evk, t: dict, *, use_pallas: bool | None = None,
     if pad:
         z = jnp.zeros((d, k, pad, n), ext.dtype)
         ext = jnp.concatenate([ext, z], axis=2)
+        if evk.ndim == 4:
+            evk = jnp.concatenate([evk, z], axis=2)
     out = dyadic_kernel.dyadic_inner_banks(
-        ext, evk, t["qs"][:, None], t["mu"][:, None], digits=d, tile=tile,
-        interpret=not _on_tpu())
+        ext, evk, t["qs"][:, None], t["mu"][:, None], digits=d, tile=tile)
     return out[:, :b]

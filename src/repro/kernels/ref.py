@@ -76,16 +76,23 @@ def twiddle_mul_banks_ref(x, qs, w, wp):
 def galois_banks_ref(x, idx):
     """NTT-domain Galois automorphism: a pure gather along the lane axis,
     identical for every prime row (see ``core.params.galois_eval_perm``).
-    x: (k, ..., n); idx: (n,) int32."""
-    return jnp.take(jnp.asarray(x), jnp.asarray(idx), axis=-1)
+    x: (k, ..., n); idx: (n,) int32, or (B, n) per-batch gather rows
+    aligned with x's (k, B, n) middle axis."""
+    x = jnp.asarray(x)
+    idx = jnp.asarray(idx)
+    if idx.ndim == 2:
+        return jnp.take_along_axis(x, idx[None].astype(jnp.int32), axis=-1)
+    return jnp.take(x, idx, axis=-1)
 
 
 def dyadic_inner_banks_ref(ext, evk, qs, mus):
-    """ext: (d, k, B, n); evk: (d, k, n); qs/mus: (k,).  Accumulates the
-    digit products in the same order as the fused kernel (exact match)."""
+    """ext: (d, k, B, n); evk: (d, k, n) shared or (d, k, B, n) per-batch
+    key digits; qs/mus: (k,).  Accumulates the digit products in the
+    same order as the fused kernel (exact match)."""
     q = qs[:, None, None]
     mu = mus[:, None, None]
-    prods = mulmod_barrett(ext, evk[:, :, None, :], q[None], mu[None])
+    evk_b = evk if evk.ndim == 4 else evk[:, :, None, :]
+    prods = mulmod_barrett(ext, evk_b, q[None], mu[None])
 
     def body(acc, p):
         return addmod(acc, p, q), None

@@ -1,0 +1,172 @@
+"""Ciphertext-batched EvalPlan programs pinned bit-exact against a
+Python loop of the single-ciphertext PR-3 programs, plus the scheme-API
+validation regressions (explicit ``ValueError``s instead of asserts,
+level-exhaustion checks).
+
+The batched pins run for B in {1, 3, 8} — covering the degenerate
+batch, a non-tile-multiple batch and a full tile — at the CG ring
+(2^10, tier-1) and the four-step ring (2^14, slow suite, every
+transform on the large-N banks pipeline)."""
+import numpy as np
+import pytest
+
+from conftest import ct_equal as _eq
+
+from repro.fhe.ckks import CkksContext
+from repro.fhe.evalplan import Ciphertext
+
+BATCHES = (1, 3, 8)
+
+
+def _cts(ctx, rng, m):
+    out = []
+    for _ in range(m):
+        z = rng.uniform(-1, 1, ctx.slots) + 1j * rng.uniform(-1, 1, ctx.slots)
+        out.append(ctx.encrypt(ctx.encode(z)))
+    return out
+
+
+def _pin_batched_ops(ctx, batches=BATCHES):
+    """multiply_many / rescale_many / galois_ks_many == a loop of the
+    single-ciphertext programs, bit for bit, for every batch size."""
+    rng = np.random.default_rng(51)
+    plan = ctx.plan()
+    m = max(batches)
+    As, Cs = _cts(ctx, rng, m), _cts(ctx, rng, m)
+    # mixed automorphisms in one batch: alternate two rotation group
+    # elements and the conjugation element
+    gs_pool = [plan.rotation_group_element(1), plan.rotation_group_element(3),
+               2 * ctx.n - 1]
+    gs = [gs_pool[i % 3] for i in range(m)]
+
+    for B in batches:
+        prods = plan.multiply_many(As[:B], Cs[:B])
+        want = [plan.multiply(a, c) for a, c in zip(As[:B], Cs[:B])]
+        assert all(_eq(g, w) for g, w in zip(prods, want)), f"multiply B={B}"
+
+        rsc = plan.rescale_many(prods)
+        want_rs = [plan.rescale(p) for p in want]
+        assert all(_eq(g, w) for g, w in zip(rsc, want_rs)), f"rescale B={B}"
+
+        rot = plan.galois_ks_many(As[:B], gs[:B])
+        want_rot = [plan.apply_galois(a, g) for a, g in zip(As[:B], gs[:B])]
+        assert all(_eq(g, w) for g, w in zip(rot, want_rot)), f"galois B={B}"
+
+    # rotate_many mirrors rotate exactly, including the identity
+    # short-circuit (r=0 must NOT pay a key switch)
+    rs = [0, 2, 5][: min(3, m)]
+    rot = plan.rotate_many(As[: len(rs)], rs)
+    want = [plan.rotate(a, r) for a, r in zip(As, rs)]
+    assert all(_eq(g, w) for g, w in zip(rot, want))
+    assert all(_eq(g, w) for g, w in
+               zip(plan.conjugate_many(As[:2]), [plan.conjugate(a) for a in As[:2]]))
+
+
+def test_batched_ops_bit_exact_2_10():
+    """Acceptance pin, CG ring (bitrev NTT rows)."""
+    _pin_batched_ops(CkksContext(n=1 << 10, levels=1, scale_bits=28, seed=61))
+
+
+@pytest.mark.slow  # ~3 min: 9 batched-program compiles at the 2^14 ring
+def test_batched_ops_bit_exact_2_14():
+    """Acceptance pin, four-step ring: the same batched programs with
+    every transform on the large-N banks pipeline (natural-order rows)."""
+    _pin_batched_ops(CkksContext(n=1 << 14, levels=1, scale_bits=28, seed=62))
+
+
+def test_batched_decodes_to_slotwise_product():
+    """End to end: a batched multiply+rescale still decodes to the
+    slotwise product (scale bookkeeping survives the batch)."""
+    ctx = CkksContext(n=256, levels=1, scale_bits=26, seed=63)
+    rng = np.random.default_rng(64)
+    zs = [rng.uniform(-1, 1, ctx.slots) + 1j * rng.uniform(-1, 1, ctx.slots)
+          for _ in range(4)]
+    cts = [ctx.encrypt(ctx.encode(z)) for z in zs]
+    prods = ctx.rescale_many(ctx.multiply_many(cts[:2], cts[2:]))
+    for i in range(2):
+        got = ctx.decrypt_decode(prods[i])
+        np.testing.assert_allclose(got, zs[i] * zs[i + 2], atol=1e-2)
+
+
+# -------------------------------------------- scheme-API validation fixes
+#
+# These raise explicit ValueErrors (never bare asserts — stripped under
+# ``python -O``, after which a mismatch silently corrupts ciphertexts).
+
+@pytest.fixture(scope="module")
+def small_ctx():
+    return CkksContext(n=128, levels=2, scale_bits=26, seed=65)
+
+
+def _two_levels(ctx):
+    rng = np.random.default_rng(66)
+    z = rng.uniform(-1, 1, ctx.slots)
+    a = ctx.encrypt(ctx.encode(z))
+    b = ctx.rescale(ctx.mul_plain(a, ctx.encode(np.ones(ctx.slots))))
+    return a, b   # same plaintext, different bases
+
+
+def test_add_sub_multiply_raise_on_basis_mismatch(small_ctx):
+    a, b = _two_levels(small_ctx)
+    for op in (small_ctx.add, small_ctx.sub, small_ctx.multiply,
+               small_ctx.plan().multiply):
+        with pytest.raises(ValueError, match="bases differ"):
+            op(a, b)
+    # the messages carry BOTH operands' bases and scales
+    with pytest.raises(ValueError) as ei:
+        small_ctx.add(a, b)
+    msg = str(ei.value)
+    assert str(a.primes) in msg and str(b.primes) in msg
+    assert f"{a.scale:g}" in msg and f"{b.scale:g}" in msg
+
+
+def test_add_raises_on_scale_mismatch(small_ctx):
+    rng = np.random.default_rng(67)
+    z = rng.uniform(-1, 1, small_ctx.slots)
+    a = small_ctx.encrypt(small_ctx.encode(z))
+    b = Ciphertext(a.c0, a.c1, a.scale * 2)
+    with pytest.raises(ValueError, match="scales differ"):
+        small_ctx.add(a, b)
+    with pytest.raises(ValueError, match="scales differ"):
+        small_ctx.sub(a, b)
+
+
+def test_batched_mixed_basis_raises(small_ctx):
+    a, b = _two_levels(small_ctx)
+    plan = small_ctx.plan()
+    with pytest.raises(ValueError, match="mixes bases"):
+        plan.rescale_many([a, b])
+    with pytest.raises(ValueError, match="bases differ"):
+        plan.multiply_many([a], [b])
+    with pytest.raises(ValueError, match="cts vs"):
+        plan.galois_ks_many([a], [5, 7])
+    with pytest.raises(ValueError, match="cts vs"):
+        plan.rotate_many([a, a, a], [2, 5])   # short rs must not silently no-op
+    with pytest.raises(ValueError, match="lhs vs"):
+        plan.multiply_many([a, a], [a])
+
+
+def test_level_exhaustion_depth_chain():
+    """Drive multiply+rescale down the whole prime chain: every step
+    works until one modulus is left, then rescale raises a clear
+    level-exhaustion error instead of an opaque kernel shape error (or
+    a silently empty ciphertext)."""
+    ctx = CkksContext(n=128, levels=2, scale_bits=26, seed=68)
+    rng = np.random.default_rng(69)
+    z = rng.uniform(0.5, 0.9, ctx.slots)
+    ct = ctx.encrypt(ctx.encode(z))
+    want = z.copy()
+    while len(ct.primes) > 1:           # square down the whole chain
+        ct = ctx.rescale(ctx.multiply(ct, ct))
+        want = want * want
+    assert len(ct.primes) == 1 and ct.level == 0
+    # multiply at the last level still works (relin rides basis+special)...
+    ct2 = ctx.multiply(ct, ct)
+    # ...but rescale past the bottom raises — single AND batched paths
+    with pytest.raises(ValueError, match="prime chain exhausted"):
+        ctx.rescale(ct2)
+    with pytest.raises(ValueError, match="prime chain exhausted"):
+        ctx.rescale_many([ct2])
+    # the level-0 ciphertext itself is still well-formed
+    got = ctx.decrypt_decode(ct)
+    np.testing.assert_allclose(got.real, want, atol=2e-1)

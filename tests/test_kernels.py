@@ -7,7 +7,9 @@ import numpy as np
 import jax.numpy as jnp
 import pytest
 
-from repro.core.params import make_ntt_params
+from hypcompat import given, settings, st
+
+from repro.core.params import galois_eval_perm, gen_ntt_primes, make_ntt_params
 from repro.kernels import ops, ref
 
 RNG = np.random.default_rng(123)
@@ -77,3 +79,107 @@ def test_mixed_leading_dims():
     got = np.asarray(ops.ntt(jnp.asarray(x), p, negacyclic=True, use_pallas=True))
     want = np.asarray(ref.ntt_fwd_ref(x, p, True))
     assert np.array_equal(got, want)
+
+
+# --------------------------------------- galois_banks shape edge cases
+#
+# The gather entry point pads its batch axis through ``ops._pad_mid``
+# and (with per-batch index rows) must pad the idx stack in lockstep;
+# this property sweep drives batch sizes that are not tile multiples,
+# the single-row batch, and >2-D middle dims, pinned against
+# ``ref.galois_banks_ref``.
+
+_GAL_N, _GAL_K = 128, 2
+_GAL_PRIMES = gen_ntt_primes(_GAL_K, _GAL_N, bits=30)
+_GAL_GS = [5, 25, 2 * _GAL_N - 1, 9]
+
+
+def _gal_x(mid):
+    return np.stack([RNG.integers(0, q, tuple(mid) + (_GAL_N,), dtype=np.uint32)
+                     for q in _GAL_PRIMES])
+
+
+@settings(max_examples=20)
+@given(st.integers(1, 19), st.integers(1, 9))
+def test_galois_banks_batch_tile_sweep(batch, tile):
+    """Shared gather row: any (batch, tile) combination, batch not
+    necessarily a tile multiple, pallas == ref exactly."""
+    x = _gal_x((batch,))
+    idx = galois_eval_perm(_GAL_GS[batch % 4], _GAL_N, False)
+    got = np.asarray(ops.galois_banks(jnp.asarray(x), idx, use_pallas=True,
+                                      tile=tile))
+    want = np.asarray(ref.galois_banks_ref(x, idx))
+    assert np.array_equal(got, want), (batch, tile)
+
+
+@settings(max_examples=20)
+@given(st.integers(1, 19), st.integers(1, 9))
+def test_galois_banks_multi_idx_sweep(batch, tile):
+    """Per-batch gather rows (mixed automorphisms): the idx stack must
+    pad in lockstep with the batch axis."""
+    x = _gal_x((batch,))
+    idx = np.stack([galois_eval_perm(_GAL_GS[i % 4], _GAL_N, False)
+                    for i in range(batch)]).astype(np.int32)
+    got = np.asarray(ops.galois_banks(jnp.asarray(x), jnp.asarray(idx),
+                                      use_pallas=True, tile=tile))
+    want = np.stack([np.asarray(ref.galois_banks_ref(x[:, i], idx[i]))
+                     for i in range(batch)], axis=1)
+    assert np.array_equal(got, want), (batch, tile)
+
+
+@pytest.mark.parametrize("mid", [(1,), (2, 3), (3, 2, 2), (1, 1)])
+def test_galois_banks_highdim_mid(mid):
+    """>2-D middle dims flatten through _pad_mid and reshape back."""
+    x = _gal_x(mid)
+    idx = galois_eval_perm(5, _GAL_N, False)
+    got = np.asarray(ops.galois_banks(jnp.asarray(x), idx, use_pallas=True))
+    want = np.asarray(ref.galois_banks_ref(x, idx))
+    assert got.shape == x.shape
+    assert np.array_equal(got, want)
+
+
+def test_galois_banks_batch_leading_matches_prime_major():
+    x = _gal_x((5,))
+    idx = galois_eval_perm(25, _GAL_N, False)
+    lead = jnp.asarray(np.swapaxes(x, 0, 1))          # (b, k, n)
+    for up in (False, True):
+        got = np.asarray(ops.galois_banks(lead, idx, use_pallas=up,
+                                          batch_leading=True))
+        want = np.asarray(ops.galois_banks(jnp.asarray(x), idx, use_pallas=up))
+        assert np.array_equal(got, np.swapaxes(want, 0, 1)), up
+
+
+def test_banks_batch_leading_matches_prime_major():
+    """Every (b, k, n) leading-batch entry point == swapaxes of the
+    prime-major call, both dispatch paths (the ciphertext-batch axis
+    convention the batched EvalPlan programs ride on)."""
+    from repro.fhe import batched as FB
+    t = FB.build_table_pack(list(_GAL_PRIMES), _GAL_N)
+    x = jnp.asarray(np.swapaxes(_gal_x((5,)), 0, 1))           # (b, k, n)
+    qs = t["qs"][:_GAL_K]
+    w, wp = t["psi"][:_GAL_K], t["psip"][:_GAL_K]
+    fns = [lambda v, kw: ops.ntt_banks(v, t, **kw),
+           lambda v, kw: ops.intt_banks(v, t, **kw),
+           lambda v, kw: ops.twiddle_mul_banks(v, w, wp, qs, **kw)]
+    for up in (False, True):
+        for fn in fns:
+            got = np.asarray(fn(x, dict(batch_leading=True, use_pallas=up)))
+            want = np.asarray(fn(jnp.swapaxes(x, 0, 1),
+                                 dict(use_pallas=up)))
+            assert np.array_equal(got, np.swapaxes(want, 0, 1)), (fn, up)
+
+
+def test_fourstep_banks_batch_leading_matches_prime_major():
+    from repro.core.params import gen_ntt_primes as gen
+    from repro.fhe import batched as FB
+    n = ops.FOURSTEP_MIN_N
+    primes = gen(2, n, bits=30)
+    fp = FB.build_fourstep_pack(primes, n)
+    x = np.stack([RNG.integers(0, q, (3, n), dtype=np.uint32) for q in primes])
+    lead = jnp.asarray(np.swapaxes(x, 0, 1))
+    got = np.asarray(ops.ntt_fourstep_banks(lead, fp, batch_leading=True))
+    want = np.asarray(ops.ntt_fourstep_banks(jnp.asarray(x), fp))
+    assert np.array_equal(got, np.swapaxes(want, 0, 1))
+    back = np.asarray(ops.intt_fourstep_banks(jnp.asarray(got), fp,
+                                              batch_leading=True))
+    assert np.array_equal(np.swapaxes(back, 0, 1), x)

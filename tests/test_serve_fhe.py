@@ -1,0 +1,102 @@
+"""CkksServeEngine: grouping/padding policy + answers bit-exact against
+the single-op replay of the same trace."""
+import numpy as np
+import pytest
+
+from conftest import ct_equal as _eq
+
+from repro.fhe.ckks import CkksContext
+from repro.fhe.serve import CkksServeEngine, FheRequest
+
+CTX = CkksContext(n=256, levels=2, scale_bits=26, seed=71)
+RNG = np.random.default_rng(72)
+
+
+def _ct():
+    z = RNG.uniform(-1, 1, CTX.slots) + 1j * RNG.uniform(-1, 1, CTX.slots)
+    return CTX.encrypt(CTX.encode(z))
+
+
+def test_engine_bit_exact_and_groups():
+    plan = CTX.plan()
+    engine = CkksServeEngine(plan, batch_tile=4)
+    reqs = [
+        FheRequest(0, "multiply", _ct(), other=_ct()),
+        FheRequest(1, "rotate", _ct(), r=1),
+        FheRequest(2, "rotate", _ct(), r=3),          # mixed amounts...
+        FheRequest(3, "conjugate", _ct()),            # ...and kinds in one group
+        FheRequest(4, "multiply", _ct(), other=_ct()),
+        FheRequest(5, "rotate", _ct(), r=0),          # identity: no dispatch
+    ]
+    out = engine.run(reqs)
+    assert set(out) == set(range(6))
+    # grouping: one multiply group + one galois group (identity aside)
+    assert engine.stats["dispatches"] == 2
+    assert engine.stats["identity"] == 1
+    assert engine.stats["batched_ops"] == 5
+    # padding to batch_tile=4: multiply 2->4 (2 pads), galois 3->4 (1 pad)
+    assert engine.stats["padded"] == 3
+    # every answer equals the single-op path, bit for bit
+    single = {
+        0: plan.multiply(reqs[0].ct, reqs[0].other),
+        1: plan.rotate(reqs[1].ct, 1),
+        2: plan.rotate(reqs[2].ct, 3),
+        3: plan.conjugate(reqs[3].ct),
+        4: plan.multiply(reqs[4].ct, reqs[4].other),
+        5: plan.rotate(reqs[5].ct, 0),
+    }
+    assert all(_eq(out[r], single[r]) for r in single)
+
+
+def test_engine_splits_mixed_bases():
+    """Ciphertexts at different levels never share a dispatch: the same
+    op kind at two bases forms two groups (the documented 'when batching
+    does not apply' rule)."""
+    plan = CTX.plan()
+    engine = CkksServeEngine(plan, batch_tile=2)
+    full = [_ct(), _ct()]
+    dropped = [plan.rescale(ct) for ct in (_ct(), _ct())]
+    reqs = [FheRequest(i, "rescale", ct)
+            for i, ct in enumerate(full + dropped)]
+    out = engine.run(reqs)
+    assert engine.stats["dispatches"] == 2
+    assert sorted(engine.stats["groups"]) == ["rescale@L1", "rescale@L2"]
+    for i, ct in enumerate(full + dropped):
+        assert _eq(out[i], plan.rescale(ct))
+
+
+def test_bad_request_fails_alone():
+    """An invalid request (mismatched multiply operands, exhausted
+    level) is reported in stats['failed'] — it must never abort the
+    run and discard the other clients' answers."""
+    plan = CTX.plan()
+    engine = CkksServeEngine(plan, batch_tile=2)
+    good = _ct()
+    dropped = plan.rescale(_ct())                 # different basis
+    bottom = dropped
+    while len(bottom.primes) > 1:
+        bottom = plan.rescale(bottom)
+    reqs = [
+        FheRequest(0, "multiply", _ct(), other=dropped),   # basis mismatch
+        FheRequest(1, "rescale", bottom),                  # level exhausted
+        FheRequest(2, "rotate", good, r=1),                # fine
+    ]
+    out = engine.run(reqs)
+    assert set(out) == {2}
+    assert set(engine.stats["failed"]) == {0, 1}
+    assert "bases differ" in engine.stats["failed"][0]
+    assert "prime chain exhausted" in engine.stats["failed"][1]
+    assert _eq(out[2], plan.rotate(good, 1))
+
+
+def test_request_validation():
+    with pytest.raises(ValueError, match="unknown op"):
+        FheRequest(0, "bootstrap", _ct())
+    with pytest.raises(ValueError, match="needs 'other'"):
+        FheRequest(0, "multiply", _ct())
+    engine = CkksServeEngine(CTX.plan(), batch_tile=4)
+    ct = _ct()
+    with pytest.raises(ValueError, match="duplicate"):
+        engine.run([FheRequest(1, "rescale", ct), FheRequest(1, "rescale", ct)])
+    with pytest.raises(ValueError, match="batch_tile"):
+        CkksServeEngine(CTX.plan(), batch_tile=0)
