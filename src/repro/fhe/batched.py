@@ -253,6 +253,41 @@ def mod_down_banks(acc, t: dict, *, fsp: dict | None = None,
                         qcol)
 
 
+def decompose_banks(d2, t: dict, *, fsp: dict | None = None,
+                    use_pallas: bool | None = None, tile: int = 8):
+    """RNS digit decomposition + mod-up, fully batched — the front half
+    of the paper's Fig 22 pipeline (INTT units -> base extension -> NTT
+    banks), extracted so callers can pay it ONCE and reuse the digits.
+
+    d2: (k, B, n) u32, NTT form over the k-prime basis; t: TablePack for
+    k+1 primes (row k = the special prime P); fsp as in
+    ``batched_keyswitch``.  Returns (k, k+1, B, n): NTT-domain digit
+    extensions (digit axis first), ready for ``ops.dyadic_inner_banks``.
+
+    This is the hoisting primitive: a Galois automorphism commutes with
+    per-prime digit decomposition (sigma_g permutes integer coefficients
+    with sign flips, which survives the centered lift and every modular
+    reduction), so R rotations of one ciphertext can share a single
+    decomposition — gather these digits R ways in the evaluation domain
+    instead of decomposing R times (``evalplan.hoisted_rotations_banks``).
+
+    Every stage is one multi-prime dispatch: the digit INTTs run as k
+    bank rows, the mod-up is a vmap over digits, and all k*(k+1) forward
+    NTTs run as one (prime, batch) grid with the digit axis folded into
+    the batch.  No Python loop over primes or digits."""
+    k, B, n = d2.shape
+    kw = dict(use_pallas=use_pallas, tile=tile)
+    tb = slice_pack(t, slice(0, k))
+
+    ci = _inv_banks(d2, tb, fsp, kw)                          # INTT units
+    ext = jax.vmap(lambda c, q: extend_centered(c, q, t["qs"])
+                   )(ci, t["qs"][:k])                         # mod-up: (k, k+1, B, n)
+    # NTT banks: fold the digit axis into the batch so all k*(k+1)
+    # transforms run in ONE (prime, batch_tile) grid.
+    y = _fwd_banks(ext.transpose(1, 0, 2, 3), t, fsp, kw)     # (k+1, k, B, n)
+    return y.transpose(1, 0, 2, 3)                            # (digit, prime, B, n)
+
+
 def batched_keyswitch(d2, evk_b, evk_a, t: dict, *, fsp: dict | None = None,
                       use_pallas: bool | None = None, tile: int = 8):
     """Paper Fig 22 pipeline, vectorized over a ciphertext batch AND the
@@ -275,24 +310,13 @@ def batched_keyswitch(d2, evk_b, evk_a, t: dict, *, fsp: dict | None = None,
              ``build_scalar_pack`` (its twiddle tables go unused).
     Returns (ks0, ks1): (k, B, n) over the original basis.
 
-    Every stage is one multi-prime dispatch (see ``kernels.ops``): the
-    digit INTTs run as k bank rows, the mod-up is a vmap over digits,
-    all k*(k+1) forward NTTs run as one (prime, batch) grid with the
-    digit axis folded into the batch, and the whole digit inner product
-    is one fused dyadic-MAC call per output polynomial.  There is no
-    Python-level per-prime loop left in this hot path.
+    The front half (digit INTTs + mod-up + forward NTTs) lives in
+    ``decompose_banks``; the whole digit inner product is then one fused
+    dyadic-MAC call per output polynomial.  There is no Python-level
+    per-prime loop left in this hot path.
     """
-    k, B, n = d2.shape
     kw = dict(use_pallas=use_pallas, tile=tile)
-    tb = slice_pack(t, slice(0, k))
-
-    ci = _inv_banks(d2, tb, fsp, kw)                          # INTT units
-    ext = jax.vmap(lambda c, q: extend_centered(c, q, t["qs"])
-                   )(ci, t["qs"][:k])                         # mod-up: (k, k+1, B, n)
-    # NTT banks: fold the digit axis into the batch so all k*(k+1)
-    # transforms run in ONE (prime, batch_tile) grid.
-    y = _fwd_banks(ext.transpose(1, 0, 2, 3), t, fsp, kw)     # (k+1, k, B, n)
-    y = y.transpose(1, 0, 2, 3)                               # (digit, prime, B, n)
+    y = decompose_banks(d2, t, fsp=fsp, **kw)                 # (digit, prime, B, n)
     acc0 = ops.dyadic_inner_banks(y, evk_b, t, **kw)          # MM/MA arrays
     acc1 = ops.dyadic_inner_banks(y, evk_a, t, **kw)
 

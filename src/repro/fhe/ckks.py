@@ -106,9 +106,16 @@ class CkksContext:
 
     # -------------------------------------------------- encode / decode
 
-    def encode(self, z, scale: float | None = None) -> RnsPoly:
-        """z: complex array of up to n/2 slots -> plaintext RnsPoly (NTT)."""
+    def encode(self, z, scale: float | None = None,
+               basis: tuple[int, ...] | None = None) -> RnsPoly:
+        """z: complex array of up to n/2 slots -> plaintext RnsPoly (NTT).
+
+        ``basis`` selects the prime chain of the output (default: the
+        full chain) — plaintexts that will meet level-dropped
+        ciphertexts (``mul_plain`` operands, ``fhe.linalg`` diagonal
+        packs) must be encoded at the ciphertext's basis."""
         scale = scale or self.scale
+        basis = tuple(basis if basis is not None else self.qs)
         z = np.asarray(z, dtype=np.complex128)
         zz = np.zeros(self.slots, dtype=np.complex128)
         zz[: len(z)] = z
@@ -118,7 +125,7 @@ class CkksContext:
         spec[n2 - self._ejs] = np.conj(zz)
         c = np.fft.fft(spec)[: self.n].real / self.n
         c_int = np.rint(c * scale).astype(np.int64).astype(object)
-        return rns.from_int_coeffs(c_int, self.qs, self.n).to_ntt()
+        return rns.from_int_coeffs(c_int, basis, self.n).to_ntt()
 
     def _decode_coeffs(self, coeffs_float: np.ndarray) -> np.ndarray:
         n2 = 2 * self.n
@@ -206,6 +213,13 @@ class CkksContext:
 
     def conjugate_many(self, cts) -> list[Ciphertext]:
         return self.plan().conjugate_many(cts)
+
+    def rotate_hoisted(self, a: Ciphertext, rs) -> list[Ciphertext]:
+        """R rotations of ONE ciphertext with the key-switch digit
+        decomposition hoisted (paid once) — one device dispatch
+        (``evalplan.hoisted_rotations_banks``); bit-identical to
+        ``[self.rotate(a, r) for r in rs]``."""
+        return self.plan().rotate_hoisted(a, rs)
 
 
 # ------------------------------------------------- Galois automorphism

@@ -25,6 +25,11 @@ raw (k, n) residue stacks:
                                      batched through one pipeline)
   rotate/conjugate -> ``galois_ks_banks`` (one NTT-domain gather kernel
                                      + fused batched_keyswitch)
+  R rotations of one ct -> ``hoisted_rotations_banks`` (decompose-once:
+                                     one ``decompose_banks``, R digit
+                                     gathers + R key inner products +
+                                     one fused mod-down — the slot-
+                                     linalg primitive of ``fhe.linalg``)
 
 Each program also has a ciphertext-batched ``*_many`` twin
 (``multiply_many_banks`` / ``rescale_many_banks`` /
@@ -212,6 +217,47 @@ def rescale_many_banks(c0, c1, t, fsp=None, *, use_pallas: bool | None = None,
 
 
 @functools.partial(jax.jit, static_argnames=("use_pallas", "tile"))
+def hoisted_rotations_banks(c0, c1, idx, evk_b, evk_a, t, fsp=None, *,
+                            use_pallas: bool | None = None, tile: int = 8):
+    """R rotations of ONE ciphertext as one device program, with the
+    expensive key-switch front half HOISTED: the RNS digit decomposition
+    of c1 (iNTT units + mod-up + NTT banks — ``decompose_banks``) runs
+    ONCE, and each rotation reuses those digits through an
+    evaluation-domain gather (``ops.galois_digits_banks``; the
+    automorphism commutes with per-prime decomposition, so gathering the
+    shared digits is bit-identical to decomposing the gathered c1).
+
+    c0/c1: (k, n) u32 NTT-form halves; idx: (R, n) per-rotation gather
+    rows; evk_b/evk_a: (k, k+1, R, n) per-rotation stacked Galois key
+    digits (the ``_galois_batch_key`` layout).  Returns (k, R, n)
+    stacks — rotation r of the input in batch column r.
+
+    Versus R independent ``galois_ks_banks`` dispatches this pays 1
+    decomposition instead of R (the dominant cost: 1 iNTT + k*(k+1)
+    NTTs each) plus R dyadic inner products and ONE fused mod-down over
+    all 2R accumulator halves; the R axis folds into the existing
+    (prime, batch_tile) kernel grids, so there is no Python loop over
+    rotations or primes anywhere in the path."""
+    k, n = c0.shape
+    R = idx.shape[0]
+    q = t["qs"][:k][:, None, None]
+    kw = dict(use_pallas=use_pallas, tile=tile)
+    y = FB.decompose_banks(c1[:, None], t, fsp=fsp, **kw)   # (k, k+1, 1, n)
+    # shared-mode gathers: the one decomposition (and the one c0 stack,
+    # as a single-"digit" call) fan out to R gather rows in-kernel —
+    # neither is ever replicated R-fold in HBM
+    yg = ops.galois_digits_banks(y, idx, **kw)              # (k, k+1, R, n)
+    acc0 = ops.dyadic_inner_banks(yg, evk_b, t, **kw)       # (k+1, R, n)
+    acc1 = ops.dyadic_inner_banks(yg, evk_a, t, **kw)
+    # both accumulator halves ride one fused mod-down (batch of 2R)
+    acc = jnp.concatenate([acc0, acc1], axis=1)
+    ks = mod_down_banks(acc, t, fsp=fsp, **kw)              # (k, 2R, n)
+    ks0, ks1 = ks[:, :R], ks[:, R:]
+    c0g = ops.galois_digits_banks(c0[None, :, None], idx, **kw)[0]
+    return addmod(c0g, ks0, q), ks1
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "tile"))
 def galois_ks_many_banks(c0, c1, idx, evk_b, evk_a, t, fsp=None, *,
                          use_pallas: bool | None = None, tile: int = 8):
     """B slot rotations / conjugations, one program — the batch may MIX
@@ -255,6 +301,31 @@ class EvalPlan:
         self._batch_keys: dict = {}  # (gs tuple, basis) -> stacked, bounded
         self._idx: dict[int, jnp.ndarray] = {}
         self._rescale_tables: dict = {}      # basis -> (t, fsp) views
+        self.reset_stats()
+
+    # ---------------------------------------------------------- counters
+    #
+    # Cumulative per-plan dispatch accounting, so callers (the serve
+    # engine, the bench gates) can ASSERT how much device work a request
+    # pattern paid rather than infer it from wall time:
+    #   dispatches   jitted scheme programs launched
+    #   key_switches key-switch inner products applied (digit MM/MA +
+    #                mod-down passes — the paper's Fig 22 op, the unit
+    #                of its 1.63M op/s claim)
+    #   decomposes   RNS digit decompositions paid (iNTT + mod-up + NTT
+    #                banks).  Hoisting reuse shows up as
+    #                key_switches - decomposes > 0: R rotations sharing
+    #                one decomposition count R key switches but 1
+    #                decompose.
+
+    def reset_stats(self):
+        self.stats = {"dispatches": 0, "key_switches": 0, "decomposes": 0}
+        return self
+
+    def _count(self, dispatches=1, key_switches=0, decomposes=0):
+        self.stats["dispatches"] += dispatches
+        self.stats["key_switches"] += key_switches
+        self.stats["decomposes"] += decomposes
 
     # ------------------------------------------------------------ tables
 
@@ -344,7 +415,7 @@ class EvalPlan:
 
     def prepare(self, basis: tuple[int, ...] | None = None,
                 rotations=(), conjugate: bool = False, relin: bool = True,
-                warm_jit: bool = True, batch_sizes=()):
+                warm_jit: bool = True, batch_sizes=(), hoisted_sets=()):
         """Eagerly build every table/key/gather-row a serving loop will
         need, so no request pays keygen or pack construction.
 
@@ -356,7 +427,13 @@ class EvalPlan:
         ``batch_sizes`` (e.g. the multiples of its batch tile it expects
         to see): the ``*_many`` programs are shape-keyed on B, and an
         unwarmed batch size pays full XLA compilation on the first real
-        request group."""
+        request group.  ``hoisted_sets`` likewise warms
+        ``hoisted_rotations_banks`` (shape-keyed on R) per rotation-amount
+        tuple — e.g. a BSGS matvec's baby-step set (``fhe.linalg``
+        reports it as ``PtMatrix.baby_set``).
+
+        The dispatch counters (``stats``) are reset on exit, so warm-up
+        traffic never pollutes a caller's accounting."""
         basis = tuple(basis if basis is not None else self.ctx.qs)
         self.keyswitch_tables(basis)
         self.rescale_tables(basis)
@@ -366,7 +443,9 @@ class EvalPlan:
               if g != 1]
         if conjugate:
             gs.append(2 * self.n - 1)
-        for g in gs:
+        hoist_gs = {self.rotation_group_element(r)
+                    for rset in hoisted_sets for r in rset} - {1}
+        for g in gs + sorted(hoist_gs - set(gs)):
             self.galois_key(g, basis)
             self.eval_idx(g)
         if warm_jit:
@@ -389,7 +468,9 @@ class EvalPlan:
                 if len(set(gs)) > 1 and B > 1:  # ...and the mixed signature
                     mix = [gs[i % len(gs)] for i in range(B)]
                     self.galois_ks_many(cts, mix)
-        return self
+            for rset in hoisted_sets:
+                self.rotate_hoisted(zct, list(rset))
+        return self.reset_stats()
 
     # ------------------------------------------------------- scheme ops
 
@@ -401,6 +482,7 @@ class EvalPlan:
         eb, ea = self.relin_key(basis)
         c0, c1 = multiply_banks(a.c0.data, a.c1.data, b.c0.data, b.c1.data,
                                 eb, ea, t, fsp, **self._kw)
+        self._count(1, key_switches=1, decomposes=1)
         return Ciphertext(RnsPoly(c0, basis, True), RnsPoly(c1, basis, True),
                           a.scale * b.scale)
 
@@ -409,6 +491,7 @@ class EvalPlan:
         basis = a.primes
         t, fsp = self.rescale_tables(basis)
         c0, c1 = rescale_banks(a.c0.data, a.c1.data, t, fsp, **self._kw)
+        self._count(1)
         rest = basis[:-1]
         return Ciphertext(RnsPoly(c0, rest, True), RnsPoly(c1, rest, True),
                           a.scale / basis[-1])
@@ -420,6 +503,7 @@ class EvalPlan:
         eb, ea = self.galois_key(g, basis)
         c0, c1 = galois_ks_banks(a.c0.data, a.c1.data, self.eval_idx(g),
                                  eb, ea, t, fsp, **self._kw)
+        self._count(1, key_switches=1, decomposes=1)
         return Ciphertext(RnsPoly(c0, basis, True), RnsPoly(c1, basis, True),
                           a.scale)
 
@@ -467,6 +551,7 @@ class EvalPlan:
             stack([a.c0 for a in As]), stack([a.c1 for a in As]),
             stack([b.c0 for b in Bs]), stack([b.c1 for b in Bs]),
             eb, ea, t, fsp, **self._kw)
+        self._count(1, key_switches=len(As), decomposes=len(As))
         return [Ciphertext(RnsPoly(c0[i], basis, True),
                            RnsPoly(c1[i], basis, True),
                            As[i].scale * Bs[i].scale)
@@ -484,6 +569,7 @@ class EvalPlan:
         c0, c1 = rescale_many_banks(
             jnp.stack([ct.c0.data for ct in cts]),
             jnp.stack([ct.c1.data for ct in cts]), t, fsp, **self._kw)
+        self._count(1)
         rest = basis[:-1]
         return [Ciphertext(RnsPoly(c0[i], rest, True),
                            RnsPoly(c1[i], rest, True),
@@ -515,9 +601,51 @@ class EvalPlan:
             jnp.stack([ct.c0.data for ct in cts]),
             jnp.stack([ct.c1.data for ct in cts]),
             idx, eb, ea, t, fsp, **self._kw)
+        self._count(1, key_switches=len(cts), decomposes=len(cts))
         return [Ciphertext(RnsPoly(c0[i], basis, True),
                            RnsPoly(c1[i], basis, True), ct.scale)
                 for i, ct in enumerate(cts)]
+
+    # ----------------------------------------------- hoisted rotations
+    #
+    # R rotations of ONE ciphertext -> one dispatch paying ONE digit
+    # decomposition (decompose-once convention: decompose_banks runs on
+    # c1 as received, and every rotation gathers those shared digits in
+    # the evaluation domain).  This is the primitive slot linear algebra
+    # (``fhe.linalg`` BSGS matvec baby steps) runs on.
+
+    def hoisted_galois(self, a: Ciphertext, gs) -> list[Ciphertext]:
+        """Apply R automorphisms (group elements ``gs``, need not be
+        distinct) to ``a`` as ONE ``hoisted_rotations_banks`` dispatch.
+        Bit-identical to ``[self.apply_galois(a, g) for g in gs]`` —
+        pinned in tests/test_linalg.py."""
+        gs = tuple(gs)
+        if not gs:
+            return []
+        check_level("hoisted_galois", a)
+        basis = a.primes
+        t, fsp = self.keyswitch_tables(basis)
+        eb, ea, idx = self._galois_batch_key(gs, basis)
+        c0, c1 = hoisted_rotations_banks(a.c0.data, a.c1.data, idx,
+                                         eb, ea, t, fsp, **self._kw)
+        self._count(1, key_switches=len(gs), decomposes=1)
+        return [Ciphertext(RnsPoly(c0[:, i], basis, True),
+                           RnsPoly(c1[:, i], basis, True), a.scale)
+                for i in range(len(gs))]
+
+    def rotate_hoisted(self, a: Ciphertext, rs) -> list[Ciphertext]:
+        """Rotate one ciphertext by every amount in ``rs`` with the
+        key-switch decomposition hoisted: one dispatch, one decompose,
+        len(rs) key switches.  Identity amounts (r = 0 mod slots) are
+        answered host-side exactly like ``rotate``."""
+        gs = [self.rotation_group_element(r) for r in rs]
+        live = [i for i, g in enumerate(gs) if g != 1]
+        out = [Ciphertext(a.c0, a.c1, a.scale) for _ in gs]
+        if live:
+            rotated = self.hoisted_galois(a, tuple(gs[i] for i in live))
+            for i, ct in zip(live, rotated):
+                out[i] = ct
+        return out
 
     def rotate_many(self, cts, rs) -> list[Ciphertext]:
         """Rotate B ciphertexts by per-ciphertext amounts ``rs`` in one

@@ -1,0 +1,209 @@
+"""Encrypted slot linear algebra over the hoisted-rotation subsystem.
+
+The paper's headline application metric is key-switch throughput
+(Table I: 1.63M op/s), and in real FHE workloads the key-switch bill is
+dominated by *rotations inside linear algebra* — matvecs, slot
+reductions, convolutions.  This module is that workload layer: the
+diagonal-method matrix-vector product and log-step slot reduction, built
+so the key switches they pay are AMORTIZED rather than independent.
+
+Two amortization levers, both riding the banks kernels:
+
+* **Hoisting** (``evalplan.hoisted_rotations_banks``): R rotations of
+  one ciphertext decompose its c1 into RNS digits ONCE
+  (``fhe.batched.decompose_banks``), then run R evaluation-domain
+  gathers on the shared digits + R dyadic inner products against
+  stacked Galois keys, all in one jitted dispatch.  The decomposition
+  (1 iNTT + k*(k+1) NTTs) is the dominant key-switch cost, so R
+  rotations cost ~1 decomposition instead of R.
+
+* **Baby-step/giant-step** (``matvec``): a d_in-diagonal matvec splits
+  each diagonal index r = i*n1 + j (j < n1 baby, i < n2 giant,
+  n1 ~ sqrt(d_in) by default — the BSGS split rule).  Only the n1 baby
+  rotations touch the input ciphertext (one hoisted dispatch); the
+  n2-1 giant rotations apply to the accumulated partial sums through
+  one mixed-amount ``rotate_many`` dispatch.  Total key switches drop
+  from d_in to n1 + n2 - 2, and the plaintext diagonals absorb the
+  giant pre-rotations at encode time (``PtMatrix.encode`` stores
+  diag_{i*n1+j} pre-rotated by -i*n1).
+
+Slot-layout convention (the diagonal method): for W of shape
+(d_in, d_out), diagonal r holds diag_r[m] = W[(m + r) % d_in, m] for
+m < d_out, and the input vector must be TILED so slot s reads
+x[s % d_in] for every s < d_in + d_out (``encode_vector`` does this;
+it requires d_in + d_out <= slots).  Output slots [0, d_out) then hold
+y = x @ W; slots past d_out carry encoding noise only.
+
+A ``PtMatrix`` pack is valid at exactly ONE basis (the diagonals are
+NTT-domain ``RnsPoly`` rows at that basis): encode it at the level the
+input ciphertexts will arrive at, and re-encode (or keep one pack per
+level) for multi-level pipelines — ``matvec`` raises ``ValueError`` on
+a basis mismatch rather than batching across levels.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+from repro.fhe.evalplan import Ciphertext, EvalPlan, check_level
+
+__all__ = ["PtMatrix", "encode_vector", "matvec", "rotate_sum"]
+
+
+def bsgs_split(d_in: int) -> tuple[int, int]:
+    """Default BSGS split rule: n1 = ceil(sqrt(d_in)) baby steps,
+    n2 = ceil(d_in / n1) giant steps — minimizes n1 + n2 key switches
+    for d_in diagonals (any 1 <= n1 <= d_in is legal; callers with a
+    skewed rotation-key budget can override)."""
+    n1 = max(1, math.isqrt(d_in - 1) + 1) if d_in > 1 else 1
+    return n1, -(-d_in // n1)
+
+
+@dataclasses.dataclass
+class PtMatrix:
+    """A plaintext matrix packed for the encrypted diagonal matvec:
+    per-diagonal NTT-domain ``RnsPoly`` rows at one basis, pre-rotated
+    for the BSGS giant steps.
+
+    diags[(i, j)] encodes diagonal r = i*n1 + j rotated LEFT by -i*n1
+    slots (so the giant-step rotation of the accumulated inner sum
+    realigns it for free); all-zero diagonals are dropped — a
+    non-square matrix simply has fewer packed diagonals (padded
+    diagonals of the n1*n2 >= d_in grid never materialize)."""
+    shape: tuple[int, int]               # (d_in, d_out)
+    n1: int                              # baby steps (BSGS split)
+    n2: int                              # giant steps
+    basis: tuple[int, ...]               # the ONE basis this pack is valid at
+    scale: float                         # plaintext scale of every diagonal
+    diags: dict                          # (i, j) -> RnsPoly (NTT form, at basis)
+
+    @classmethod
+    def encode(cls, ctx, W, *, n1: int | None = None,
+               basis: tuple[int, ...] | None = None,
+               scale: float | None = None) -> "PtMatrix":
+        """Pack W (d_in, d_out) for ``matvec`` under ``ctx``.  One-time
+        host-side work (FFT encode + CRT lift + NTT per nonzero
+        diagonal) — W is static across requests, so this runs at server
+        setup, never per request.  ``basis`` defaults to the context's
+        full prime chain; the pack is valid ONLY at that basis."""
+        W = np.asarray(W, dtype=np.complex128)
+        if W.ndim != 2:
+            raise ValueError(f"PtMatrix.encode: W must be 2-D, got {W.shape}")
+        d_in, d_out = W.shape
+        if d_in + d_out > ctx.slots:
+            raise ValueError(
+                f"PtMatrix.encode: d_in + d_out = {d_in + d_out} exceeds the "
+                f"{ctx.slots} slots of n={ctx.n} — the tiled input layout "
+                "(encode_vector) needs d_in + d_out <= slots")
+        basis = tuple(basis if basis is not None else ctx.qs)
+        scale = float(scale or ctx.scale)
+        if n1 is None:
+            n1, n2 = bsgs_split(d_in)
+        else:
+            if not 1 <= n1 <= d_in:
+                raise ValueError(f"PtMatrix.encode: n1={n1} outside [1, {d_in}]")
+            n2 = -(-d_in // n1)
+        diags: dict = {}
+        m = np.arange(d_out)
+        for r in range(d_in):
+            diag = np.zeros(ctx.slots, dtype=np.complex128)
+            diag[m] = W[(m + r) % d_in, m]
+            if not np.any(diag):
+                continue                     # zero diagonal: no term, no key
+            i, j = divmod(r, n1)
+            # pre-rotate by -i*n1: prot[t] = diag[t - i*n1], so the
+            # giant-step rotation of the inner sum lands it back on diag
+            diags[(i, j)] = ctx.encode(np.roll(diag, i * n1), scale=scale,
+                                       basis=basis)
+        return cls((d_in, d_out), n1, n2, basis, scale, diags)
+
+    @property
+    def baby_set(self) -> tuple[int, ...]:
+        """Baby-step rotation amounts ``matvec`` will hoist (one
+        dispatch) — pass to ``EvalPlan.prepare(hoisted_sets=...)``."""
+        return tuple(sorted({j for (_, j) in self.diags}))
+
+    @property
+    def giant_set(self) -> tuple[int, ...]:
+        """Nonzero giant-step rotation amounts (one ``rotate_many``)."""
+        return tuple(sorted({i * self.n1 for (i, _) in self.diags if i}))
+
+
+def encode_vector(ctx, x, d_out: int, *, scale: float | None = None,
+                  basis: tuple[int, ...] | None = None):
+    """Encode x (length d_in) in the tiled slot layout ``matvec``
+    expects: slot s = x[s % d_in] for s < d_in + d_out, so every
+    rotated read of the diagonal method stays an in-range copy of x
+    (see module docstring).  Returns a plaintext ``RnsPoly``."""
+    x = np.asarray(x)
+    d_in = x.shape[0]
+    if d_in + d_out > ctx.slots:
+        raise ValueError(
+            f"encode_vector: d_in + d_out = {d_in + d_out} exceeds "
+            f"{ctx.slots} slots")
+    z = np.zeros(ctx.slots, dtype=np.complex128)
+    s = np.arange(d_in + d_out)
+    z[s] = x[s % d_in]
+    return ctx.encode(z, scale=scale, basis=basis)
+
+
+def matvec(plan: EvalPlan, M: PtMatrix, ct: Ciphertext) -> Ciphertext:
+    """Encrypted y = x @ W by BSGS diagonals: ONE hoisted dispatch for
+    the baby rotations of the input, plaintext multiply-accumulate per
+    giant group, ONE mixed-amount ``rotate_many`` dispatch for the
+    giant steps, and a final add chain.  Key switches paid:
+    len(baby_set \\ {0}) + len(giant_set) ~ 2*sqrt(d_in) - 2, versus
+    d_in - 1 for the naive per-diagonal rotate loop.
+
+    ``ct`` must sit at the basis the pack was encoded at; the result's
+    scale is ct.scale * M.scale (rescale downstream as usual)."""
+    check_level("matvec", ct)
+    if ct.primes != M.basis:
+        raise ValueError(
+            f"matvec: ciphertext basis {ct.primes} != the PtMatrix pack's "
+            f"basis {M.basis} — a pack is valid at exactly one basis; "
+            "encode the matrix at the ciphertext's level (PtMatrix.encode"
+            "(..., basis=ct.primes)) or level-align the input first")
+    if not M.diags:
+        raise ValueError("matvec: the PtMatrix packs no nonzero diagonals")
+    # baby steps: every rot_j(x) the diagonals need, one hoisted dispatch
+    # (j=0 short-circuits host-side inside rotate_hoisted)
+    js = list(M.baby_set)
+    babies = dict(zip(js, plan.rotate_hoisted(ct, js)))
+    # giant groups: inner_i = sum_j pdiag_{i,j} * rot_j(x) — elementwise
+    # dyadic ops over the residue stacks, no key switches
+    ctx = plan.ctx
+    inners: dict[int, Ciphertext] = {}
+    for (i, j), pdiag in sorted(M.diags.items()):
+        term = ctx.mul_plain(babies[j], pdiag, M.scale)
+        inners[i] = ctx.add(inners[i], term) if i in inners else term
+    # giant steps: rotate each partial sum by i*n1 — one mixed-amount
+    # batched dispatch for all of them (i=0 needs none)
+    gis = sorted(i for i in inners if i)
+    rotated = plan.rotate_many([inners[i] for i in gis],
+                               [i * M.n1 for i in gis])
+    acc = inners.get(0)
+    for ct_i in rotated:
+        acc = ctx.add(acc, ct_i) if acc is not None else ct_i
+    return acc
+
+
+def rotate_sum(plan: EvalPlan, ct: Ciphertext, m: int) -> Ciphertext:
+    """Log-step slot reduction: returns a ciphertext whose slot s holds
+    sum_{t < m} x[(s + t) % slots] — in particular slot 0 holds the sum
+    of the first m slots.  m must be a power of two (log2(m) rotations
+    + adds; each step rotates the *accumulated* sum, so the steps are
+    sequentially dependent and hoisting does not apply — this is the
+    one rotation pattern that stays a chain of single dispatches)."""
+    if m < 1 or (m & (m - 1)):
+        raise ValueError(f"rotate_sum: m must be a power of two, got {m}")
+    if m > plan.n // 2:
+        raise ValueError(f"rotate_sum: m={m} exceeds {plan.n // 2} slots")
+    acc = ct
+    s = 1
+    while s < m:
+        acc = plan.ctx.add(acc, plan.rotate(acc, s))
+        s <<= 1
+    return acc

@@ -17,6 +17,11 @@ Grouping rules (also the "when batching does not apply" rules):
   * Ops batch only within a kind: multiply with multiply, rescale with
     rescale; rotate and conjugate share the Galois kind — a group may
     MIX rotation amounts (per-ciphertext gather rows + key digits).
+    ``matvec`` requests (encrypted BSGS matrix-vector products over a
+    ``fhe.linalg.PtMatrix`` pack) form their own kind: each is a
+    composite of hoisted-rotation + giant-step dispatches, so the
+    group loops per request without tile padding; amortization comes
+    from hoisting inside each request, not across requests.
   * Ciphertexts at different bases (levels) NEVER batch — the residue
     stacks have different (k, n) shapes.  Each basis forms its own
     group; a mixed-basis group is impossible by construction here, and
@@ -41,22 +46,25 @@ import dataclasses
 import time
 from collections import defaultdict
 
+from repro.fhe import linalg
 from repro.fhe.evalplan import (Ciphertext, EvalPlan, check_level,
                                 check_same_basis)
 
 # op kinds a request may carry; rotate/conjugate share the Galois batch
-OPS = ("multiply", "rescale", "rotate", "conjugate")
+OPS = ("multiply", "rescale", "rotate", "conjugate", "matvec")
 
 
 @dataclasses.dataclass
 class FheRequest:
     """One homomorphic op on one ciphertext (plus an operand for
-    multiply, a slot amount for rotate)."""
+    multiply, a slot amount for rotate, a ``linalg.PtMatrix`` weight
+    pack for matvec)."""
     rid: int
     op: str
     ct: Ciphertext
     other: Ciphertext | None = None      # multiply rhs
     r: int = 0                           # rotate amount
+    matrix: "linalg.PtMatrix | None" = None   # matvec weight pack
 
     def __post_init__(self):
         if self.op not in OPS:
@@ -64,6 +72,14 @@ class FheRequest:
                              f"(expected one of {OPS})")
         if self.op == "multiply" and self.other is None:
             raise ValueError(f"request {self.rid}: multiply needs 'other'")
+        if self.op == "matvec" and not isinstance(self.matrix, linalg.PtMatrix):
+            # a non-PtMatrix would AttributeError inside linalg.matvec
+            # (outside the per-request ValueError routing) and sink the
+            # whole batch — reject it at construction instead
+            raise ValueError(
+                f"request {self.rid}: matvec needs 'matrix' (a "
+                f"linalg.PtMatrix), got "
+                f"{type(self.matrix).__name__ if self.matrix is not None else None}")
 
 
 def _pad(items: list, tile: int) -> list:
@@ -76,9 +92,15 @@ def _pad(items: list, tile: int) -> list:
 class CkksServeEngine:
     """Group-and-dispatch batching engine over one prepared ``EvalPlan``.
 
-    stats (reset per ``run``): ``dispatches`` (device programs
-    launched), ``batched_ops`` (real requests inside them), ``padded``
-    (tile-padding ghost rows), ``groups`` ((kind, basis-level) -> count).
+    stats (reset per ``run``): ``dispatches`` (request groups
+    dispatched), ``batched_ops`` (real requests inside them), ``padded``
+    (tile-padding ghost rows), ``groups`` ((kind, basis-level) -> count),
+    plus the device-work deltas read off the plan's cumulative counters:
+    ``program_dispatches`` (jitted programs actually launched — a matvec
+    group launches several per request), ``key_switches``,
+    ``decomposes``, and ``hoisted_reuse`` (key switches that shared an
+    already-paid digit decomposition; > 0 means hoisting amortized
+    real work this run).
     """
 
     def __init__(self, plan: EvalPlan, batch_tile: int = 8):
@@ -110,6 +132,10 @@ class CkksServeEngine:
                 elif req.op == "rescale":
                     check_level("rescale", req.ct, need=1)
                 else:
+                    # (matvec's own checks — pack basis validity, empty
+                    # pack — fire inside the per-request dispatch loop,
+                    # which routes them into ``failed`` the same way;
+                    # ONE source of truth lives in linalg.matvec)
                     check_level(req.op, req.ct)
             except ValueError as e:
                 failed[req.rid] = str(e)
@@ -155,6 +181,7 @@ class CkksServeEngine:
         stats = self.stats = {"dispatches": 0, "batched_ops": 0, "padded": 0,
                               "identity": len(out), "failed": failed,
                               "groups": {}}
+        before = dict(self.plan.stats)
         for (kind, basis), reqs in sorted(
                 groups.items(), key=lambda kv: -len(kv[1])):
             if kind == "galois":
@@ -164,13 +191,42 @@ class CkksServeEngine:
                 # order — arrival-ordered patterns would miss that
                 # cache almost every dispatch
                 reqs = sorted(reqs, key=self._g_of)
-            outs = self._dispatch(kind, reqs)
+            if kind == "matvec":
+                # a matvec is a composite program sequence (hoisted
+                # babies + plaintext MACs + one giant-step rotate_many),
+                # not a *_many row — no tile padding, one composite per
+                # request, and any ValueError it raises (basis-validity,
+                # empty pack, future checks) fails that request ALONE
+                # instead of sinking the group
+                outs, kept = [], []
+                for req in reqs:
+                    try:
+                        outs.append(linalg.matvec(self.plan, req.matrix,
+                                                  req.ct))
+                        kept.append(req)
+                    except ValueError as e:
+                        failed[req.rid] = str(e)
+                reqs = kept
+                if not reqs:
+                    continue       # every request failed: nothing dispatched
+            else:
+                outs = self._dispatch(kind, reqs)
             for req, ct in zip(reqs, outs):      # zip drops pad rows
                 out[req.rid] = ct
             stats["dispatches"] += 1
             stats["batched_ops"] += len(reqs)
-            stats["padded"] += -len(reqs) % self.batch_tile
+            if kind != "matvec":                 # matvec never tile-pads
+                stats["padded"] += -len(reqs) % self.batch_tile
             key = f"{kind}@L{len(basis) - 1}"
             stats["groups"][key] = stats["groups"].get(key, 0) + len(reqs)
+        # device-work accounting from the plan's cumulative counters:
+        # program_dispatches is the true jitted-program count (a matvec
+        # group launches several per request), and hoisted_reuse is the
+        # key switches that shared an already-paid digit decomposition
+        # — the amortization the hoisting subsystem exists to buy
+        for c in ("dispatches", "key_switches", "decomposes"):
+            delta = self.plan.stats[c] - before.get(c, 0)
+            stats["program_dispatches" if c == "dispatches" else c] = delta
+        stats["hoisted_reuse"] = stats["key_switches"] - stats["decomposes"]
         stats["wall_s"] = time.perf_counter() - t0
         return out

@@ -20,6 +20,16 @@ rotations with *different* amounts still runs as one (prime, batch_tile)
 grid — program (p, i) reads the idx block matching its batch tile and
 applies row j to batch row j (``take_along_axis``).  This is what lets
 the serving layer group mixed-rotation requests into one dispatch.
+
+``galois_digits_pallas`` is the hoisted-rotation variant: x carries a
+leading DIGIT axis ((d, k, B, n) — the key-switch digit extensions of
+``fhe.batched.decompose_banks``) and idx one gather row per batch
+element, shared by every digit.  Program (p, i) holds all d digit
+blocks of its batch tile in VMEM and applies the tile's gather rows to
+each digit (unrolled digit loop, like ``dyadic_kernel``'s inner
+product), so R rotations gather ONE shared decomposition in a single
+(prime, batch_tile) grid — no per-rotation re-decompose, no d-fold
+replication of the index rows in HBM.
 """
 from __future__ import annotations
 
@@ -74,5 +84,56 @@ def galois_banks_multi_pallas(x, idx, *, tile: int = 8,
                   pl.BlockSpec((tile, n), lambda p, i: (i, 0))],
         out_specs=pl.BlockSpec((1, tile, n), lambda p, i: (p, i, 0)),
         out_shape=jax.ShapeDtypeStruct((k, b, n), jnp.uint32),
+        interpret=interpret,
+    )(x, idx)
+
+
+def _galois_digits_kernel(x_ref, idx_ref, o_ref, *, digits: int):
+    # x_ref: (d, 1, tile, n); idx_ref: (tile, n) — the same gather rows
+    # apply to every digit (the automorphism is digit-independent), so
+    # the digit loop unrolls with the idx block VMEM-resident once.
+    for d in range(digits):
+        o_ref[d, 0] = jnp.take_along_axis(x_ref[d, 0], idx_ref[...], axis=-1)
+
+
+def _galois_digits_shared_kernel(x_ref, idx_ref, o_ref, *, digits: int):
+    # x_ref: (d, 1, 1, n) — ONE shared batch column (the hoisted
+    # decompose-once digits), fanned out to every gather row of the
+    # tile; the HBM-side replication never happens, only the in-VMEM
+    # gather reads the shared block tile times.
+    for d in range(digits):
+        o_ref[d, 0] = jnp.take(x_ref[d, 0, 0], idx_ref[...], axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("digits", "shared", "tile",
+                                             "interpret"))
+def galois_digits_pallas(x, idx, *, digits: int, shared: bool = False,
+                         tile: int = 8, interpret: bool | None = None):
+    """x: (d, k, batch, n) u32 digit extensions; idx: (batch, n) int32
+    per-batch gather rows (shared across digits AND primes).
+    out[d, p, b, j] = x[d, p, b, idx[b, j]].
+
+    ``shared=True`` reads x as (d, k, 1, n) — one digit stack shared by
+    every gather row (the hoisted-rotation layout), with the batch
+    block pinned to column 0 so the shared digits are never replicated
+    batch-fold in HBM: out[d, p, b, j] = x[d, p, 0, idx[b, j]]."""
+    interpret = resolve_interpret(interpret)
+    d, k, b, n = x.shape
+    bi = idx.shape[0]
+    assert d == digits and bi % tile == 0 and idx.shape == (bi, n)
+    assert b == (1 if shared else bi), (x.shape, idx.shape, shared)
+    if shared:
+        kern = functools.partial(_galois_digits_shared_kernel, digits=digits)
+        x_spec = pl.BlockSpec((d, 1, 1, n), lambda p, i: (0, p, 0, 0))
+    else:
+        kern = functools.partial(_galois_digits_kernel, digits=digits)
+        x_spec = pl.BlockSpec((d, 1, tile, n), lambda p, i: (0, p, i, 0))
+    return pl.pallas_call(
+        kern,
+        grid=(k, bi // tile),
+        in_specs=[x_spec,
+                  pl.BlockSpec((tile, n), lambda p, i: (i, 0))],
+        out_specs=pl.BlockSpec((d, 1, tile, n), lambda p, i: (0, p, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((d, k, bi, n), jnp.uint32),
         interpret=interpret,
     )(x, idx)

@@ -274,6 +274,48 @@ def galois_banks(x, idx, *, use_pallas: bool | None = None, tile: int = 8):
     return out[:, :b].reshape(shape)
 
 
+def galois_digits_banks(ext, idx, *, use_pallas: bool | None = None,
+                        tile: int = 8):
+    """Galois gather over key-switch digit extensions — the hoisted-
+    rotation move: apply per-batch gather rows to a SHARED digit
+    decomposition instead of re-decomposing per rotation.
+
+    ext: (d, k, B, n) u32 NTT-domain digit extensions (the
+    ``fhe.batched.decompose_banks`` layout — the R rotation amounts of a
+    hoisted batch fold into the B axis); idx: (B, n) int32 gather rows,
+    row b applied to batch column b of EVERY digit and prime row (the
+    automorphism permutation never depends on the digit or the modulus).
+    Returns (d, k, B, n).  One fused (prime, batch_tile) kernel with the
+    digit loop unrolled inside on the Pallas path; a single
+    take_along_axis on the reference path.
+
+    A (d, k, 1, n) ext against a (B, n) idx with B > 1 runs in SHARED
+    mode — the hoisted decompose-once layout: every gather row reads
+    the one shared digit stack (out[d, p, b, j] = ext[d, p, 0,
+    idx[b, j]]), which is never replicated B-fold in HBM (the kernel
+    pins its batch block to column 0)."""
+    use_pallas = _on_tpu() if use_pallas is None else use_pallas
+    ext = jnp.asarray(ext)
+    idx = jnp.asarray(idx, jnp.int32)
+    d, k, b, n = ext.shape
+    bi = idx.shape[0]
+    shared = b == 1 and bi != 1
+    assert idx.shape == (bi, n) and (shared or bi == b), \
+        (idx.shape, ext.shape)
+    if not use_pallas:
+        return ref.galois_digits_banks_ref(ext, idx)
+    tile = max(1, min(tile, bi))
+    pad = (-bi) % tile
+    if pad:     # padded batch rows gather through the identity row 0s
+        idx = jnp.concatenate([idx, jnp.zeros((pad, n), jnp.int32)], axis=0)
+        if not shared:
+            ext = jnp.concatenate(
+                [ext, jnp.zeros((d, k, pad, n), ext.dtype)], axis=2)
+    out = galois_kernel.galois_digits_pallas(ext, idx, digits=d,
+                                             shared=shared, tile=tile)
+    return out[:, :, :bi]
+
+
 # ------------------------------------------- large-N four-step pipeline
 
 @functools.lru_cache(maxsize=None)

@@ -85,6 +85,20 @@ def galois_banks_ref(x, idx):
     return jnp.take(x, idx, axis=-1)
 
 
+def galois_digits_banks_ref(x, idx):
+    """Digit-extension gather (the hoisted-rotation move): x (d, k, B, n)
+    key-switch digit stacks, idx (B, n) per-batch gather rows shared by
+    every digit and prime row.  out[d, p, b, j] = x[d, p, b, idx[b, j]].
+    A (d, k, 1, n) x against a (B, n) idx broadcasts the ONE shared
+    digit stack over every gather row (the hoisted decompose-once
+    layout): out[d, p, b, j] = x[d, p, 0, idx[b, j]]."""
+    x = jnp.asarray(x)
+    idx = jnp.asarray(idx, jnp.int32)
+    if x.shape[2] == 1 and idx.shape[0] != 1:
+        return jnp.take(x[:, :, 0], idx, axis=-1)
+    return jnp.take_along_axis(x, idx[None, None], axis=-1)
+
+
 def dyadic_inner_banks_ref(ext, evk, qs, mus):
     """ext: (d, k, B, n); evk: (d, k, n) shared or (d, k, B, n) per-batch
     key digits; qs/mus: (k,).  Accumulates the digit products in the

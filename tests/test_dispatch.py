@@ -77,6 +77,8 @@ def test_all_ops_pallas_paths_compile_on_tpu(monkeypatch):
         lambda: ops.twiddle_mul_banks(xk, w, wp, t["qs"][:k]),
         lambda: ops.galois_banks(xk, idx),
         lambda: ops.galois_banks(xk, idx2),               # per-batch rows
+        lambda: ops.galois_digits_banks(ext, idx2),       # hoisted gather
+        lambda: ops.galois_digits_banks(ext[:, :, :1], idx2),  # shared mode
         lambda: ops.dyadic_inner_banks(ext, evk3, t),
         lambda: ops.dyadic_inner_banks(ext, ext, t),      # per-batch evk
     ]

@@ -1,10 +1,12 @@
 """CkksServeEngine: grouping/padding policy + answers bit-exact against
-the single-op replay of the same trace."""
+the single-op replay of the same trace, plus the dispatch/key-switch
+accounting (hoisting reuse) on a mixed matvec+rotate queue."""
 import numpy as np
 import pytest
 
 from conftest import ct_equal as _eq
 
+from repro.fhe import linalg
 from repro.fhe.ckks import CkksContext
 from repro.fhe.serve import CkksServeEngine, FheRequest
 
@@ -89,11 +91,74 @@ def test_bad_request_fails_alone():
     assert _eq(out[2], plan.rotate(good, 1))
 
 
+def test_engine_mixed_matvec_and_rotate_queue():
+    """A queue mixing matvec with plain rotates: the matvec kind forms
+    its own (unpadded) group, every answer is bit-exact vs the direct
+    composite, and the engine's device-work counters expose the
+    hoisting reuse (key_switches > decomposes) the bench gate asserts
+    on — previously the stats recorded nothing about hoisting."""
+    plan = CTX.plan()
+    engine = CkksServeEngine(plan, batch_tile=4)
+    rng = np.random.default_rng(73)
+    W = rng.uniform(-0.5, 0.5, (8, 4))
+    M = linalg.PtMatrix.encode(CTX, W)
+    assert M.baby_set == (0, 1, 2) and M.giant_set == (3, 6)
+    xs = [rng.uniform(-1, 1, 8) for _ in range(2)]
+    vcts = [CTX.encrypt(linalg.encode_vector(CTX, x, 4)) for x in xs]
+    rot_ct = _ct()
+    reqs = [
+        FheRequest(0, "matvec", vcts[0], matrix=M),
+        FheRequest(1, "rotate", rot_ct, r=2),
+        FheRequest(2, "matvec", vcts[1], matrix=M),
+        FheRequest(3, "conjugate", rot_ct),
+    ]
+    out = engine.run(reqs)
+    assert set(out) == set(range(4))
+    stats = engine.stats
+    # groups: one matvec group (2 requests, unpadded) + one galois group
+    assert stats["dispatches"] == 2
+    assert sorted(stats["groups"]) == ["galois@L2", "matvec@L2"]
+    assert stats["padded"] == 2              # galois 2->4 only; matvec: none
+    # device-work accounting: per matvec — 1 hoisted dispatch (babies
+    # 1,2 share one decompose) + 1 giant-step rotate_many (2 ks) = 4 ks
+    # over 3 decomposes; the galois group adds 4 ks / 4 decomposes (the
+    # 2 tile-pad ghost rows DO ride the dispatch — real device work,
+    # which is exactly what these counters measure)
+    assert stats["program_dispatches"] == 5
+    assert stats["key_switches"] == 12
+    assert stats["decomposes"] == 10
+    assert stats["hoisted_reuse"] == 2       # one per matvec request
+    # bit-exact vs the direct composites
+    for rid, vct in ((0, vcts[0]), (2, vcts[1])):
+        assert _eq(out[rid], linalg.matvec(plan, M, vct))
+    assert _eq(out[1], plan.rotate(rot_ct, 2))
+    assert _eq(out[3], plan.conjugate(rot_ct))
+    # decoded answers still match the plaintext oracle end to end
+    got = CTX.decrypt_decode(out[0]).real[:4]
+    np.testing.assert_allclose(got, xs[0] @ W, atol=1e-2)
+    # a bad matvec fails ALONE — wrong basis, or an all-zero pack whose
+    # ValueError would otherwise escape _dispatch and sink the batch
+    dropped = plan.rescale(vcts[0])
+    M0 = linalg.PtMatrix.encode(CTX, np.zeros((4, 4)))
+    out2 = engine.run([FheRequest(0, "matvec", dropped, matrix=M),
+                       FheRequest(1, "rotate", rot_ct, r=1),
+                       FheRequest(2, "matvec", vcts[0], matrix=M0)])
+    assert set(out2) == {1}
+    assert "valid at exactly one basis" in engine.stats["failed"][0]
+    assert "no nonzero diagonals" in engine.stats["failed"][2]
+    assert _eq(out2[1], plan.rotate(rot_ct, 1))
+    # the fully-failed matvec group records NO phantom dispatch/group
+    assert engine.stats["dispatches"] == 1
+    assert list(engine.stats["groups"]) == ["galois@L2"]
+
+
 def test_request_validation():
     with pytest.raises(ValueError, match="unknown op"):
         FheRequest(0, "bootstrap", _ct())
     with pytest.raises(ValueError, match="needs 'other'"):
         FheRequest(0, "multiply", _ct())
+    with pytest.raises(ValueError, match="needs 'matrix'"):
+        FheRequest(0, "matvec", _ct())
     engine = CkksServeEngine(CTX.plan(), batch_tile=4)
     ct = _ct()
     with pytest.raises(ValueError, match="duplicate"):
