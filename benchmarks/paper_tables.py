@@ -28,12 +28,19 @@
                       Table I target), and the linalg_matvec_bsgs BSGS
                       matvec datapoint — check_smoke.py gates CI on
                       hoisted beating the loop per key switch
+  serve_slo           serving-layer SLO rows: the async continuous-
+                      batching drain (ping-pong double buffer) vs the
+                      synchronous oracle drain over one seeded mixed
+                      trace (serve_async/sync_throughput — gated: async
+                      must win) + p99/p50 request latency under a
+                      seeded Poisson offered load (serve_slo_p99)
   validation_1e5      scaled version of §VII.C's 1e5 random-NTT check
 
 Each function returns a list of (name, us_per_call, derived) rows.
 """
 from __future__ import annotations
 
+import os
 import time
 
 import jax
@@ -404,9 +411,10 @@ def hoisted_rotations():
     d = 16
     W = rng.uniform(-0.5, 0.5, (d, d))
     M = linalg.PtMatrix.encode(ctx, W)
-    plan = ctx.plan().prepare(rotations=tuple(rs) + M.giant_set,
-                              relin=False, hoisted_sets=(tuple(rs),
-                                                         M.baby_set))
+    # matvecs= warms the WHOLE matvec composite (giant-step keys, baby
+    # hoisted set, and both jit signatures) — no manual warm-up call
+    plan = ctx.plan().prepare(rotations=tuple(rs), relin=False,
+                              hoisted_sets=(tuple(rs),), matvecs=(M,))
     z = rng.uniform(-1, 1, ctx.slots) + 1j * rng.uniform(-1, 1, ctx.slots)
     ct = ctx.encrypt(ctx.encode(z))
     x = rng.uniform(-1, 1, d)
@@ -426,8 +434,6 @@ def hoisted_rotations():
         out = linalg.matvec(plan, M, vct)
         return out.c0.data, out.c1.data
 
-    # warm the matvec's giant-step rotate_many signature before timing
-    jax.block_until_ready(matvec()[0])
     plan.reset_stats()
     jax.block_until_ready(matvec()[0])
     mv_stats = dict(plan.stats)
@@ -459,6 +465,110 @@ def hoisted_rotations():
     ]
 
 
+def serve_slo():
+    """Serving-layer SLO rows: the continuous-batching engine's
+    double-buffered drain (``run_async`` — dispatch group i+1 before
+    blocking on group i, the paper's §SRM ping-pong discipline lifted to
+    request batches) against the synchronous oracle drain (``run`` —
+    each group fully answered before the next is staged), over the SAME
+    seeded synthetic trace of mixed op kinds and levels.
+
+    Row semantics (benchmarks/check_smoke.py gates on the first two):
+      serve_async_throughput  wall us of the async drain over the trace
+                              (all answers ready); derived = req/s
+      serve_sync_throughput   wall us of the synchronous drain over the
+                              identical trace
+      serve_slo_p99           p99 request latency (us, arrival ->
+                              answer drained) under a seeded Poisson
+                              arrival process at the derived offered
+                              load, with p50/mean alongside
+
+    What the comparison can honestly claim depends on the host.  The
+    ping-pong drain wins by overlapping host work (screening, grouping,
+    stacking the next batch) with device compute of the in-flight
+    batch, so on a MULTI-core host async must beat sync and the gate
+    requires it.  On a SINGLE-core host the XLA CPU worker and the
+    Python host thread time-share one core — there is nothing to
+    overlap with, both drains degenerate to host+device serialized, and
+    the drains measure equal to timer noise; the gate then only bounds
+    async's overhead.  The row still guards the real serve-path bugs
+    this layer fixed: an eager stack/slice in the wrapper path or a
+    dropped-while-pending donated stack (whose PJRT destructor blocks
+    until the consumer finishes) re-serializes every dispatch and made
+    the async drain measurably SLOWER than sync at any core count.
+
+    Both drains call ``jax.block_until_ready`` on every group inside
+    the timed region, so the rows measure compute, not dispatch depth.
+    Timing is PAIRED like ckks_batched_ops: each pass times async and
+    sync back to back over the same requests, three passes, and every
+    reported row comes from the pass with the MEDIAN async/sync ratio —
+    a genuine regression (async pathologically slower) shows in every
+    pass and still fails the gate; a load burst hitting one pass
+    cannot."""
+    from repro.fhe import linalg
+    from repro.fhe.ckks import CkksContext
+    from repro.fhe.serve import CkksServeEngine, synthetic_trace
+
+    ctx = CkksContext(n=1024, levels=2, scale_bits=28, seed=19)
+    rng = np.random.default_rng(20)
+    d = 16
+    M = linalg.PtMatrix.encode(ctx, rng.uniform(-0.5, 0.5, (d, d)))
+    # tile 4 keeps padding waste low on the 48-request trace (tile 8
+    # pads ~60% of some groups — pure wasted device rows either drain
+    # would pay, muddying the async-vs-sync comparison)
+    N, tile = 48, 4
+    reqs, _ = synthetic_trace(ctx, N, seed=21, matrix=M)
+    plan = ctx.plan()
+    engine = CkksServeEngine(plan, batch_tile=tile, max_batch=8 * tile)
+    # pin EVERY padded-batch signature the engine can dispatch (any
+    # multiple of tile up to max_batch, both serving bases, uniform and
+    # mixed galois layouts, the matvec composite) — arrival-driven
+    # admission forms timing-dependent group sizes, so a warm-up drain
+    # alone cannot cover them and the percentiles would measure XLA
+    # compiles instead of queueing delay.  A warm drain of the trace
+    # then builds the per-amount galois keys and settles the caches.
+    sizes = tuple(range(tile, 8 * tile + 1, tile))
+    plan.prepare(rotations=(1, 2), conjugate=True, batch_sizes=sizes,
+                 matvecs=(M,))
+    plan.prepare(basis=ctx.qs[:-1], rotations=(1, 2), conjugate=True,
+                 batch_sizes=sizes)
+    engine.run(list(reqs))
+    engine.run_async(list(reqs))
+
+    passes = []
+    for _ in range(3):
+        t0 = time.perf_counter()
+        engine.run_async(list(reqs))
+        t_async = engine.stats["wall_s"] * 1e6
+        engine.run(list(reqs))
+        t_sync = engine.stats["wall_s"] * 1e6
+        passes.append((t_sync / t_async, t_async, t_sync))
+    ratio, t_a, t_s = sorted(passes)[1]          # median async/sync ratio
+
+    # SLO row: Poisson offered load at ~70% of the measured async
+    # capacity (a loaded-but-stable operating point), same seeded trace
+    # (prepare() above pinned every group signature admission can form,
+    # and the row reports fresh_traces to prove the percentiles are
+    # queueing delay, not XLA)
+    rate = 0.7 * N / (t_a / 1e6)
+    reqs_p, arr = synthetic_trace(ctx, N, seed=21, rate=rate, matrix=M)
+    engine.run_async(reqs_p, arr)
+    lat = engine.stats["latency_us"]
+    return [
+        ("serve_async_throughput", t_a,
+         f"{N} req ping-pong drain: {N / (t_a / 1e6):.0f} req/s "
+         f"(x{ratio:.2f} vs sync, median of 3 paired passes, "
+         f"{os.cpu_count() or 1} cores)"),
+        ("serve_sync_throughput", t_s,
+         f"{N} req synchronous oracle drain: {N / (t_s / 1e6):.0f} req/s"),
+        ("serve_slo_p99", lat["p99"],
+         f"offered {rate:.0f} req/s (Poisson): p50={lat['p50']:.0f}us "
+         f"p99={lat['p99']:.0f}us mean={lat['mean']:.0f}us "
+         f"over {lat['count']} req, "
+         f"{engine.stats['fresh_traces']} fresh traces"),
+    ]
+
+
 # ---------------------------------------------------------- validation
 
 def validation_1e5():
@@ -483,15 +593,18 @@ def validation_1e5():
 
 ALL = [table2_mulmod, table3_ntt128, fig21_large_ntt, ntt_fourstep_2_14,
        fig22_keyswitch, keyswitch_banks, keyswitch_banks_2_14, ckks_ops,
-       ckks_batched_ops, hoisted_rotations, validation_1e5]
+       ckks_batched_ops, hoisted_rotations, serve_slo, validation_1e5]
 
 # fast subset for CI / --smoke: NTT-128 rows, the bank-parallel keyswitch
 # throughput datapoint, the large-N (2^14) four-step + keyswitch rows,
 # the EvalPlan ckks_multiply/ckks_rotate scheme-op rows, the
 # ciphertext-batched ckks_*_b{B} throughput rows (gated by
 # benchmarks/check_smoke.py: batch-32 multiply must beat batch-1 per op),
-# and the hoisted-rotation rows (gated: hoisted R=8 must beat 8
-# independent rotate dispatches per key switch)
+# the hoisted-rotation rows (gated: hoisted R=8 must beat 8 independent
+# rotate dispatches per key switch), and the serving SLO rows (gated:
+# the async ping-pong drain must beat the synchronous oracle drain on a
+# multi-core host, and stay within a small overhead bound of it on a
+# single-core host where there is no device/host overlap to exploit)
 SMOKE = [table3_ntt128, keyswitch_banks, ntt_fourstep_2_14,
          keyswitch_banks_2_14, ckks_ops, ckks_batched_ops,
-         hoisted_rotations]
+         hoisted_rotations, serve_slo]

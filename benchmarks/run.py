@@ -9,15 +9,18 @@ Usage: PYTHONPATH=src python -m benchmarks.run [--skip-slow | --smoke]
 ``--smoke`` runs the fast CI subset (NTT-128, the bank-parallel
 keyswitch throughput datapoints, the EvalPlan ckks_multiply /
 ckks_rotate scheme-op rows, the ciphertext-batched
-ckks_multiply_b{1,8,32} / ckks_rotate_b32 rows, and the
-hoisted-rotation rows incl. the projected-vs-measured
-keyswitch_throughput datapoint) and exits nonzero on any ERROR row.
-``--json PATH`` additionally writes the rows as a JSON record — CI
-uploads the smoke run's file as a ``BENCH_*.json`` artifact so a bench
-trajectory accumulates across PRs, then gates it through
-``benchmarks.check_smoke`` (batch-32 multiply must beat batch-1 per op;
-the hoisted 8-rotation dispatch must beat 8 independent rotates per
-key switch).
+ckks_multiply_b{1,8,32} / ckks_rotate_b32 rows, the hoisted-rotation
+rows incl. the projected-vs-measured keyswitch_throughput datapoint,
+and the serving SLO rows: async/sync drain walls over a seeded mixed
+trace plus p50/p99 request latency under Poisson arrivals) and exits
+nonzero on any ERROR row.  ``--json PATH`` additionally writes the
+rows as a JSON record — CI uploads the smoke run's file as a
+``BENCH_*.json`` artifact so a bench trajectory accumulates across
+PRs, then gates it through ``benchmarks.check_smoke`` (batch-32
+multiply must beat batch-1 per op; the hoisted 8-rotation dispatch
+must beat 8 independent rotates per key switch; the ping-pong serve
+drain must beat the synchronous drain on multi-core hosts and stay
+within a bounded overhead of it on single-core hosts).
 """
 from __future__ import annotations
 

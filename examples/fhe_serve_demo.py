@@ -1,14 +1,28 @@
-"""fhe-serve: batched CKKS request serving over one prepared EvalPlan.
+"""fhe-serve: continuous-batching CKKS request serving over one
+prepared EvalPlan.
 
 The paper's throughput claim (Table I: 1.63M key-switch ops/s) assumes
-the pipeline is kept saturated with back-to-back work.  This demo plays
-a mixed request trace — multiplies, rotations with different amounts,
-conjugations and rescales from several "clients" — through
-``fhe.serve.CkksServeEngine``: requests are grouped by (op kind, basis),
-padded to the batch tile, and each group runs as ONE jitted device
-dispatch over the batched banks programs.  The same trace is then
-replayed through the single-op path, and every engine answer is checked
-bit-exact against it.
+the pipeline is kept saturated with back-to-back work.  This demo
+drives ``fhe.serve.CkksServeEngine`` two ways:
+
+ 1. **Saturated drain, async vs sync.**  A mixed request trace —
+    multiplies, rotations with different amounts, conjugations and
+    rescales from several "clients" — runs through the double-buffered
+    ``run_async`` drain (dispatch group i+1 before blocking on group i,
+    the paper's ping-pong discipline lifted to request batches) and
+    through the synchronous ``run`` oracle.  Every answer is checked
+    bit-exact between the two drains and against the single-op path.
+
+ 2. **Poisson arrivals, SLO view.**  The same engine replays a seeded
+    ``synthetic_trace`` with Poisson inter-arrival times at a loaded
+    operating point and reports per-request latency percentiles
+    (arrival -> answer drained), the numbers a serving SLO is written
+    against.
+
+On a multi-core host the async drain overlaps host-side screening /
+grouping / stacking with device compute of the in-flight batch; on a
+single-core host the two drains time-share the core and measure equal
+— the latency percentiles and failure isolation are then the point.
 
 Run:  PYTHONPATH=src python examples/fhe_serve_demo.py
 """
@@ -18,7 +32,7 @@ import numpy as np
 import jax
 
 from repro.fhe.ckks import CkksContext
-from repro.fhe.serve import CkksServeEngine, FheRequest
+from repro.fhe.serve import CkksServeEngine, FheRequest, synthetic_trace
 
 
 def make_trace(ctx, rng, n_clients=24):
@@ -47,25 +61,33 @@ def make_trace(ctx, rng, n_clients=24):
 def main():
     rng = np.random.default_rng(0)
     ctx = CkksContext(n=1024, levels=2, scale_bits=28, seed=17)
-    # batch_sizes warms the jitted *_many programs at the padded batch
-    # signatures the engine will produce, so the first real request
-    # group is a pure device dispatch
+    # batch_sizes pins the jitted *_many programs at every padded batch
+    # signature the engine can produce, so no request group — however
+    # admission slices the queue — pays XLA compilation in its latency
+    # window (engine.stats['fresh_traces'] stays 0)
+    tile = 8
     plan = ctx.plan().prepare(rotations=range(1, 6), conjugate=True,
-                              batch_sizes=(8, 16))
-    engine = CkksServeEngine(plan, batch_tile=8)
+                              batch_sizes=(tile, 2 * tile, 3 * tile, 4 * tile))
+    engine = CkksServeEngine(plan, batch_tile=tile)
 
     reqs, oracle = make_trace(ctx, rng)
-    engine.run(reqs)      # settle caches so both timed paths are warm
+    engine.run(list(reqs))        # settle caches so the timed paths are warm
+    engine.run_async(list(reqs))
 
+    # --- saturated drain: ping-pong vs synchronous oracle -------------
     t0 = time.perf_counter()
-    answers = engine.run(reqs)
-    jax.block_until_ready(answers[0].c0.data)
-    batched_s = time.perf_counter() - t0
+    answers = engine.run_async(list(reqs))
+    async_s = time.perf_counter() - t0
     s = engine.stats
-    print(f"engine: {len(reqs)} requests -> {s['dispatches']} dispatches "
-          f"({s['identity']} identity short-circuits, {s['padded']} pad rows)")
+    print(f"async drain: {len(reqs)} requests -> {s['dispatches']} dispatches "
+          f"({s['identity']} identity short-circuits, {s['padded']} pad rows, "
+          f"{s['fresh_traces']} fresh traces)")
     for key, cnt in sorted(s["groups"].items()):
         print(f"  group {key}: {cnt} ops in one dispatch")
+
+    t0 = time.perf_counter()
+    sync_answers = engine.run(list(reqs))
+    sync_s = time.perf_counter() - t0
 
     # single-op replay: same ops, one dispatch per request
     t0 = time.perf_counter()
@@ -77,19 +99,33 @@ def main():
             singles[req.rid] = plan.rotate(req.ct, req.r)
         else:
             singles[req.rid] = plan.conjugate(req.ct)
-    jax.block_until_ready(singles[len(reqs) - 1].c0.data)
+    jax.block_until_ready([singles[r].c0.data for r in singles])
     single_s = time.perf_counter() - t0
 
     exact = all(
         np.array_equal(np.asarray(answers[r].c0.data), np.asarray(singles[r].c0.data))
         and np.array_equal(np.asarray(answers[r].c1.data), np.asarray(singles[r].c1.data))
+        and np.array_equal(np.asarray(answers[r].c0.data), np.asarray(sync_answers[r].c0.data))
         for r in singles)
     err = max(np.max(np.abs(ctx.decrypt_decode(answers[req.rid]) - oracle[req.rid]))
               for req in reqs)
-    print(f"batched: {batched_s * 1e3:.1f} ms  single-op: {single_s * 1e3:.1f} ms "
-          f"({single_s / batched_s:.2f}x)")
-    print(f"bit-exact vs single-op path: {'OK' if exact else 'FAIL'};"
+    print(f"async: {async_s * 1e3:.1f} ms  sync: {sync_s * 1e3:.1f} ms  "
+          f"single-op: {single_s * 1e3:.1f} ms")
+    print(f"bit-exact (async == sync == single-op): {'OK' if exact else 'FAIL'};"
           f" max slot error vs plaintext oracle: {err:.2e}")
+
+    # --- Poisson arrivals: the SLO view -------------------------------
+    n_req = 32
+    rate = 0.7 * len(reqs) / max(async_s, 1e-9)   # ~70% of drain capacity
+    preqs, arrivals = synthetic_trace(ctx, n_req, seed=5, rate=rate)
+    engine.run_async(list(preqs), arrivals)       # warm arrival-path keys
+    engine.run_async(preqs, arrivals)
+    lat = engine.stats["latency_us"]
+    print(f"poisson @ {rate:.0f} req/s: p50={lat['p50'] / 1e3:.1f} ms  "
+          f"p99={lat['p99'] / 1e3:.1f} ms  mean={lat['mean'] / 1e3:.1f} ms "
+          f"over {lat['count']} requests "
+          f"(max queue depth {engine.stats['max_queue']}, "
+          f"{len(engine.stats['failed'])} failed)")
 
 
 if __name__ == "__main__":

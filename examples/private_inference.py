@@ -94,9 +94,11 @@ def main():
     t0 = time.perf_counter()
     M = linalg.PtMatrix.encode(ctx, W)
     plan = ctx.plan().prepare(
-        rotations=tuple(range(1, hidden_dim)) + M.giant_set, relin=False,
-        hoisted_sets=(M.baby_set,),
-        batch_sizes=(len(M.giant_set),))   # warm the giant-step rotate_many
+        rotations=tuple(range(1, hidden_dim)), relin=False,
+        matvecs=(M,))   # warms the WHOLE BSGS composite: hoisted
+    # baby-step dispatch at M.baby_set, the fused MAC pack, and the
+    # mixed-amount giant-step rotate_many — no matvec signature is left
+    # to compile inside a request
     diags = encode_diagonals(ctx, W)    # no ct x ct multiply -> no relin key
     print(f"EvalPlan prepared in {time.perf_counter() - t0:.2f}s "
           f"({hidden_dim - 1} rotation keys, {len(diags)} naive diagonals, "

@@ -56,6 +56,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+from collections import deque
 
 import jax
 import jax.numpy as jnp
@@ -183,13 +184,39 @@ def galois_ks_banks(c0, c1, idx, evk_b, evk_a, t, fsp=None, *,
 # to a Python loop of the single-ciphertext programs above (pinned in
 # tests/test_batched_eval.py).
 
-@functools.partial(jax.jit, static_argnames=("use_pallas", "tile"))
+# donation policy for the hot batched programs below: reusing the two
+# (B, k, n) input allocations for the two outputs halves the live
+# batch buffers while the serve engine keeps two batches in flight —
+# but only OFF the CPU backend.  On CPU PJRT the aliasing constraint
+# measurably pessimizes the thunk schedule (batch-32 multiply runs
+# ~19% slower per op — enough to lose the batched-amortization CI
+# gate), and host memory is not the scarce resource there.  Callers
+# still route the stacks through ``retire_donated`` unconditionally:
+# a no-op cost when nothing is donated, and the required keepalive
+# when something is.
+_DONATE_BANKS = () if jax.default_backend() == "cpu" else (0, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "tile"),
+                   donate_argnums=_DONATE_BANKS)
 def multiply_many_banks(a0, a1, b0, b1, evk_b, evk_a, t, fsp=None, *,
                         use_pallas: bool | None = None, tile: int = 8):
     """B ciphertext tensor products + relinearization, one program.
 
     a0/a1/b0/b1: (B, k, n) u32 NTT-form halves; evk_b/evk_a: (k, k+1, n)
-    relin key digits shared by the batch.  Returns (B, k, n) stacks."""
+    relin key digits shared by the batch.  Returns (B, k, n) stacks.
+
+    a0/a1 are DONATED off-CPU (``_DONATE_BANKS``): the callers
+    (``EvalPlan.multiply_many``) pass freshly ``jnp.stack``-ed copies,
+    never a live ciphertext's buffer, so XLA reuses the two (B, k, n)
+    input allocations for the two (B, k, n) outputs instead of
+    allocating new HBM per dispatch — the continuous-batching serve
+    loop keeps two batches in flight and would otherwise hold four
+    ciphertext-batch buffers live.  Caveat: the caller must keep the
+    donated stacks referenced until this program has EXECUTED
+    (``retire_donated``) — PJRT invalidates a donated handle at
+    dispatch, and destroying it while the program is still pending
+    blocks the host on the whole dependency chain."""
     k = a0.shape[1]
     q = t["qs"][:k][None, :, None]
     mu = t["mu"][:k][None, :, None]
@@ -207,7 +234,11 @@ def multiply_many_banks(a0, a1, b0, b1, evk_b, evk_a, t, fsp=None, *,
 def rescale_many_banks(c0, c1, t, fsp=None, *, use_pallas: bool | None = None,
                        tile: int = 8):
     """Rescale B ciphertexts by the last basis prime: all 2B halves ride
-    one fused ``mod_down_banks`` pipeline.  c0/c1: (B, k+1, n)."""
+    one fused ``mod_down_banks`` pipeline.  c0/c1: (B, k+1, n).
+
+    No buffer donation here: the outputs are (B, k, n) — one prime row
+    smaller than the (B, k+1, n) inputs — so XLA could never alias them
+    and donation would only emit unusable-donation warnings."""
     B, kp1, n = c0.shape
     acc = jnp.stack([c0, c1], axis=1)                  # (B, 2, k+1, n)
     acc = acc.reshape(2 * B, kp1, n).swapaxes(0, 1)    # (k+1, 2B, n)
@@ -257,7 +288,8 @@ def hoisted_rotations_banks(c0, c1, idx, evk_b, evk_a, t, fsp=None, *,
     return addmod(c0g, ks0, q), ks1
 
 
-@functools.partial(jax.jit, static_argnames=("use_pallas", "tile"))
+@functools.partial(jax.jit, static_argnames=("use_pallas", "tile"),
+                   donate_argnums=_DONATE_BANKS)
 def galois_ks_many_banks(c0, c1, idx, evk_b, evk_a, t, fsp=None, *,
                          use_pallas: bool | None = None, tile: int = 8):
     """B slot rotations / conjugations, one program — the batch may MIX
@@ -267,7 +299,12 @@ def galois_ks_many_banks(c0, c1, idx, evk_b, evk_a, t, fsp=None, *,
     uniform batch passes the shared (n,) row + (k, k+1, n) digits
     instead — the underlying kernels broadcast either layout.
 
-    c0/c1: (B, k, n) u32 NTT-form halves.  Returns (B, k, n) stacks."""
+    c0/c1: (B, k, n) u32 NTT-form halves.  Returns (B, k, n) stacks.
+    Both are DONATED off-CPU (fresh ``jnp.stack`` copies at every call
+    site, parked via ``retire_donated`` until this program executes —
+    see ``multiply_many_banks`` for the policy and the
+    pending-destructor hazard); the key/idx/table operands are NOT —
+    they live in the plan's caches and must survive the dispatch."""
     k = c0.shape[1]
     q = t["qs"][:k][None, :, None]
     c0g = ops.galois_banks(c0, idx, use_pallas=use_pallas, tile=tile,
@@ -279,9 +316,128 @@ def galois_ks_many_banks(c0, c1, idx, evk_b, evk_a, t, fsp=None, *,
     return addmod(c0g, ks0.swapaxes(0, 1), q), ks1.swapaxes(0, 1)
 
 
+@functools.partial(jax.jit, static_argnames=("jmap", "imap"))
+def plain_mac_banks(b0, b1, diags, qs, mus, *, jmap, imap):
+    """Fused BSGS multiply-accumulate stage (the ``fhe.linalg.matvec``
+    inner sums): inner_i = sum_j pdiag_{i,j} * rot_j(x), every giant
+    group in ONE program.
+
+    b0/b1: (R, k, n) stacked halves of the hoisted baby rotations;
+    diags: (D, k, n) stacked plaintext diagonals, sorted by (i, j);
+    qs/mus: (k, 1) Barrett columns.  ``jmap[d]`` is diagonal d's row in
+    the baby stack and ``imap[d]`` its giant group — both STATIC
+    (per-``PtMatrix`` constants), so the accumulation unrolls into a
+    pure dyadic MM/MA dataflow with no host round trips: the eager
+    per-diagonal ``mul_plain``/``add`` chain this replaces issued ~10
+    primitive dispatches per diagonal and dominated serve-path wall
+    time (host-bound at ~250 us of dispatch overhead per modmul).
+    Returns (G, k, n) inner-sum stacks in giant-group order.  Values
+    are bit-identical to the eager chain: modular addition is exact, so
+    association order cannot change the result."""
+    p0 = mulmod_barrett(diags, b0[jmap, :, :], qs, mus)
+    p1 = mulmod_barrett(diags, b1[jmap, :, :], qs, mus)
+    outs0, outs1 = [], []
+    for g in sorted(set(imap)):
+        ds = [d for d, i in enumerate(imap) if i == g]
+        acc0, acc1 = p0[ds[0]], p1[ds[0]]
+        for d in ds[1:]:
+            acc0 = addmod(acc0, p0[d], qs)
+            acc1 = addmod(acc1, p1[d], qs)
+        outs0.append(acc0)
+        outs1.append(acc1)
+    return jnp.stack(outs0), jnp.stack(outs1)
+
+
+# -------------------------------------------- async staging helpers
+#
+# On the CPU/TPU PJRT runtimes, EAGER ops synchronize: an eager
+# ``jnp.stack`` or ``c0[i]`` on a result that is still computing waits
+# for it to finish before dispatching.  The batched wrappers below
+# stage inputs and split outputs on every call, so doing either eagerly
+# re-serializes the whole dispatch chain — the serve engine's
+# ping-pong drain would overlap nothing (this was measured: wrapper
+# output slicing alone accounted for the full device latency of the
+# previous dispatch).  Wrapping the same stack/split/accumulate in
+# ``jax.jit`` keeps them on the async dispatch queue: the call returns
+# futures immediately and only an explicit ``block_until_ready``
+# synchronizes.  They are registered in ``_JITTED_PROGRAMS`` because a
+# cold trace of any of them is real XLA work inside a request's latency
+# window.
+
+_stack_banks = jax.jit(jnp.stack)
+
+
+@functools.partial(jax.jit, static_argnames=("axis",))
+def _unstack_banks(x, axis: int = 0):
+    return tuple(jnp.moveaxis(x, axis, 0))
+
+
+@jax.jit
+def accumulate_banks(parts0, parts1, qs):
+    """Modular sum of L ciphertext halves as one program: parts0/parts1
+    are (nonempty) LISTS of (k, n) stacks — passed as a pytree, so no
+    eager stacking — and qs the (k, 1) prime columns.  Exact modular
+    addition: any association order gives bit-identical sums, so this
+    equals the eager left-fold ``add`` chain it replaces (the
+    ``fhe.linalg.matvec`` giant-step tail)."""
+    acc0, acc1 = parts0[0], parts1[0]
+    for p0, p1 in zip(parts0[1:], parts1[1:]):
+        acc0 = addmod(acc0, p0, qs)
+        acc1 = addmod(acc1, p1, qs)
+    return acc0, acc1
+
+
+# PJRT marks a donated buffer's handle deleted at DISPATCH time, but
+# destroying the handle of a donated buffer whose consumer has not yet
+# EXECUTED blocks the host until the consumer (and its whole producer
+# chain) finishes.  The donated args of ``multiply_many_banks`` /
+# ``galois_ks_many_banks`` are throwaway ``_stack_banks`` outputs, so
+# letting them die right after the call would synchronize every
+# dispatch — the exact serialization the serve engine's ping-pong
+# drain exists to avoid (measured: the destructor ate the full device
+# latency of the in-flight batch, charged to the call line).  Parking
+# them here until the consumer's output reports ready keeps the
+# pipeline asynchronous; the deque self-trims on each new retirement,
+# so it never holds more than the programs actually in flight.
+_RETIRED_DONATIONS: deque = deque()
+
+
+def retire_donated(probe, *stacks) -> None:
+    """Park donated input ``stacks`` until ``probe`` (an output of
+    their consumer program) is ready, then let them be collected."""
+    _RETIRED_DONATIONS.append((probe, stacks))
+    while _RETIRED_DONATIONS:
+        head, _ = _RETIRED_DONATIONS[0]
+        try:
+            if not head.is_ready():
+                break
+        except Exception:      # probe itself deleted/donated: done
+            pass
+        _RETIRED_DONATIONS.popleft()
+
+
+def release_retired() -> None:
+    """Drop every parked donation.  Only call once the work has been
+    drained (``jax.block_until_ready`` on the outputs) — releasing a
+    still-pending donation blocks until its consumer executes."""
+    _RETIRED_DONATIONS.clear()
+
+
 @functools.lru_cache(maxsize=None)
 def _scalar_pack(primes: tuple[int, ...]) -> dict:
     return FB.build_scalar_pack(list(primes))
+
+
+# Every jitted scheme program above, for trace accounting: the programs
+# are module-level and shape-keyed, so their jit caches are shared by
+# all plans in the process — ``EvalPlan.trace_count`` reads the total
+# and callers assert on DELTAS (a serve loop whose warm-up covered its
+# traffic must measure delta 0 across a run).
+_JITTED_PROGRAMS = (multiply_banks, rescale_banks, galois_ks_banks,
+                    multiply_many_banks, rescale_many_banks,
+                    hoisted_rotations_banks, galois_ks_many_banks,
+                    plain_mac_banks, accumulate_banks,
+                    _stack_banks, _unstack_banks)
 
 
 class EvalPlan:
@@ -321,6 +477,18 @@ class EvalPlan:
     def reset_stats(self):
         self.stats = {"dispatches": 0, "key_switches": 0, "decomposes": 0}
         return self
+
+    @staticmethod
+    def trace_count() -> int:
+        """Total compiled signatures across the jitted scheme programs
+        (process-wide — the programs are module-level and shared by
+        every plan).  Latency-sensitive callers compare deltas: a
+        request that pays XLA compilation inside its latency window
+        shows up as ``trace_count`` growth, so the serve engine reports
+        the per-run delta as ``stats['fresh_traces']`` and a correct
+        ``prepare`` warm-up pins it at 0."""
+        return sum(getattr(p, "_cache_size", lambda: 0)()
+                   for p in _JITTED_PROGRAMS)
 
     def _count(self, dispatches=1, key_switches=0, decomposes=0):
         self.stats["dispatches"] += dispatches
@@ -415,7 +583,8 @@ class EvalPlan:
 
     def prepare(self, basis: tuple[int, ...] | None = None,
                 rotations=(), conjugate: bool = False, relin: bool = True,
-                warm_jit: bool = True, batch_sizes=(), hoisted_sets=()):
+                warm_jit: bool = True, batch_sizes=(), hoisted_sets=(),
+                matvecs=()):
         """Eagerly build every table/key/gather-row a serving loop will
         need, so no request pays keygen or pack construction.
 
@@ -431,6 +600,19 @@ class EvalPlan:
         ``hoisted_rotations_banks`` (shape-keyed on R) per rotation-amount
         tuple — e.g. a BSGS matvec's baby-step set (``fhe.linalg``
         reports it as ``PtMatrix.baby_set``).
+
+        ``matvecs`` takes ``fhe.linalg.PtMatrix`` packs and warms the
+        WHOLE matvec composite each one runs — the hoisted baby-step
+        dispatch at the pack's ``baby_set`` AND the mixed-amount
+        giant-step ``rotate_many`` at B = len(giant_set), at the pack's
+        own basis.  Neither signature is implied by ``batch_sizes``
+        (matvec giant batches are not tile-padded) or ``hoisted_sets``
+        alone, so without this a post-prepare matvec pays XLA
+        compilation inside its latency window; a warmed plan pins
+        ``trace_count`` across the request (tests/test_linalg.py).
+
+        One prepare covers ONE basis; serve loops admitting traffic at
+        several levels call prepare once per serving basis.
 
         The dispatch counters (``stats``) are reset on exit, so warm-up
         traffic never pollutes a caller's accounting."""
@@ -470,6 +652,24 @@ class EvalPlan:
                     self.galois_ks_many(cts, mix)
             for rset in hoisted_sets:
                 self.rotate_hoisted(zct, list(rset))
+        for M in matvecs:
+            mv_basis = tuple(M.basis)
+            self.keyswitch_tables(mv_basis)
+            for r in set(M.baby_set) | set(M.giant_set):
+                g = self.rotation_group_element(r)
+                if g != 1:
+                    self.galois_key(g, mv_basis)
+                    self.eval_idx(g)
+            if warm_jit:
+                # run the full composite on a zero ciphertext: compiles
+                # the R-keyed hoisted baby dispatch AND the giant-step
+                # rotate_many signature (mixed or uniform, exactly as
+                # matvec will issue it) — the import is deferred because
+                # linalg imports this module
+                from repro.fhe import linalg as _linalg
+                z = RnsPoly(jnp.zeros((len(mv_basis), self.n), jnp.uint32),
+                            mv_basis, True)
+                _linalg.matvec(self, M, Ciphertext(z, z, 1.0))
         return self.reset_stats()
 
     # ------------------------------------------------------- scheme ops
@@ -546,16 +746,18 @@ class EvalPlan:
         basis = self._common_basis("multiply_many", list(As) + list(Bs))
         t, fsp = self.keyswitch_tables(basis)
         eb, ea = self.relin_key(basis)
-        stack = lambda ps: jnp.stack([p.data for p in ps])
+        stack = lambda ps: _stack_banks([p.data for p in ps])
+        a0s, a1s = stack([a.c0 for a in As]), stack([a.c1 for a in As])
         c0, c1 = multiply_many_banks(
-            stack([a.c0 for a in As]), stack([a.c1 for a in As]),
+            a0s, a1s,
             stack([b.c0 for b in Bs]), stack([b.c1 for b in Bs]),
             eb, ea, t, fsp, **self._kw)
+        retire_donated(c0, a0s, a1s)
         self._count(1, key_switches=len(As), decomposes=len(As))
-        return [Ciphertext(RnsPoly(c0[i], basis, True),
-                           RnsPoly(c1[i], basis, True),
-                           As[i].scale * Bs[i].scale)
-                for i in range(len(As))]
+        return [Ciphertext(RnsPoly(r0, basis, True),
+                           RnsPoly(r1, basis, True), a.scale * b.scale)
+                for r0, r1, a, b in zip(_unstack_banks(c0),
+                                        _unstack_banks(c1), As, Bs)]
 
     def rescale_many(self, cts) -> list[Ciphertext]:
         """Rescale B ciphertexts (one basis) as one fused mod-down over
@@ -567,14 +769,14 @@ class EvalPlan:
         basis = self._common_basis("rescale_many", cts)
         t, fsp = self.rescale_tables(basis)
         c0, c1 = rescale_many_banks(
-            jnp.stack([ct.c0.data for ct in cts]),
-            jnp.stack([ct.c1.data for ct in cts]), t, fsp, **self._kw)
+            _stack_banks([ct.c0.data for ct in cts]),
+            _stack_banks([ct.c1.data for ct in cts]), t, fsp, **self._kw)
         self._count(1)
         rest = basis[:-1]
-        return [Ciphertext(RnsPoly(c0[i], rest, True),
-                           RnsPoly(c1[i], rest, True),
-                           ct.scale / basis[-1])
-                for i, ct in enumerate(cts)]
+        return [Ciphertext(RnsPoly(r0, rest, True),
+                           RnsPoly(r1, rest, True), ct.scale / basis[-1])
+                for r0, r1, ct in zip(_unstack_banks(c0),
+                                      _unstack_banks(c1), cts)]
 
     def galois_ks_many(self, cts, gs) -> list[Ciphertext]:
         """B automorphisms (one basis, possibly MIXED group elements gs)
@@ -597,14 +799,16 @@ class EvalPlan:
             idx = self.eval_idx(gs[0])
         else:
             eb, ea, idx = self._galois_batch_key(tuple(gs), basis)
-        c0, c1 = galois_ks_many_banks(
-            jnp.stack([ct.c0.data for ct in cts]),
-            jnp.stack([ct.c1.data for ct in cts]),
-            idx, eb, ea, t, fsp, **self._kw)
+        s0 = _stack_banks([ct.c0.data for ct in cts])
+        s1 = _stack_banks([ct.c1.data for ct in cts])
+        c0, c1 = galois_ks_many_banks(s0, s1, idx, eb, ea, t, fsp,
+                                      **self._kw)
+        retire_donated(c0, s0, s1)
         self._count(1, key_switches=len(cts), decomposes=len(cts))
-        return [Ciphertext(RnsPoly(c0[i], basis, True),
-                           RnsPoly(c1[i], basis, True), ct.scale)
-                for i, ct in enumerate(cts)]
+        return [Ciphertext(RnsPoly(r0, basis, True),
+                           RnsPoly(r1, basis, True), ct.scale)
+                for r0, r1, ct in zip(_unstack_banks(c0),
+                                      _unstack_banks(c1), cts)]
 
     # ----------------------------------------------- hoisted rotations
     #
@@ -629,9 +833,10 @@ class EvalPlan:
         c0, c1 = hoisted_rotations_banks(a.c0.data, a.c1.data, idx,
                                          eb, ea, t, fsp, **self._kw)
         self._count(1, key_switches=len(gs), decomposes=1)
-        return [Ciphertext(RnsPoly(c0[:, i], basis, True),
-                           RnsPoly(c1[:, i], basis, True), a.scale)
-                for i in range(len(gs))]
+        return [Ciphertext(RnsPoly(r0, basis, True),
+                           RnsPoly(r1, basis, True), a.scale)
+                for r0, r1 in zip(_unstack_banks(c0, axis=1),
+                                  _unstack_banks(c1, axis=1))]
 
     def rotate_hoisted(self, a: Ciphertext, rs) -> list[Ciphertext]:
         """Rotate one ciphertext by every amount in ``rs`` with the

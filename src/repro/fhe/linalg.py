@@ -45,9 +45,14 @@ from __future__ import annotations
 import dataclasses
 import math
 
+import jax.numpy as jnp
 import numpy as np
 
-from repro.fhe.evalplan import Ciphertext, EvalPlan, check_level
+from repro.fhe import rns
+from repro.fhe.evalplan import (Ciphertext, EvalPlan, _stack_banks,
+                                _unstack_banks, accumulate_banks,
+                                check_level, plain_mac_banks)
+from repro.fhe.rns import RnsPoly
 
 __all__ = ["PtMatrix", "encode_vector", "matvec", "rotate_sum"]
 
@@ -130,6 +135,27 @@ class PtMatrix:
         """Nonzero giant-step rotation amounts (one ``rotate_many``)."""
         return tuple(sorted({i * self.n1 for (i, _) in self.diags if i}))
 
+    def mac_pack(self):
+        """Device-stacked form of the diagonals for the fused
+        ``plain_mac_banks`` MAC program: (diags (D, k, n) stack, jmap,
+        imap, gis) where diagonal d (sorted (i, j) order) multiplies
+        baby-stack row ``jmap[d]`` into giant group ``imap[d]``, and
+        ``gis`` lists the giant indices i in output order.  Built once
+        per pack (cached) — W is static across requests, like the
+        encode itself."""
+        cached = self.__dict__.get("_mac_pack")
+        if cached is None:
+            keys = sorted(self.diags)
+            jrow = {j: t for t, j in enumerate(self.baby_set)}
+            gis = tuple(sorted({i for (i, _) in keys}))
+            grow = {i: t for t, i in enumerate(gis)}
+            cached = self.__dict__["_mac_pack"] = (
+                jnp.stack([self.diags[ij].data for ij in keys]),
+                tuple(jrow[j] for (_, j) in keys),
+                tuple(grow[i] for (i, _) in keys),
+                gis)
+        return cached
+
 
 def encode_vector(ctx, x, d_out: int, *, scale: float | None = None,
                   basis: tuple[int, ...] | None = None):
@@ -171,23 +197,33 @@ def matvec(plan: EvalPlan, M: PtMatrix, ct: Ciphertext) -> Ciphertext:
     # baby steps: every rot_j(x) the diagonals need, one hoisted dispatch
     # (j=0 short-circuits host-side inside rotate_hoisted)
     js = list(M.baby_set)
-    babies = dict(zip(js, plan.rotate_hoisted(ct, js)))
-    # giant groups: inner_i = sum_j pdiag_{i,j} * rot_j(x) — elementwise
-    # dyadic ops over the residue stacks, no key switches
-    ctx = plan.ctx
-    inners: dict[int, Ciphertext] = {}
-    for (i, j), pdiag in sorted(M.diags.items()):
-        term = ctx.mul_plain(babies[j], pdiag, M.scale)
-        inners[i] = ctx.add(inners[i], term) if i in inners else term
+    babies = plan.rotate_hoisted(ct, js)
+    # giant groups: inner_i = sum_j pdiag_{i,j} * rot_j(x) — ONE fused
+    # MAC program over the stacked baby halves and diagonals (no key
+    # switches, no per-diagonal host round trips)
+    b0 = _stack_banks([b.c0.data for b in babies])
+    b1 = _stack_banks([b.c1.data for b in babies])
+    diags, jmap, imap, gis = M.mac_pack()
+    qs, mus = rns._basis_consts(M.basis)
+    i0, i1 = plain_mac_banks(b0, b1, diags, qs, mus, jmap=jmap, imap=imap)
+    scale = ct.scale * M.scale
+    inners = {gi: Ciphertext(RnsPoly(r0, M.basis, True),
+                             RnsPoly(r1, M.basis, True), scale)
+              for gi, r0, r1 in zip(gis, _unstack_banks(i0),
+                                    _unstack_banks(i1))}
     # giant steps: rotate each partial sum by i*n1 — one mixed-amount
-    # batched dispatch for all of them (i=0 needs none)
-    gis = sorted(i for i in inners if i)
-    rotated = plan.rotate_many([inners[i] for i in gis],
-                               [i * M.n1 for i in gis])
-    acc = inners.get(0)
-    for ct_i in rotated:
-        acc = ctx.add(acc, ct_i) if acc is not None else ct_i
-    return acc
+    # batched dispatch for all of them (i=0 needs none) — then ONE
+    # fused modular-sum program for the final add chain (exact mod
+    # addition: bit-identical to the eager left fold)
+    rotated = plan.rotate_many([inners[i] for i in gis if i],
+                               [i * M.n1 for i in gis if i])
+    parts = ([inners[0]] if 0 in inners else []) + rotated
+    if len(parts) == 1:
+        return parts[0]
+    a0, a1 = accumulate_banks([p.c0.data for p in parts],
+                              [p.c1.data for p in parts], qs)
+    return Ciphertext(RnsPoly(a0, M.basis, True),
+                      RnsPoly(a1, M.basis, True), scale)
 
 
 def rotate_sum(plan: EvalPlan, ct: Ciphertext, m: int) -> Ciphertext:

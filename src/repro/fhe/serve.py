@@ -1,16 +1,35 @@
-"""Request-batching CKKS serving engine over the batched EvalPlan programs.
+"""Continuous-batching CKKS serving engine over the batched EvalPlan
+programs.
 
-The paper's headline numbers are *throughput* figures — 531M NTT/s and
-1.63M key-switch ops/s from one deeply pipelined dataflow kept saturated
-with back-to-back work.  The scheme layer already lowers each op to one
-device program (``fhe.evalplan``); this module keeps that pipeline FED:
-a serving loop that dispatches requests one at a time pays full dispatch
-overhead per ciphertext and leaves the kernels' batch axis idle, so the
-engine adapts the fixed-slot batching model of ``serve.engine`` (the LM
-ServeEngine) to FHE requests:
+The paper's headline numbers are *sustained throughput* figures — 531M
+NTT/s and 1.63M key-switch ops/s from one deeply pipelined dataflow kept
+saturated with back-to-back work, fed by dual coefficient memories in
+ping-pong mode (§SRM): while the pipeline consumes one buffer, the host
+side fills the other, so the datapath never waits for staging.  This
+module is that discipline at the request level.  The scheme layer
+already lowers each op to one device program (``fhe.evalplan``) and the
+batched ``*_many`` twins run B ciphertexts per dispatch; the engine
+keeps those programs FED:
 
   queue -> group by (op kind, basis) -> pad to the batch tile
         -> ONE ``*_many`` dispatch per group -> unpack per request.
+
+Two drains over the same grouping policy:
+
+  ``run``        the synchronous oracle: collect the whole queue, group,
+                 dispatch one group at a time and BLOCK on each before
+                 the next — deterministic, host work never overlaps
+                 device compute.  Every async answer is pinned bit-exact
+                 against it (tests/test_serve_async.py).
+  ``run_async``  the ping-pong drain: admit requests from a live
+                 arrival stream, dispatch group i+1 while the device is
+                 still computing group i, and only then block on group
+                 i.  At most two batches are in flight (the paper's
+                 double buffer); ``jax.block_until_ready`` on batch i is
+                 deferred until batch i+1 has been screened, grouped,
+                 padded and dispatched, so host-side admission/stacking
+                 overlaps device compute.  Per-request latency
+                 (arrival -> drain) is recorded for the SLO bench.
 
 Grouping rules (also the "when batching does not apply" rules):
 
@@ -24,8 +43,11 @@ Grouping rules (also the "when batching does not apply" rules):
     from hoisting inside each request, not across requests.
   * Ciphertexts at different bases (levels) NEVER batch — the residue
     stacks have different (k, n) shapes.  Each basis forms its own
-    group; a mixed-basis group is impossible by construction here, and
-    ``EvalPlan.*_many`` raises ``ValueError`` if handed one directly.
+    group.  Admission is LEVEL-AWARE but never stalls: the async drain
+    takes the queue head's (kind, basis) and collects up to
+    ``max_batch`` matching requests from anywhere in the queue; a
+    request at a new basis simply opens its own group on a later cycle
+    instead of blocking the drain (no head-of-line blocking on shape).
   * Per-request scales ride along host-side (exact per-ciphertext
     tracking), so scale differences never split a group.
 
@@ -34,21 +56,32 @@ repeating its last request (results for pad rows are dropped).  That
 bounds the set of jit signatures to multiples of the tile — a fresh
 batch size would otherwise recompile the program — and keeps the kernel
 grid's batch axis tile-aligned.  Identity rotations (r = 0 mod slots)
-short-circuit host-side exactly like ``EvalPlan.rotate``.
+short-circuit host-side BEFORE any validation: they need no key
+material, no level and no dispatch, exactly like ``EvalPlan.rotate``.
 
-The engine is deliberately synchronous and deterministic: ``run`` cycles
-the queue until every request is answered, dispatching one group per
-step, largest group first — the batching policy, not an async runtime.
+Failure isolation: per-request validation happens at admission, and a
+request that fails — mismatched multiply operands, exhausted level, a
+poisoned matvec pack raising ANY exception inside its composite — is
+recorded in ``stats['failed']`` and never sinks the batch or another
+client's answer.
+
+``synthetic_trace`` builds the seeded heavy-traffic workload (mixed op
+kinds, mixed levels, optionally Poisson arrivals) the SLO bench and the
+demo drive through both drains — offered-load behavior is measured on a
+standardized arrival process, not a hand-picked request list.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from collections import defaultdict
+from collections import defaultdict, deque
+
+import numpy as np
+import jax
 
 from repro.fhe import linalg
 from repro.fhe.evalplan import (Ciphertext, EvalPlan, check_level,
-                                check_same_basis)
+                                check_same_basis, release_retired)
 
 # op kinds a request may carry; rotate/conjugate share the Galois batch
 OPS = ("multiply", "rescale", "rotate", "conjugate", "matvec")
@@ -74,8 +107,8 @@ class FheRequest:
             raise ValueError(f"request {self.rid}: multiply needs 'other'")
         if self.op == "matvec" and not isinstance(self.matrix, linalg.PtMatrix):
             # a non-PtMatrix would AttributeError inside linalg.matvec
-            # (outside the per-request ValueError routing) and sink the
-            # whole batch — reject it at construction instead
+            # before the engine's per-request routing could catch it
+            # with a useful message — reject it at construction instead
             raise ValueError(
                 f"request {self.rid}: matvec needs 'matrix' (a "
                 f"linalg.PtMatrix), got "
@@ -89,63 +122,141 @@ def _pad(items: list, tile: int) -> list:
     return items + [items[-1]] * want
 
 
+def synthetic_trace(ctx, n_requests: int, *, seed: int = 0,
+                    rate: float | None = None, drop_frac: float = 0.25,
+                    kinds=("multiply", "rotate", "rescale", "conjugate"),
+                    matrix: "linalg.PtMatrix | None" = None):
+    """Deterministic synthetic heavy-traffic trace: ``n_requests`` mixed
+    requests (op kinds drawn from ``kinds``; ``matvec`` joins the draw
+    when a ``matrix`` pack is supplied) over MIXED levels — a seeded
+    ``drop_frac`` of the clients arrive one level down, so the trace
+    exercises the level-aware admission path, not just one basis.
+    Rotation amounts deliberately include negative, identity and
+    > slots values.
+
+    Returns ``(requests, arrivals)``: arrivals is ``None`` for a
+    backlog trace (everything offered at t=0 — pure throughput), or the
+    cumulative seconds of a Poisson process at ``rate`` requests/s.
+    Same seed -> same trace, bit for bit; the SLO bench replays one
+    trace through both drains and the tests shuffle it to pin
+    arrival-order invariance."""
+    rng = np.random.default_rng(seed)
+    plan = ctx.plan()
+    all_kinds = tuple(kinds) + (("matvec",) if matrix is not None else ())
+    reqs = []
+    for rid in range(n_requests):
+        z = rng.uniform(-1, 1, ctx.slots) + 1j * rng.uniform(-1, 1, ctx.slots)
+        ct = ctx.encrypt(ctx.encode(z))
+        dropped = bool(rng.uniform() < drop_frac)
+        if dropped:
+            ct = plan.rescale(ct)
+        kind = all_kinds[int(rng.integers(len(all_kinds)))]
+        if kind == "rescale" and ct.level < 1:
+            kind = "rotate"                      # nothing left to drop
+        if kind == "matvec" and ct.primes != matrix.basis:
+            kind = "rotate"                      # pack valid at ONE basis
+        if kind == "multiply":
+            z2 = rng.uniform(-1, 1, ctx.slots) + 1j * rng.uniform(-1, 1, ctx.slots)
+            other = ctx.encrypt(ctx.encode(z2))
+            if dropped:
+                other = plan.rescale(other)
+            reqs.append(FheRequest(rid, "multiply", ct, other=other))
+        elif kind == "rotate":
+            r = int(rng.integers(-2, ctx.slots + 3))   # negative/identity/wrap
+            reqs.append(FheRequest(rid, "rotate", ct, r=r))
+        elif kind == "rescale":
+            reqs.append(FheRequest(rid, "rescale", ct))
+        elif kind == "matvec":
+            reqs.append(FheRequest(rid, "matvec", ct, matrix=matrix))
+        else:
+            reqs.append(FheRequest(rid, "conjugate", ct))
+    arrivals = None
+    if rate is not None:
+        arrivals = np.cumsum(rng.exponential(1.0 / rate, n_requests)).tolist()
+    return reqs, arrivals
+
+
 class CkksServeEngine:
     """Group-and-dispatch batching engine over one prepared ``EvalPlan``.
 
-    stats (reset per ``run``): ``dispatches`` (request groups
-    dispatched), ``batched_ops`` (real requests inside them), ``padded``
-    (tile-padding ghost rows), ``groups`` ((kind, basis-level) -> count),
-    plus the device-work deltas read off the plan's cumulative counters:
-    ``program_dispatches`` (jitted programs actually launched — a matvec
-    group launches several per request), ``key_switches``,
-    ``decomposes``, and ``hoisted_reuse`` (key switches that shared an
-    already-paid digit decomposition; > 0 means hoisting amortized
-    real work this run).
-    """
+    ``run`` is the synchronous oracle drain; ``run_async`` is the
+    double-buffered continuous-batching drain (same grouping policy,
+    same bit-exact answers, host work overlapped with device compute).
+    ``max_batch`` caps how many requests one async group may take — it
+    bounds the padded-batch jit signatures to multiples of
+    ``batch_tile`` up to ``max_batch``, which is exactly the
+    ``batch_sizes`` a caller should warm via ``EvalPlan.prepare``.
 
-    def __init__(self, plan: EvalPlan, batch_tile: int = 8):
+    stats (reset per run): ``mode``, ``dispatches`` (request groups
+    dispatched), ``batched_ops`` (real requests inside them), ``padded``
+    (tile-padding ghost rows), ``identity`` (host-side short-circuits),
+    ``failed`` (rid -> message), ``groups`` ((kind, basis-level) ->
+    count), ``fresh_traces`` (jit signatures compiled during the run —
+    0 after a complete warm-up), plus the device-work deltas read off
+    the plan's cumulative counters: ``program_dispatches`` (jitted
+    programs actually launched — a matvec group launches several per
+    request), ``key_switches``, ``decomposes``, and ``hoisted_reuse``
+    (key switches that shared an already-paid digit decomposition).
+    The async drain adds ``max_queue`` (peak pending depth) and
+    ``latency_us`` (p50/p99/mean/max request latency, arrival ->
+    result drained)."""
+
+    def __init__(self, plan: EvalPlan, batch_tile: int = 8,
+                 max_batch: int | None = None):
         if batch_tile < 1:
             raise ValueError(f"batch_tile must be >= 1, got {batch_tile}")
         self.plan = plan
         self.batch_tile = batch_tile
+        self.max_batch = max_batch if max_batch is not None else 4 * batch_tile
+        if self.max_batch < batch_tile:
+            raise ValueError(f"max_batch {self.max_batch} < batch_tile "
+                             f"{batch_tile}")
         self.stats: dict = {}
 
     # ------------------------------------------------------------ policy
 
-    def _group(self, requests):
-        """(kind, basis) -> request list.  Rotate/conjugate share the
-        'galois' kind; identity rotations are answered without dispatch.
+    @staticmethod
+    def _kind(req: FheRequest) -> str:
+        return "galois" if req.op in ("rotate", "conjugate") else req.op
 
-        Per-request validation happens HERE, before any dispatch: an
-        invalid request (operand basis mismatch, exhausted level) must
-        fail alone — recorded in ``failed`` — never abort the batch and
-        discard every other client's answer."""
+    def _screen(self, req: FheRequest, done: dict, failed: dict) -> bool:
+        """Admission-time screening for one request; returns True if it
+        should queue for dispatch.  Identity rotations (r = 0 mod
+        slots) short-circuit FIRST — before any level check — because
+        they need no key material and no dispatch: a fully exhausted
+        ciphertext can still be identity-rotated (the level check used
+        to run first and failed such requests; pinned in
+        tests/test_serve_fhe.py).  Validation failures land in
+        ``failed`` so a bad request never aborts the batch."""
+        if req.op == "rotate" and req.r % (self.plan.n // 2) == 0:
+            ct = req.ct
+            done[req.rid] = Ciphertext(ct.c0, ct.c1, ct.scale)
+            return False
+        try:
+            if req.op == "multiply":
+                check_same_basis("multiply", req.ct, req.other)
+                check_level("multiply", req.ct)
+            elif req.op == "rescale":
+                check_level("rescale", req.ct, need=1)
+            else:
+                # (matvec's own checks — pack basis validity, empty
+                # pack — fire inside the per-request dispatch loop,
+                # which routes them into ``failed`` the same way;
+                # ONE source of truth lives in linalg.matvec)
+                check_level(req.op, req.ct)
+        except ValueError as e:
+            failed[req.rid] = str(e)
+            return False
+        return True
+
+    def _group(self, requests):
+        """(kind, basis) -> request list, for the synchronous drain."""
         groups: dict = defaultdict(list)
         done: dict[int, Ciphertext] = {}
         failed: dict[int, str] = {}
-        slots = self.plan.n // 2
         for req in requests:
-            try:
-                if req.op == "multiply":
-                    check_same_basis("multiply", req.ct, req.other)
-                    check_level("multiply", req.ct)
-                elif req.op == "rescale":
-                    check_level("rescale", req.ct, need=1)
-                else:
-                    # (matvec's own checks — pack basis validity, empty
-                    # pack — fire inside the per-request dispatch loop,
-                    # which routes them into ``failed`` the same way;
-                    # ONE source of truth lives in linalg.matvec)
-                    check_level(req.op, req.ct)
-            except ValueError as e:
-                failed[req.rid] = str(e)
-                continue
-            if req.op == "rotate" and req.r % slots == 0:
-                ct = req.ct
-                done[req.rid] = Ciphertext(ct.c0, ct.c1, ct.scale)
-                continue
-            kind = "galois" if req.op in ("rotate", "conjugate") else req.op
-            groups[(kind, req.ct.primes)].append(req)
+            if self._screen(req, done, failed):
+                groups[(self._kind(req), req.ct.primes)].append(req)
         return groups, done, failed
 
     def _g_of(self, req: FheRequest) -> int:
@@ -165,23 +276,81 @@ class CkksServeEngine:
                                        [self._g_of(r) for r in reqs])
         return outs
 
-    # --------------------------------------------------------------- run
+    def _matvec_group(self, reqs: list, failed: dict):
+        """Per-request matvec composites (no tile padding).  ANY
+        exception a request raises — the documented ValueErrors
+        (basis-validity, empty pack) but also a poisoned pack's
+        TypeError/AttributeError deep inside ``linalg.matvec`` — fails
+        that request ALONE: before this routing, one wrong-shaped
+        ``PtMatrix`` sank the whole batch and discarded every other
+        client's answer."""
+        kept, outs = [], []
+        for req in reqs:
+            try:
+                outs.append(linalg.matvec(self.plan, req.matrix, req.ct))
+                kept.append(req)
+            except ValueError as e:
+                failed[req.rid] = str(e)
+            except Exception as e:       # noqa: BLE001 — isolate the batch
+                failed[req.rid] = f"{type(e).__name__}: {e}"
+        return kept, outs
 
-    def run(self, requests: list[FheRequest]) -> dict[int, Ciphertext]:
-        """Answer every valid request; one ``*_many`` dispatch per
-        (kind, basis) group, largest group first.  Invalid requests
-        (mismatched multiply operands, exhausted levels) are dropped
-        from the result and reported in ``stats['failed']`` (rid ->
-        message) — a bad request never sinks the batch."""
+    # ------------------------------------------------------- accounting
+
+    def _init_stats(self, mode: str, failed: dict) -> dict:
+        stats = self.stats = {
+            "mode": mode, "dispatches": 0, "batched_ops": 0, "padded": 0,
+            "identity": 0, "failed": failed, "groups": {}}
+        return stats
+
+    def _account_group(self, stats, kind: str, reqs: list):
+        stats["dispatches"] += 1
+        stats["batched_ops"] += len(reqs)
+        if kind != "matvec":                 # matvec never tile-pads
+            stats["padded"] += -len(reqs) % self.batch_tile
+        key = f"{kind}@L{len(reqs[0].ct.primes) - 1}"
+        stats["groups"][key] = stats["groups"].get(key, 0) + len(reqs)
+
+    def _finish_stats(self, stats, before, traces_before, t0):
+        # device-work accounting from the plan's cumulative counters:
+        # program_dispatches is the true jitted-program count (a matvec
+        # group launches several per request), and hoisted_reuse is the
+        # key switches that shared an already-paid digit decomposition
+        # — the amortization the hoisting subsystem exists to buy
+        for c in ("dispatches", "key_switches", "decomposes"):
+            delta = self.plan.stats[c] - before.get(c, 0)
+            stats["program_dispatches" if c == "dispatches" else c] = delta
+        stats["hoisted_reuse"] = stats["key_switches"] - stats["decomposes"]
+        stats["fresh_traces"] = self.plan.trace_count() - traces_before
+        stats["wall_s"] = time.perf_counter() - t0
+        # everything is drained now, so parked donated stacks (see
+        # evalplan.retire_donated) can be dropped without blocking
+        release_retired()
+
+    @staticmethod
+    def _check_rids(requests):
         rids = [r.rid for r in requests]
         if len(set(rids)) != len(rids):
             raise ValueError("duplicate request ids")
+
+    # ----------------------------------------------- synchronous drain
+
+    def run(self, requests: list[FheRequest]) -> dict[int, Ciphertext]:
+        """The synchronous oracle drain: answer every valid request with
+        one ``*_many`` dispatch per (kind, basis) group, largest group
+        first, BLOCKING on each group before touching the next (a
+        request/response server answers group i before staging group
+        i+1 — the baseline ``run_async`` is benched against, and the
+        bit-exactness oracle it is pinned against).  Invalid requests
+        are dropped from the result and reported in ``stats['failed']``
+        (rid -> message) — a bad request never sinks the batch."""
+        self._check_rids(requests)
         t0 = time.perf_counter()
-        groups, out, failed = self._group(requests)
-        stats = self.stats = {"dispatches": 0, "batched_ops": 0, "padded": 0,
-                              "identity": len(out), "failed": failed,
-                              "groups": {}}
         before = dict(self.plan.stats)
+        traces_before = self.plan.trace_count()
+        groups, out, failed = self._group(requests)
+        stats = self._init_stats("sync", failed)
+        stats["identity"] = len(out)
         for (kind, basis), reqs in sorted(
                 groups.items(), key=lambda kv: -len(kv[1])):
             if kind == "galois":
@@ -192,41 +361,141 @@ class CkksServeEngine:
                 # cache almost every dispatch
                 reqs = sorted(reqs, key=self._g_of)
             if kind == "matvec":
-                # a matvec is a composite program sequence (hoisted
-                # babies + plaintext MACs + one giant-step rotate_many),
-                # not a *_many row — no tile padding, one composite per
-                # request, and any ValueError it raises (basis-validity,
-                # empty pack, future checks) fails that request ALONE
-                # instead of sinking the group
-                outs, kept = [], []
-                for req in reqs:
-                    try:
-                        outs.append(linalg.matvec(self.plan, req.matrix,
-                                                  req.ct))
-                        kept.append(req)
-                    except ValueError as e:
-                        failed[req.rid] = str(e)
-                reqs = kept
+                reqs, outs = self._matvec_group(reqs, failed)
                 if not reqs:
                     continue       # every request failed: nothing dispatched
             else:
                 outs = self._dispatch(kind, reqs)
+            # the drain discipline: fully synchronize this group before
+            # staging the next one (run_async defers exactly this)
+            jax.block_until_ready([x for ct in outs
+                                   for x in (ct.c0.data, ct.c1.data)])
             for req, ct in zip(reqs, outs):      # zip drops pad rows
                 out[req.rid] = ct
-            stats["dispatches"] += 1
-            stats["batched_ops"] += len(reqs)
-            if kind != "matvec":                 # matvec never tile-pads
-                stats["padded"] += -len(reqs) % self.batch_tile
-            key = f"{kind}@L{len(basis) - 1}"
-            stats["groups"][key] = stats["groups"].get(key, 0) + len(reqs)
-        # device-work accounting from the plan's cumulative counters:
-        # program_dispatches is the true jitted-program count (a matvec
-        # group launches several per request), and hoisted_reuse is the
-        # key switches that shared an already-paid digit decomposition
-        # — the amortization the hoisting subsystem exists to buy
-        for c in ("dispatches", "key_switches", "decomposes"):
-            delta = self.plan.stats[c] - before.get(c, 0)
-            stats["program_dispatches" if c == "dispatches" else c] = delta
-        stats["hoisted_reuse"] = stats["key_switches"] - stats["decomposes"]
-        stats["wall_s"] = time.perf_counter() - t0
+            self._account_group(stats, kind, reqs)
+        self._finish_stats(stats, before, traces_before, t0)
+        return out
+
+    # ------------------------------------------- continuous-batch drain
+
+    def _take_group(self, pending: deque):
+        """Level-aware admission without stalling: the queue head fixes
+        (kind, basis) and up to ``max_batch`` matching requests join it
+        from anywhere in the queue (FIFO within the group); everything
+        else stays queued for a later cycle.  The head always
+        dispatches, so a request at a new basis opens a group instead
+        of blocking the drain."""
+        head = pending[0]
+        key = (self._kind(head), head.ct.primes)
+        take: list = []
+        rest: deque = deque()
+        for req in pending:
+            if (len(take) < self.max_batch
+                    and (self._kind(req), req.ct.primes) == key):
+                take.append(req)
+            else:
+                rest.append(req)
+        pending.clear()
+        pending.extend(rest)
+        return key[0], take
+
+    def _drain(self, batch, out, done_t, t0, stats):
+        """Block on an in-flight batch and deliver its answers."""
+        kind, reqs, outs = batch
+        jax.block_until_ready([x for ct in outs
+                               for x in (ct.c0.data, ct.c1.data)])
+        done = time.perf_counter() - t0
+        for req, ct in zip(reqs, outs):          # zip drops pad rows
+            out[req.rid] = ct
+            done_t[req.rid] = done
+        self._account_group(stats, kind, reqs)
+
+    def run_async(self, requests: list[FheRequest],
+                  arrivals: list[float] | None = None) -> dict[int, Ciphertext]:
+        """The ping-pong drain: double-buffered continuous batching over
+        a live queue.  Each cycle admits every arrived request (screened
+        at admission — identity short-circuits and validation failures
+        resolve immediately), takes the queue head's (kind, basis)
+        group, DISPATCHES it, and only then blocks on the *previous*
+        batch: at most two batches are in flight, and the host-side
+        screening/grouping/stacking of batch i+1 overlaps the device
+        compute of batch i (the §SRM dual-coefficient-memory ping-pong,
+        lifted to request batches).
+
+        ``arrivals`` (seconds, per request) simulates an offered-load
+        stream: requests are admitted only once their arrival time has
+        passed, and per-request latency (arrival -> batch drained) is
+        reported in ``stats['latency_us']``.  ``None`` means a backlog
+        (everything available at t=0 — the pure-throughput mode).
+
+        Answers are bit-exact vs ``run`` regardless of arrival order:
+        grouping only changes which dispatch a request rides, and every
+        ``*_many`` program is elementwise per batch row (pinned in
+        tests/test_serve_async.py)."""
+        self._check_rids(requests)
+        n = len(requests)
+        if arrivals is not None and len(arrivals) != n:
+            raise ValueError(f"run_async: {n} requests vs "
+                             f"{len(arrivals)} arrivals")
+        t0 = time.perf_counter()
+        before = dict(self.plan.stats)
+        traces_before = self.plan.trace_count()
+        out: dict[int, Ciphertext] = {}
+        failed: dict[int, str] = {}
+        stats = self._init_stats("async", failed)
+        stats["max_queue"] = 0
+        if arrivals is None:
+            sched = [(0.0, req) for req in requests]
+        else:
+            sched = sorted(zip(arrivals, requests), key=lambda ar: ar[0])
+        arr_t = {req.rid: a for a, req in sched}
+        done_t: dict[int, float] = {}
+        pending: deque = deque()
+        inflight = None                 # (kind, reqs, outs) — ONE batch
+        i = 0                           # next unadmitted arrival
+
+        while i < n or pending or inflight:
+            now = time.perf_counter() - t0
+            while i < n and sched[i][0] <= now:
+                a, req = sched[i]
+                i += 1
+                if self._screen(req, out, failed):
+                    pending.append(req)
+                else:                   # resolved at admission
+                    done_t[req.rid] = now
+                    if req.rid in out:
+                        stats["identity"] += 1
+            stats["max_queue"] = max(stats["max_queue"], len(pending))
+            if pending:
+                kind, reqs = self._take_group(pending)
+                if kind == "galois":
+                    reqs = sorted(reqs, key=self._g_of)  # canonical g order
+                if kind == "matvec":
+                    reqs, outs = self._matvec_group(reqs, failed)
+                else:
+                    outs = self._dispatch(kind, reqs)
+                # ping-pong: the new batch is in flight BEFORE we block
+                # on the old one — its compute hides this cycle's host
+                # screening/stacking, the next cycle's hides ours
+                if reqs:
+                    if inflight is not None:
+                        self._drain(inflight, out, done_t, t0, stats)
+                    inflight = (kind, reqs, outs)
+            elif inflight is not None:
+                self._drain(inflight, out, done_t, t0, stats)
+                inflight = None
+            else:
+                # idle: nothing pending, nothing in flight — sleep up to
+                # the next arrival (short naps keep admission responsive)
+                wait = sched[i][0] - (time.perf_counter() - t0)
+                if wait > 0:
+                    time.sleep(min(wait, 5e-4))
+        lats = [(done_t[rid] - arr_t[rid]) * 1e6 for rid in done_t]
+        if lats:
+            q = np.percentile(lats, (50, 99))
+            stats["latency_us"] = {
+                "p50": float(q[0]), "p99": float(q[1]),
+                "mean": float(np.mean(lats)), "max": float(np.max(lats)),
+                "count": len(lats)}
+        self._finish_stats(stats, before, traces_before, t0)
         return out

@@ -235,6 +235,30 @@ def test_matvec_validation_errors():
         linalg.matvec(plan, linalg.PtMatrix.encode(ctx, np.zeros((4, 4))), ct)
 
 
+def test_prepare_matvecs_pins_matvec_traces():
+    """Regression: ``prepare(warm_jit=True, batch_sizes=...)`` used to
+    leave the matvec composite's giant-step ``rotate_many`` and
+    hoisted-set signatures cold, so the first matvec through a
+    "prepared" serving plan paid XLA compilation inside its latency
+    window.  ``prepare(matvecs=(M,))`` warms the WHOLE composite; the
+    pin is on plan counters: a post-prepare matvec compiles ZERO fresh
+    traces.  (n=512 is used by no other tier-1 test, so the prepare
+    call really does all the compiling here.)"""
+    ctx = CkksContext(n=512, levels=1, scale_bits=26, seed=99)
+    rng = np.random.default_rng(100)
+    W = rng.uniform(-0.5, 0.5, (8, 8))
+    M = linalg.PtMatrix.encode(ctx, W)
+    x = rng.uniform(-1, 1, 8)
+    ct = ctx.encrypt(linalg.encode_vector(ctx, x, 8))
+    plan = ctx.plan()
+    plan.prepare(relin=False, matvecs=(M,))
+    before = plan.trace_count()
+    out = linalg.matvec(plan, M, ct)
+    assert plan.trace_count() == before      # zero fresh XLA traces
+    got = ctx.decrypt_decode(out).real[:8]
+    np.testing.assert_allclose(got, x @ W, atol=1e-2)
+
+
 # --------------------------------------------------------- rotate_sum
 
 

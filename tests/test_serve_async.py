@@ -1,0 +1,199 @@
+"""Async continuous-batching drain (``CkksServeEngine.run_async``).
+
+Pins the serving invariants the ping-pong rewrite must preserve:
+  * bit-exactness vs the synchronous ``run()`` oracle on a mixed
+    multiply/rescale/rotate/conjugate/matvec queue spanning two levels,
+  * arrival-order invariance of every answer,
+  * rotation amount wrap-around (negative and > slots) through
+    ``rotation_group_element``,
+  * level-aware admission without head-of-line stalls (a new basis
+    opens a group, it never blocks the drain),
+  * Poisson-arrival latency accounting (p50/p99) and the ``max_batch``
+    admission cap,
+  * ``fresh_traces == 0`` through a fully prepared plan — the async
+    drain never pays XLA compilation inside a request's latency window.
+"""
+import numpy as np
+import pytest
+
+from conftest import ct_equal as _eq
+
+from repro.fhe import linalg
+from repro.fhe.ckks import CkksContext
+from repro.fhe.serve import CkksServeEngine, FheRequest, synthetic_trace
+
+CTX = CkksContext(n=256, levels=2, scale_bits=26, seed=75)
+RNG = np.random.default_rng(76)
+
+
+def _ct():
+    z = RNG.uniform(-1, 1, CTX.slots) + 1j * RNG.uniform(-1, 1, CTX.slots)
+    return CTX.encrypt(CTX.encode(z))
+
+
+def _matrix(seed=77):
+    rng = np.random.default_rng(seed)
+    return linalg.PtMatrix.encode(CTX, rng.uniform(-0.5, 0.5, (8, 4)))
+
+
+def _mixed_queue(plan, M):
+    """Every kind, two levels, rotation amounts that exercise the
+    wrap-around paths (negative, > slots, identity)."""
+    vct = CTX.encrypt(linalg.encode_vector(
+        CTX, np.asarray(RNG.uniform(-1, 1, 8)), 4))
+    dropped = plan.rescale(_ct())
+    return [
+        FheRequest(0, "multiply", _ct(), other=_ct()),
+        FheRequest(1, "rotate", _ct(), r=-1),              # negative
+        FheRequest(2, "rotate", _ct(), r=CTX.slots + 3),   # > slots
+        FheRequest(3, "rotate", _ct(), r=2 * CTX.slots),   # identity wrap
+        FheRequest(4, "conjugate", _ct()),
+        FheRequest(5, "rescale", _ct()),
+        FheRequest(6, "matvec", vct, matrix=M),
+        FheRequest(7, "rescale", dropped),                 # second basis
+        FheRequest(8, "rotate", dropped, r=1),             # second basis
+    ]
+
+
+def test_async_bit_exact_vs_sync_oracle():
+    """The acceptance pin: the ping-pong drain answers a mixed queue
+    bit-exactly like the synchronous oracle — grouping only changes
+    which dispatch a request rides, never its answer."""
+    plan = CTX.plan()
+    engine = CkksServeEngine(plan, batch_tile=4)
+    M = _matrix()
+    reqs = _mixed_queue(plan, M)
+    want = engine.run(list(reqs))
+    sync_stats = dict(engine.stats)
+    got = engine.run_async(reqs)
+    assert engine.stats["mode"] == "async"
+    assert set(got) == set(want) == set(range(9))
+    assert all(_eq(got[r], want[r]) for r in want)
+    # same requests -> same device work, whichever drain ran them
+    for c in ("batched_ops", "identity", "key_switches", "decomposes",
+              "hoisted_reuse"):
+        assert engine.stats[c] == sync_stats[c], c
+    # spot-check vs the single-op path too (not just sync == async)
+    assert _eq(got[1], plan.rotate(reqs[1].ct, -1))
+    assert _eq(got[2], plan.rotate(reqs[2].ct, CTX.slots + 3))
+    assert _eq(got[6], linalg.matvec(plan, M, reqs[6].ct))
+
+
+def test_async_arrival_order_invariance():
+    """Any permutation of the queue produces the same answers, bit for
+    bit: admission order only reshuffles the groups."""
+    plan = CTX.plan()
+    engine = CkksServeEngine(plan, batch_tile=4)
+    reqs = _mixed_queue(plan, _matrix())
+    want = engine.run_async(list(reqs))
+    for seed in (1, 2):
+        perm = np.random.default_rng(seed).permutation(len(reqs))
+        got = engine.run_async([reqs[i] for i in perm])
+        assert set(got) == set(want)
+        assert all(_eq(got[r], want[r]) for r in want)
+
+
+def test_rotation_group_element_wrapping():
+    """The automorphism exponent g = 5^r mod 2n has order ``slots``, so
+    amounts wrap: g(r) == g(r mod slots) for negative and > slots r —
+    the engine leans on this for both the identity short-circuit and
+    the Galois-group batch keys."""
+    plan = CTX.plan()
+    slots = CTX.slots
+    g = plan.rotation_group_element
+    assert g(0) == g(slots) == g(-slots) == g(7 * slots) == 1
+    for r in (1, 3, slots - 1):
+        assert g(-r) == g(slots - r)
+        assert g(r + slots) == g(r)
+        assert g(r) != 1
+    # and the answers agree slot-for-slot with the wrapped amount
+    ct = _ct()
+    assert _eq(plan.rotate(ct, -1), plan.rotate(ct, slots - 1))
+    assert _eq(plan.rotate(ct, slots + 2), plan.rotate(ct, 2))
+
+
+def test_async_mixed_bases_never_stall():
+    """A queue alternating between two bases drains completely: the
+    head's (kind, basis) fixes each cycle's group and the other basis
+    simply opens its own group a cycle later — no head-of-line
+    blocking, no shape mixing inside a dispatch."""
+    plan = CTX.plan()
+    engine = CkksServeEngine(plan, batch_tile=2)
+    full = [_ct() for _ in range(3)]
+    dropped = [plan.rescale(_ct()) for _ in range(3)]
+    reqs = []
+    for i, (f, d) in enumerate(zip(full, dropped)):
+        reqs.append(FheRequest(2 * i, "rotate", f, r=1))
+        reqs.append(FheRequest(2 * i + 1, "rotate", d, r=2))
+    out = engine.run_async(reqs)
+    assert set(out) == set(range(6))
+    assert sorted(engine.stats["groups"]) == ["galois@L1", "galois@L2"]
+    assert engine.stats["groups"]["galois@L1"] == 3
+    assert engine.stats["groups"]["galois@L2"] == 3
+    for i, (f, d) in enumerate(zip(full, dropped)):
+        assert _eq(out[2 * i], plan.rotate(f, 1))
+        assert _eq(out[2 * i + 1], plan.rotate(d, 2))
+
+
+def test_async_max_batch_caps_admission():
+    """One kind, more requests than ``max_batch``: the drain splits them
+    across dispatches instead of building one oversized batch (bounding
+    the padded-B jit signatures a caller must warm)."""
+    plan = CTX.plan()
+    engine = CkksServeEngine(plan, batch_tile=2, max_batch=4)
+    reqs = [FheRequest(i, "rotate", _ct(), r=1 + i % 3) for i in range(10)]
+    out = engine.run_async(reqs)
+    assert set(out) == set(range(10))
+    assert engine.stats["dispatches"] >= 3          # ceil(10 / max_batch)
+    assert all(_eq(out[i], plan.rotate(reqs[i].ct, 1 + i % 3))
+               for i in range(10))
+    with pytest.raises(ValueError, match="max_batch"):
+        CkksServeEngine(plan, batch_tile=4, max_batch=2)
+
+
+def test_synthetic_trace_poisson_latency_stats():
+    """The seeded Poisson trace is deterministic, and the async drain
+    reports per-request latency percentiles over it (the SLO bench's
+    measurement path)."""
+    M = _matrix()
+    reqs, arr = synthetic_trace(CTX, 12, seed=4, rate=2000.0, matrix=M)
+    reqs2, arr2 = synthetic_trace(CTX, 12, seed=4, rate=2000.0, matrix=M)
+    assert arr == arr2 and len(arr) == 12           # same seed, same trace
+    assert [r.op for r in reqs] == [r.op for r in reqs2]
+    assert all(a <= b for a, b in zip(arr, arr[1:]))  # cumulative arrivals
+    plan = CTX.plan()
+    engine = CkksServeEngine(plan, batch_tile=4)
+    out = engine.run_async(reqs, arr)
+    stats = engine.stats
+    assert set(out) | set(stats["failed"]) == set(range(12))
+    lat = stats["latency_us"]
+    assert lat["count"] == 12
+    assert 0 < lat["p50"] <= lat["p99"] <= lat["max"]
+    assert stats["max_queue"] >= 1
+    # answers still bit-exact vs the oracle, arrivals notwithstanding
+    want = engine.run(reqs)
+    assert set(out) == set(want)
+    assert all(_eq(out[r], want[r]) for r in want)
+    with pytest.raises(ValueError, match="arrivals"):
+        engine.run_async(reqs, arr[:-1])
+
+
+def test_async_fresh_traces_zero_after_prepare():
+    """A fully prepared plan (both serving bases, the engine's padded
+    batch signatures, the matvec pack) compiles NOTHING during the
+    drain: stats['fresh_traces'] == 0, so no request's latency window
+    contains XLA work."""
+    plan = CTX.plan()
+    M = _matrix()
+    tile = 4
+    dropped_basis = CTX.qs[:-1]
+    plan.prepare(rotations=(1, 2, 3), conjugate=True,
+                 batch_sizes=(tile, 2 * tile), matvecs=(M,))
+    plan.prepare(basis=dropped_basis, rotations=(1, 2, 3), conjugate=True,
+                 relin=True, batch_sizes=(tile, 2 * tile))
+    engine = CkksServeEngine(plan, batch_tile=tile, max_batch=2 * tile)
+    reqs = _mixed_queue(plan, M)
+    engine.run_async(reqs)
+    assert engine.stats["fresh_traces"] == 0
+    engine.run(reqs)
+    assert engine.stats["fresh_traces"] == 0

@@ -152,6 +152,71 @@ def test_engine_mixed_matvec_and_rotate_queue():
     assert list(engine.stats["groups"]) == ["galois@L2"]
 
 
+def test_poisoned_matvec_fails_alone():
+    """Regression: a poisoned matvec pack raising a NON-ValueError deep
+    inside ``linalg.matvec`` (here an AttributeError from a corrupted
+    diagonal) used to escape the per-request loop and sink the whole
+    batch, discarding every other client's answer.  It must be routed
+    into stats['failed'] like the documented ValueErrors, tagged with
+    the exception class so the operator can tell a client error from a
+    server bug."""
+    import dataclasses
+
+    plan = CTX.plan()
+    engine = CkksServeEngine(plan, batch_tile=2)
+    rng = np.random.default_rng(74)
+    W = rng.uniform(-0.5, 0.5, (8, 4))
+    M = linalg.PtMatrix.encode(CTX, W)
+    poisoned = dataclasses.replace(M, diags={**M.diags, (0, 0): "poison"})
+    vcts = [CTX.encrypt(linalg.encode_vector(CTX, rng.uniform(-1, 1, 8), 4))
+            for _ in range(2)]
+    rot_ct = _ct()
+    out = engine.run([
+        FheRequest(0, "matvec", vcts[0], matrix=poisoned),
+        FheRequest(1, "matvec", vcts[1], matrix=M),
+        FheRequest(2, "rotate", rot_ct, r=1),
+    ])
+    assert set(out) == {1, 2}
+    assert set(engine.stats["failed"]) == {0}
+    assert engine.stats["failed"][0].startswith("AttributeError:")
+    # the healthy requests in the same run are untouched, bit for bit
+    assert _eq(out[1], linalg.matvec(plan, M, vcts[1]))
+    assert _eq(out[2], plan.rotate(rot_ct, 1))
+    # the surviving matvec still counts as a (1-request) group
+    assert engine.stats["groups"]["matvec@L2"] == 1
+
+
+def test_identity_rotation_skips_level_check():
+    """Regression: identity rotations (r % slots == 0) need no key
+    material and no dispatch, so they must short-circuit BEFORE the
+    level check — previously ``check_level`` ran first and failed them.
+    Pinned at the extreme: a fully exhausted (empty-basis) ciphertext
+    is identity-rotated successfully while a real rotation on the same
+    ciphertext still fails cleanly into stats['failed']."""
+    import jax.numpy as jnp
+
+    from repro.fhe.evalplan import Ciphertext
+    from repro.fhe.rns import RnsPoly
+
+    plan = CTX.plan()
+    engine = CkksServeEngine(plan, batch_tile=2)
+    z = RnsPoly(jnp.zeros((0, CTX.n), jnp.uint32), (), True)
+    dead = Ciphertext(z, z, 1.0)
+    out = engine.run([
+        FheRequest(0, "rotate", dead, r=0),
+        FheRequest(1, "rotate", dead, r=CTX.slots),       # wraps to identity
+        FheRequest(2, "rotate", dead, r=-3 * CTX.slots),  # negative wrap too
+        FheRequest(3, "rotate", dead, r=3),               # real rotate: fails
+    ])
+    assert set(out) == {0, 1, 2}
+    assert engine.stats["identity"] == 3
+    assert engine.stats["dispatches"] == 0               # nothing launched
+    assert "prime chain exhausted" in engine.stats["failed"][3]
+    for rid in (0, 1, 2):
+        assert _eq(out[rid], dead)
+        assert out[rid] is not dead                      # fresh ct, no alias
+
+
 def test_request_validation():
     with pytest.raises(ValueError, match="unknown op"):
         FheRequest(0, "bootstrap", _ct())
