@@ -31,7 +31,13 @@ Checks (CI runs this right after ``benchmarks.run --smoke --json``):
      path, or a donated input stack dropped while still pending, whose
      PJRT destructor blocks until the consumer runs) fails the gate:
      those bugs made the async drain strictly slower at any core
-     count.
+     count,
+  5. the lazy-reduction A/B rows: lazy NTT/keyswitch at 2^14 must not
+     lose to the eager path (within LAZY_TOL — deferred reduction
+     removes conditional subtracts, so losing means the lazy stage
+     loops regressed), lazy output must stay bit-identical to eager
+     (``exact=OK`` in the derived column), and the autotuned batch
+     tile must stay within TILE_TOL of the fixed tile=8 baseline.
 """
 from __future__ import annotations
 
@@ -44,13 +50,25 @@ REQUIRED = ("ckks_multiply_b1", "ckks_multiply_b8", "ckks_multiply_b32",
             "ckks_rotate_b32", "hoisted_rotate_r8", "rotate_loop_r8",
             "keyswitch_throughput", "linalg_matvec_bsgs",
             "serve_async_throughput", "serve_sync_throughput",
-            "serve_slo_p99")
+            "serve_slo_p99",
+            "ntt_lazy_2_14", "ntt_eager_2_14", "ntt_lazy_tile8_2_14",
+            "keyswitch_lazy_2_14", "keyswitch_eager_2_14")
 
 # single-core async-overhead bound: paired-pass medians put the drains
 # within ~2% of each other on a 1-core host; 15% headroom absorbs CI
 # scheduler noise without ever passing a re-serialized pipeline (the
 # destructor/eager-staging bugs cost 2-3x, not 15%)
 SERVE_1CORE_TOL = 1.15
+
+# lazy-vs-eager headroom: the variants are timed in the same paired
+# pass (paper_tables._paired_time), so residual noise is small; 5%
+# catches "lazy quietly became slower" without flaking on jitter
+LAZY_TOL = 1.05
+
+# autotuned-vs-fixed-tile headroom: on CPU the ref hot path ignores the
+# tile and the two rows measure the same dispatch; on TPU a tuned tile
+# losing >10% to the static default means the autotuner picked a dud
+TILE_TOL = 1.10
 
 
 def per_op_us(row: dict) -> float:
@@ -107,6 +125,30 @@ def check(path: str) -> int:
               "the sync drain on a single-core host; the dispatch "
               "pipeline has re-serialized (eager staging or a pending "
               "donated stack dropped in the wrapper path)")
+        return 1
+    nl = rows["ntt_lazy_2_14"]["us_per_call"]
+    ne = rows["ntt_eager_2_14"]["us_per_call"]
+    n8 = rows["ntt_lazy_tile8_2_14"]["us_per_call"]
+    kl = rows["keyswitch_lazy_2_14"]["us_per_call"]
+    ke = rows["keyswitch_eager_2_14"]["us_per_call"]
+    print(f"check_smoke: lazy ntt={nl:.0f}us eager={ne:.0f}us "
+          f"(x{ne / nl:.2f}); keyswitch lazy={kl:.0f}us eager={ke:.0f}us "
+          f"(x{ke / kl:.2f}); tuned-vs-tile8 x{n8 / nl:.2f}")
+    for name, lazy_t, eager_t in (("NTT", nl, ne), ("keyswitch", kl, ke)):
+        if not lazy_t < LAZY_TOL * eager_t:
+            print(f"check_smoke: FAIL — lazy {name} is >{LAZY_TOL:.2f}x the "
+                  "eager path; deferred reduction is supposed to REMOVE "
+                  "conditional subtracts from the stage loops")
+            return 1
+    if "exact=OK" not in str(rows["ntt_lazy_2_14"]["derived"]) or \
+            "exact=OK" not in str(rows["keyswitch_lazy_2_14"]["derived"]):
+        print("check_smoke: FAIL — lazy output is not bit-identical to "
+              "eager; the epilogue reduction contract is broken")
+        return 1
+    if not nl < TILE_TOL * n8:
+        print(f"check_smoke: FAIL — the autotuned tile is >{TILE_TOL:.2f}x "
+              "the fixed tile=8 baseline; the autotuner picked a dud "
+              "(or the cache/pin fed it a stale entry)")
         return 1
     print("check_smoke: OK")
     return 0

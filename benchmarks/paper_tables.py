@@ -64,6 +64,28 @@ def _time(fn, *args, iters=5, warmup=2):
     return (time.perf_counter() - t0) / iters * 1e6   # us
 
 
+def _paired_time(fns, *args, passes=3, iters=3):
+    """Time every fn back to back within each pass and report ALL of
+    them from the single pass with the lowest joint wall (per-call us).
+    Paired passes keep an A-vs-B comparison honest under scheduler
+    noise: independent per-variant minima could each come from a
+    different quiet window and flip the ordering."""
+    for fn in fns:
+        jax.block_until_ready(fn(*args))            # compile + warm
+    best = None
+    for _ in range(passes):
+        ts = []
+        for fn in fns:
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                out = fn(*args)
+            jax.block_until_ready(out)
+            ts.append((time.perf_counter() - t0) / iters * 1e6)
+        if best is None or sum(ts) < sum(best):
+            best = ts
+    return best
+
+
 # ------------------------------------------------------------- Table II
 
 def table2_mulmod():
@@ -171,6 +193,74 @@ def ntt_fourstep_2_14():
         ("ntt_fourstep_2_14_fwd_us", t_f, f"k={k} B={B} ({per:.1f} us/NTT)"),
         ("ntt_fourstep_2_14_inv_us", t_i,
          f"roundtrip={'OK' if ok else 'FAIL'}"),
+    ]
+
+
+def lazy_kernels():
+    """Tentpole A/B at the paper's 2^14 ring: lazy-reduction butterflies
+    (values held in [0, 2q) between stages, one conditional subtract
+    saved per butterfly plus the unreduced inter-pass handoff) vs the
+    eager conditional-subtract path, plus the autotuned-vs-fixed batch
+    tile comparison.
+
+    All variants run the default dispatch path (ref on CPU, Pallas grid
+    on TPU) and are timed with ``_paired_time`` so a scheduler hiccup
+    cannot flip the ordering.  Gated by check_smoke: lazy must not lose
+    to eager, and the autotuned tile must stay within tolerance of the
+    fixed tile=8 baseline.  On CPU the ref hot path never reads the
+    tile, so the tile rows measure the same dispatch and the tile gate
+    is effectively a TPU tripwire; the lazy-vs-eager rows differ on
+    every backend.  ``exact=OK`` pins lazy == eager bit-for-bit."""
+    from repro.core.params import gen_ntt_primes
+    from repro.fhe import batched as FB
+    from repro.kernels import autotune, ops
+
+    n, k, B = 1 << 14, 2, 4
+    primes = gen_ntt_primes(k, n, bits=30)
+    fp = FB.build_fourstep_pack(primes, n)
+    n1, n2 = ops.fourstep_dims(fp)
+    rng = np.random.default_rng(11)
+    x = jnp.asarray(np.stack([rng.integers(0, q, (B, n), dtype=np.uint32)
+                              for q in primes]))
+    # the four-step passes dispatch ntt_banks at ring n2 with B*n1 batch
+    # rows — tune THAT shape, not the outer 2^14 (honors SCE_NTT_TILE
+    # first, so pinned CI runs never measure)
+    tuned = autotune.ensure("ntt_banks", k, n2, B * n1)
+    f_lazy = jax.jit(lambda x: ops.ntt_fourstep_banks(x, fp, lazy=True,
+                                                      tile=tuned))
+    f_eager = jax.jit(lambda x: ops.ntt_fourstep_banks(x, fp, lazy=False,
+                                                       tile=tuned))
+    f_tile8 = jax.jit(lambda x: ops.ntt_fourstep_banks(x, fp, lazy=True,
+                                                       tile=8))
+    exact = np.array_equal(np.asarray(f_lazy(x)), np.asarray(f_eager(x)))
+    tl, te, t8 = _paired_time((f_lazy, f_eager, f_tile8), x)
+
+    kk, kB = 2, 2
+    kprimes = gen_ntt_primes(kk + 1, n, bits=30)
+    t = FB.build_scalar_pack(kprimes)
+    fsp = FB.build_fourstep_pack(kprimes, n)
+    d2 = np.stack([rng.integers(0, q, (kB, n), dtype=np.uint32)
+                   for q in kprimes[:kk]])
+    evk_b = np.stack([np.stack([rng.integers(0, q, n, dtype=np.uint32)
+                                for q in kprimes]) for _ in range(kk)])
+    evk_a = np.stack([np.stack([rng.integers(0, q, n, dtype=np.uint32)
+                                for q in kprimes]) for _ in range(kk)])
+    args = (jnp.asarray(d2), jnp.asarray(evk_b), jnp.asarray(evk_a))
+    g_lazy = jax.jit(lambda d, eb, ea: FB.batched_keyswitch(
+        d, eb, ea, t, fsp=fsp, lazy=True))
+    g_eager = jax.jit(lambda d, eb, ea: FB.batched_keyswitch(
+        d, eb, ea, t, fsp=fsp, lazy=False))
+    ks_exact = all(np.array_equal(np.asarray(a), np.asarray(b))
+                   for a, b in zip(g_lazy(*args), g_eager(*args)))
+    kl, ke = _paired_time((g_lazy, g_eager), *args)
+    return [
+        ("ntt_lazy_2_14", tl,
+         f"k={k} B={B} tile={tuned} exact={'OK' if exact else 'FAIL'}"),
+        ("ntt_eager_2_14", te, f"k={k} B={B} tile={tuned}"),
+        ("ntt_lazy_tile8_2_14", t8, "fixed tile=8 baseline"),
+        ("keyswitch_lazy_2_14", kl,
+         f"n={n} k={kk} B={kB} exact={'OK' if ks_exact else 'FAIL'}"),
+        ("keyswitch_eager_2_14", ke, f"n={n} k={kk} B={kB}"),
     ]
 
 
@@ -592,8 +682,9 @@ def validation_1e5():
 
 
 ALL = [table2_mulmod, table3_ntt128, fig21_large_ntt, ntt_fourstep_2_14,
-       fig22_keyswitch, keyswitch_banks, keyswitch_banks_2_14, ckks_ops,
-       ckks_batched_ops, hoisted_rotations, serve_slo, validation_1e5]
+       fig22_keyswitch, keyswitch_banks, keyswitch_banks_2_14, lazy_kernels,
+       ckks_ops, ckks_batched_ops, hoisted_rotations, serve_slo,
+       validation_1e5]
 
 # fast subset for CI / --smoke: NTT-128 rows, the bank-parallel keyswitch
 # throughput datapoint, the large-N (2^14) four-step + keyswitch rows,
@@ -604,7 +695,10 @@ ALL = [table2_mulmod, table3_ntt128, fig21_large_ntt, ntt_fourstep_2_14,
 # rotate dispatches per key switch), and the serving SLO rows (gated:
 # the async ping-pong drain must beat the synchronous oracle drain on a
 # multi-core host, and stay within a small overhead bound of it on a
-# single-core host where there is no device/host overlap to exploit)
+# single-core host where there is no device/host overlap to exploit),
+# and the lazy-reduction A/B rows (gated: lazy NTT/keyswitch must not
+# lose to eager, and the autotuned tile must stay within tolerance of
+# the fixed tile=8 baseline; exact=OK pins lazy == eager bit-for-bit)
 SMOKE = [table3_ntt128, keyswitch_banks, ntt_fourstep_2_14,
-         keyswitch_banks_2_14, ckks_ops, ckks_batched_ops,
+         keyswitch_banks_2_14, lazy_kernels, ckks_ops, ckks_batched_ops,
          hoisted_rotations, serve_slo]

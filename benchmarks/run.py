@@ -11,16 +11,20 @@ keyswitch throughput datapoints, the EvalPlan ckks_multiply /
 ckks_rotate scheme-op rows, the ciphertext-batched
 ckks_multiply_b{1,8,32} / ckks_rotate_b32 rows, the hoisted-rotation
 rows incl. the projected-vs-measured keyswitch_throughput datapoint,
-and the serving SLO rows: async/sync drain walls over a seeded mixed
-trace plus p50/p99 request latency under Poisson arrivals) and exits
+the serving SLO rows: async/sync drain walls over a seeded mixed
+trace plus p50/p99 request latency under Poisson arrivals, and the
+lazy-vs-eager reduction A/B rows at the paper's 2^14 ring) and exits
 nonzero on any ERROR row.  ``--json PATH`` additionally writes the
-rows as a JSON record — CI uploads the smoke run's file as a
-``BENCH_*.json`` artifact so a bench trajectory accumulates across
+rows as a JSON record plus a ``*_autotune.json`` sibling snapshotting
+the batch-tile tuning state — CI uploads the smoke run's files as
+``BENCH_*.json`` artifacts so a bench trajectory accumulates across
 PRs, then gates it through ``benchmarks.check_smoke`` (batch-32
 multiply must beat batch-1 per op; the hoisted 8-rotation dispatch
 must beat 8 independent rotates per key switch; the ping-pong serve
 drain must beat the synchronous drain on multi-core hosts and stay
-within a bounded overhead of it on single-core hosts).
+within a bounded overhead of it on single-core hosts; lazy must not
+lose to eager and the autotuned tile must not lose to the fixed
+tile=8 baseline).
 """
 from __future__ import annotations
 
@@ -70,6 +74,13 @@ def main() -> None:
         with open(args.json, "w") as f:
             json.dump(rec, f, indent=2)
         print(f"# wrote {len(rows)} rows to {args.json}", file=sys.stderr)
+        # snapshot the batch-tile tuning state (env pin + every cached
+        # (backend, family, k, n, b) -> tile entry) next to the rows so
+        # the CI artifact records WHICH tiles produced them
+        from repro.kernels import autotune
+        tile_path = os.path.splitext(args.json)[0] + "_autotune.json"
+        autotune.dump(tile_path)
+        print(f"# wrote autotune table to {tile_path}", file=sys.stderr)
     if args.smoke and failed:
         sys.exit(1)
 

@@ -54,6 +54,47 @@ def submod(a, b, q):
     return jnp.where(a >= b, a - b, a + (q - b))
 
 
+# ------------------------------------------------------- lazy reduction
+#
+# The lazy-reduction bound contract (the paper's pipelined-BU headroom
+# argument, §IV): between butterfly stages values live in [0, 2q)
+# instead of [0, q), and the final conditional subtract is paid ONCE in
+# the transform epilogue instead of after every add/sub/mul.  The u32
+# datapath holds because every RNS prime is < 2^30 (see
+# ``barrett_precompute``): 2q < 2^31, so the worst intermediate —
+# ``a + (2q - b)`` with a, b in [0, 2q) — stays below 4q < 2^32.
+#
+# Contracts (all inputs/outputs u32):
+#   lazy_addmod(a, b, q)        a, b in [0, 2q)  ->  [0, 2q), == a+b mod q
+#   lazy_submod(a, b, q)        a, b in [0, 2q)  ->  [0, 2q), == a-b mod q
+#   mulmod_shoup_lazy(x, ...)   x ANY u32        ->  [0, 2q), == x*w mod q
+#   mulmod_barrett_lazy(a, b)   a, b in [0, q)   ->  [0, 2q), == a*b mod q
+
+def lazy_addmod(a, b, q):
+    """(a + b) keeping the [0, 2q) lazy invariant: one conditional
+    subtract of 2q instead of an exact reduction.  Inputs in [0, 2q),
+    q < 2^30; the raw sum < 4q < 2^32 never wraps."""
+    q2 = q + q
+    s = a + b
+    return jnp.where(s >= q2, s - q2, s)
+
+
+def lazy_submod(a, b, q):
+    """(a - b) keeping the [0, 2q) lazy invariant.  Inputs in [0, 2q);
+    the borrow branch adds 2q (a + (2q - b) < 4q < 2^32)."""
+    q2 = q + q
+    return jnp.where(a >= b, a - b, a + (q2 - b))
+
+
+def mulmod_shoup_lazy(x, w, wp, q):
+    """Shoup multiply WITHOUT the final conditional subtract: result in
+    [0, 2q), congruent to x*w mod q.  x may be any u32 (in particular a
+    lazy [0, 2q) value); w < q with wp = floor(w*2^32/q).  This is the
+    butterfly-stage form — ``mulmod_shoup`` = this + one subtract."""
+    hi = mulhi_u32(x, wp)
+    return mullo_u32(x, w) - mullo_u32(hi, q)   # wraps; lands in [0, 2q)
+
+
 # ---------------------------------------------------------------- Shoup
 
 def shoup_precompute(w: int, q: int) -> int:
@@ -76,9 +117,18 @@ def mulmod_shoup(x, w, wp, q):
 # -------------------------------------------------------------- Barrett
 
 def barrett_precompute(q: int) -> int:
-    """mu = floor(2^60 / q) for 2^28 < q < 2^30 (our RNS prime range)."""
-    assert (1 << 28) < q < (1 << 30), "u32-limb Barrett needs 29/30-bit q"
-    return (1 << 60) // int(q)
+    """mu = floor(2^60 / q) for 2^28 < q < 2^30 (our RNS prime range).
+
+    The range check is a ``ValueError`` (the scheme-API convention), not
+    an ``assert``: under ``python -O`` an assert is stripped and an
+    out-of-range q would silently yield a wrong mu — every Barrett
+    product downstream would be garbage with no error anywhere."""
+    q = int(q)
+    if not (1 << 28) < q < (1 << 30):
+        raise ValueError(
+            f"barrett_precompute: q={q} outside the u32-limb Barrett range "
+            f"(2^28, 2^30) — mu would be silently wrong")
+    return (1 << 60) // q
 
 
 def mulmod_barrett(a, b, q, mu):
@@ -95,6 +145,19 @@ def mulmod_barrett(a, b, q, mu):
     r = lo - mullo_u32(qhat, q)                 # wraps; < 3q
     r = jnp.where(r >= (q << 1), r - (q << 1), r)
     return jnp.where(r >= q, r - q, r)
+
+
+def mulmod_barrett_lazy(a, b, q, mu):
+    """Barrett product reduced only to the lazy [0, 2q) band: one
+    conditional subtract (of 2q) instead of two.  Inputs in [0, q); the
+    MAC digit loops accumulate these with ``lazy_addmod`` and pay the
+    exact reduction once in the epilogue."""
+    hi = mulhi_u32(a, b)
+    lo = mullo_u32(a, b)
+    approx = (hi << 3) | (lo >> 29)
+    qhat = (mulhi_u32(approx, mu) << 1) | (mullo_u32(approx, mu) >> 31)
+    r = lo - mullo_u32(qhat, q)                 # wraps; < 3q
+    return jnp.where(r >= (q << 1), r - (q << 1), r)
 
 
 # ----------------------------------------------------------- Montgomery
@@ -146,3 +209,47 @@ def mulhi_np(a, b):
     a = np.asarray(a, dtype=np.uint64)
     b = np.asarray(b, dtype=np.uint64)
     return ((a * b) >> np.uint64(32)).astype(np.uint32)
+
+
+# Lazy oracles: exact uint64 models of the DETERMINISTIC lazy-band
+# representatives (not just the residue class), so tests can pin the
+# device helpers bit-for-bit including their [0, 2q) representatives.
+
+def lazy_addmod_np(a, b, q):
+    a = np.asarray(a, dtype=np.uint64)
+    b = np.asarray(b, dtype=np.uint64)
+    q2 = np.uint64(2 * int(q))
+    s = a + b
+    # subtract via where-selected operand: np.where evaluates both arms,
+    # and the dead (s - q2) arm would warn on uint64 scalar underflow
+    return (s - np.where(s >= q2, q2, np.uint64(0))).astype(np.uint32)
+
+
+def lazy_submod_np(a, b, q):
+    a = np.asarray(a, dtype=np.uint64)
+    b = np.asarray(b, dtype=np.uint64)
+    q2 = np.uint64(2 * int(q))
+    return (a + np.where(a >= b, np.uint64(0), q2) - b).astype(np.uint32)
+
+
+def mulmod_shoup_lazy_np(x, w, q):
+    """r = x*w - floor(x*wp / 2^32)*q mod 2^32, wp = floor(w*2^32/q)."""
+    x = np.asarray(x, dtype=np.uint64)
+    wp = (int(w) << 32) // int(q)
+    hi = (x * np.uint64(wp)) >> np.uint64(32)
+    r = (x * np.uint64(w) - hi * np.uint64(q)) & np.uint64(0xFFFFFFFF)
+    return r.astype(np.uint32)
+
+
+def mulmod_barrett_lazy_np(a, b, q):
+    """The [0, 2q) Barrett representative: (a*b) mod q, plus q when the
+    device datapath's single 2q-subtract leaves the high copy."""
+    a64 = np.asarray(a, dtype=np.uint64)
+    b64 = np.asarray(b, dtype=np.uint64)
+    mu = (1 << 60) // int(q)
+    prod = a64 * b64
+    approx = prod >> np.uint64(29)
+    qhat = (approx * np.uint64(mu)) >> np.uint64(31)
+    r = (prod - qhat * np.uint64(q)) & np.uint64(0xFFFFFFFF)
+    q2 = np.uint64(2 * int(q))
+    return (r - np.where(r >= q2, q2, np.uint64(0))).astype(np.uint32)

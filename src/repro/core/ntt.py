@@ -24,7 +24,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.modmath import addmod, submod, mulmod_shoup
+from repro.core.modmath import (
+    addmod,
+    lazy_addmod,
+    lazy_submod,
+    mulmod_shoup,
+    mulmod_shoup_lazy,
+    submod,
+)
 from repro.core.params import NTTParams, bitrev_perm
 
 
@@ -38,6 +45,19 @@ def _fwd_stage(x, w, wp, q):
     return jnp.stack([u, v], axis=-1).reshape(x.shape)
 
 
+def _fwd_stage_lazy(x, w, wp, q):
+    # [0, 2q) invariant: the Shoup product skips its final subtract and
+    # add/sub reduce only past 2q — 2 conditional selects per butterfly
+    # instead of 3, amortizing the exact reduction into the epilogue.
+    n = x.shape[-1]
+    lo = x[..., : n // 2]
+    hi = x[..., n // 2:]
+    t = mulmod_shoup_lazy(hi, w, wp, q)
+    u = lazy_addmod(lo, t, q)
+    v = lazy_submod(lo, t, q)
+    return jnp.stack([u, v], axis=-1).reshape(x.shape)
+
+
 def _inv_stage(x, w, wp, q):
     n = x.shape[-1]
     pairs = x.reshape(x.shape[:-1] + (n // 2, 2))
@@ -48,61 +68,91 @@ def _inv_stage(x, w, wp, q):
     return jnp.concatenate([u, v], axis=-1)
 
 
-def cg_ntt(x, tw, twp, q: int, unroll: int = 1):
+def _inv_stage_lazy(x, w, wp, q):
+    n = x.shape[-1]
+    pairs = x.reshape(x.shape[:-1] + (n // 2, 2))
+    e = pairs[..., 0]
+    o = pairs[..., 1]
+    u = lazy_addmod(e, o, q)
+    v = mulmod_shoup_lazy(lazy_submod(e, o, q), w, wp, q)
+    return jnp.concatenate([u, v], axis=-1)
+
+
+def cg_ntt(x, tw, twp, q: int, unroll: int = 1, lazy: bool = False,
+           reduce_out: bool = True):
     """Batched forward CG-NTT.  x: (..., n) u32 in [0,q).  Output in
     bit-reversed order (the paper's native output order).
 
     unroll > 1 inlines that many stages per scan step so XLA fuses the
     elementwise butterfly chains across stages — fewer HBM passes
-    (EXPERIMENTS.md §Perf iteration 1: full unroll ~2.6x fewer bytes)."""
+    (EXPERIMENTS.md §Perf iteration 1: full unroll ~2.6x fewer bytes).
+
+    lazy=True keeps values in [0, 2q) between stages (see modmath's lazy
+    contract); reduce_out=False additionally skips the epilogue reduce so
+    a downstream lazy-aware consumer (four-step twiddle pass) can absorb
+    it.  Eager mode is always fully reduced regardless of reduce_out."""
     qc = jnp.uint32(q)
+    fn = _fwd_stage_lazy if lazy else _fwd_stage
 
     def stage(carry, wrow):
-        return _fwd_stage(carry, wrow[0], wrow[1], qc), None
+        return fn(carry, wrow[0], wrow[1], qc), None
 
     out, _ = jax.lax.scan(stage, x, (tw, twp), unroll=unroll)
+    if lazy and reduce_out:
+        out = jnp.where(out >= qc, out - qc, out)
     return out
 
 
 def cg_intt(x, itw, itwp, ninv: int, ninv_p: int, q: int, apply_ninv: bool = True,
-            unroll: int = 1):
+            unroll: int = 1, lazy: bool = False, reduce_out: bool = True):
     """Batched inverse CG-NTT.  Consumes bit-reversed order, yields
-    natural order.  Stages run in descending t (reversed twiddle rows)."""
+    natural order.  Stages run in descending t (reversed twiddle rows).
+
+    In lazy mode the n^-1 epilogue multiply doubles as the exact
+    reduction (mulmod_shoup accepts any u32 representative), so the lazy
+    path gets its [0, q) output for free when apply_ninv=True."""
     qc = jnp.uint32(q)
+    fn = _inv_stage_lazy if lazy else _inv_stage
 
     def stage(carry, wrow):
-        return _inv_stage(carry, wrow[0], wrow[1], qc), None
+        return fn(carry, wrow[0], wrow[1], qc), None
 
     out, _ = jax.lax.scan(stage, x, (itw, itwp), reverse=True, unroll=unroll)
     if apply_ninv:
-        out = mulmod_shoup(out, jnp.uint32(ninv), jnp.uint32(ninv_p), qc)
+        mul = mulmod_shoup_lazy if (lazy and not reduce_out) else mulmod_shoup
+        out = mul(out, jnp.uint32(ninv), jnp.uint32(ninv_p), qc)
+    elif lazy and reduce_out:
+        out = jnp.where(out >= qc, out - qc, out)
     return out
 
 
 # ------------------------------------------------------------ negacyclic
 
-def ntt_negacyclic(a, p: NTTParams):
+def ntt_negacyclic(a, p: NTTParams, lazy: bool = False):
     """NTT over Z_q[x]/(x^n+1): pre-weight by psi^i then cyclic CG-NTT."""
     q = jnp.uint32(p.q)
-    a = mulmod_shoup(a, jnp.asarray(p.psi_pows), jnp.asarray(p.psi_pows_p), q)
-    return cg_ntt(a, jnp.asarray(p.tw), jnp.asarray(p.twp), p.q)
+    mul = mulmod_shoup_lazy if lazy else mulmod_shoup
+    a = mul(a, jnp.asarray(p.psi_pows), jnp.asarray(p.psi_pows_p), q)
+    return cg_ntt(a, jnp.asarray(p.tw), jnp.asarray(p.twp), p.q, lazy=lazy)
 
 
-def intt_negacyclic(A, p: NTTParams):
+def intt_negacyclic(A, p: NTTParams, lazy: bool = False):
     """Inverse negacyclic NTT with the n^-1 factor fused into the
     psi^-i post-weight table (one multiply saved — TW' style)."""
     q = jnp.uint32(p.q)
     a = cg_intt(A, jnp.asarray(p.itw), jnp.asarray(p.itwp), p.ninv, p.ninv_p, p.q,
-                apply_ninv=False)
+                apply_ninv=False, lazy=lazy, reduce_out=False)
+    # the post-weight multiply is the exact-reduction epilogue either way
     return mulmod_shoup(a, jnp.asarray(p.ipsi_ninv), jnp.asarray(p.ipsi_ninv_p), q)
 
 
-def ntt_cyclic(a, p: NTTParams):
-    return cg_ntt(a, jnp.asarray(p.tw), jnp.asarray(p.twp), p.q)
+def ntt_cyclic(a, p: NTTParams, lazy: bool = False):
+    return cg_ntt(a, jnp.asarray(p.tw), jnp.asarray(p.twp), p.q, lazy=lazy)
 
 
-def intt_cyclic(A, p: NTTParams):
-    return cg_intt(A, jnp.asarray(p.itw), jnp.asarray(p.itwp), p.ninv, p.ninv_p, p.q)
+def intt_cyclic(A, p: NTTParams, lazy: bool = False):
+    return cg_intt(A, jnp.asarray(p.itw), jnp.asarray(p.itwp), p.ninv, p.ninv_p,
+                   p.q, lazy=lazy)
 
 
 # ------------------------------------------------------- numpy oracles

@@ -225,7 +225,8 @@ def _inv_banks(x, pack, fpk, kw):
 
 
 def mod_down_banks(acc, t: dict, *, fsp: dict | None = None,
-                   use_pallas: bool | None = None, tile: int = 8):
+                   use_pallas: bool | None = None, tile: int | None = None,
+                   lazy: bool = True):
     """RNS floor by the *last* prime of ``t``'s basis, fully batched —
     the paper's Fig 22 stage 4 (INTT + base-ext + NTT + MS) as one fused
     device program.
@@ -242,7 +243,7 @@ def mod_down_banks(acc, t: dict, *, fsp: dict | None = None,
     every transform through the large-N four-step pipeline, exactly as in
     ``batched_keyswitch``."""
     k = acc.shape[0] - 1
-    kw = dict(use_pallas=use_pallas, tile=tile)
+    kw = dict(use_pallas=use_pallas, tile=tile, lazy=lazy)
     fs_last = slice_fourstep_pack(fsp, slice(k, k + 1)) if fsp is not None else None
     lastc = _inv_banks(acc[k:], slice_pack(t, slice(k, k + 1)), fs_last, kw)
     ext = extend_centered(lastc[0], t["qs"][k], t["qs"][:k])
@@ -254,7 +255,8 @@ def mod_down_banks(acc, t: dict, *, fsp: dict | None = None,
 
 
 def decompose_banks(d2, t: dict, *, fsp: dict | None = None,
-                    use_pallas: bool | None = None, tile: int = 8):
+                    use_pallas: bool | None = None, tile: int | None = None,
+                    lazy: bool = True):
     """RNS digit decomposition + mod-up, fully batched — the front half
     of the paper's Fig 22 pipeline (INTT units -> base extension -> NTT
     banks), extracted so callers can pay it ONCE and reuse the digits.
@@ -276,7 +278,7 @@ def decompose_banks(d2, t: dict, *, fsp: dict | None = None,
     NTTs run as one (prime, batch) grid with the digit axis folded into
     the batch.  No Python loop over primes or digits."""
     k, B, n = d2.shape
-    kw = dict(use_pallas=use_pallas, tile=tile)
+    kw = dict(use_pallas=use_pallas, tile=tile, lazy=lazy)
     tb = slice_pack(t, slice(0, k))
 
     ci = _inv_banks(d2, tb, fsp, kw)                          # INTT units
@@ -289,7 +291,8 @@ def decompose_banks(d2, t: dict, *, fsp: dict | None = None,
 
 
 def batched_keyswitch(d2, evk_b, evk_a, t: dict, *, fsp: dict | None = None,
-                      use_pallas: bool | None = None, tile: int = 8):
+                      use_pallas: bool | None = None, tile: int | None = None,
+                      lazy: bool = True):
     """Paper Fig 22 pipeline, vectorized over a ciphertext batch AND the
     RNS prime rows — the bank-parallel production path.
 
@@ -315,11 +318,11 @@ def batched_keyswitch(d2, evk_b, evk_a, t: dict, *, fsp: dict | None = None,
     dyadic-MAC call per output polynomial.  There is no Python-level
     per-prime loop left in this hot path.
     """
-    kw = dict(use_pallas=use_pallas, tile=tile)
+    kw = dict(use_pallas=use_pallas, tile=tile, lazy=lazy)
     y = decompose_banks(d2, t, fsp=fsp, **kw)                 # (digit, prime, B, n)
     acc0 = ops.dyadic_inner_banks(y, evk_b, t, **kw)          # MM/MA arrays
     acc1 = ops.dyadic_inner_banks(y, evk_a, t, **kw)
 
     md = functools.partial(mod_down_banks, t=t, fsp=fsp,      # RNS floor + MS
-                           use_pallas=use_pallas, tile=tile)
+                           use_pallas=use_pallas, tile=tile, lazy=lazy)
     return md(acc0), md(acc1)

@@ -126,11 +126,14 @@ def check_level(op: str, ct: Ciphertext, need: int = 0):
 #
 # Each program takes its tables/keys as explicit pytree arguments, so one
 # trace is shared by every plan with the same (k, n) signature; the
-# ``use_pallas``/``tile`` dispatch knobs are static.
+# ``use_pallas``/``tile`` dispatch knobs are static.  ``tile=None``
+# resolves per entry point through ``kernels.autotune`` at trace time
+# (deterministic: pin > cache > default, never a measurement), so one
+# trace per (B, k, n) signature still holds.
 
 @functools.partial(jax.jit, static_argnames=("use_pallas", "tile"))
 def multiply_banks(a0, a1, b0, b1, evk_b, evk_a, t, fsp=None, *,
-                   use_pallas: bool | None = None, tile: int = 8):
+                   use_pallas: bool | None = None, tile: int | None = None):
     """Ciphertext tensor + relinearization as one device program.
 
     a0/a1/b0/b1: (k, n) u32 NTT-form halves over the k-prime basis;
@@ -150,7 +153,7 @@ def multiply_banks(a0, a1, b0, b1, evk_b, evk_a, t, fsp=None, *,
 
 @functools.partial(jax.jit, static_argnames=("use_pallas", "tile"))
 def rescale_banks(c0, c1, t, fsp=None, *, use_pallas: bool | None = None,
-                  tile: int = 8):
+                  tile: int | None = None):
     """Rescale by the last basis prime: both ciphertext halves ride one
     fused ``mod_down_banks`` pipeline as a batch of two.  t's basis is
     the ciphertext basis itself (its last prime is the one dropped)."""
@@ -161,7 +164,7 @@ def rescale_banks(c0, c1, t, fsp=None, *, use_pallas: bool | None = None,
 
 @functools.partial(jax.jit, static_argnames=("use_pallas", "tile"))
 def galois_ks_banks(c0, c1, idx, evk_b, evk_a, t, fsp=None, *,
-                    use_pallas: bool | None = None, tile: int = 8):
+                    use_pallas: bool | None = None, tile: int | None = None):
     """Slot rotation / conjugation: NTT-domain gather on both halves
     (one ``galois_banks`` kernel each — no iNTT/NTT round trip), then the
     fused key switch of the permuted c1 under the Galois key."""
@@ -200,7 +203,7 @@ _DONATE_BANKS = () if jax.default_backend() == "cpu" else (0, 1)
 @functools.partial(jax.jit, static_argnames=("use_pallas", "tile"),
                    donate_argnums=_DONATE_BANKS)
 def multiply_many_banks(a0, a1, b0, b1, evk_b, evk_a, t, fsp=None, *,
-                        use_pallas: bool | None = None, tile: int = 8):
+                        use_pallas: bool | None = None, tile: int | None = None):
     """B ciphertext tensor products + relinearization, one program.
 
     a0/a1/b0/b1: (B, k, n) u32 NTT-form halves; evk_b/evk_a: (k, k+1, n)
@@ -232,7 +235,7 @@ def multiply_many_banks(a0, a1, b0, b1, evk_b, evk_a, t, fsp=None, *,
 
 @functools.partial(jax.jit, static_argnames=("use_pallas", "tile"))
 def rescale_many_banks(c0, c1, t, fsp=None, *, use_pallas: bool | None = None,
-                       tile: int = 8):
+                       tile: int | None = None):
     """Rescale B ciphertexts by the last basis prime: all 2B halves ride
     one fused ``mod_down_banks`` pipeline.  c0/c1: (B, k+1, n).
 
@@ -249,7 +252,7 @@ def rescale_many_banks(c0, c1, t, fsp=None, *, use_pallas: bool | None = None,
 
 @functools.partial(jax.jit, static_argnames=("use_pallas", "tile"))
 def hoisted_rotations_banks(c0, c1, idx, evk_b, evk_a, t, fsp=None, *,
-                            use_pallas: bool | None = None, tile: int = 8):
+                            use_pallas: bool | None = None, tile: int | None = None):
     """R rotations of ONE ciphertext as one device program, with the
     expensive key-switch front half HOISTED: the RNS digit decomposition
     of c1 (iNTT units + mod-up + NTT banks — ``decompose_banks``) runs
@@ -291,7 +294,7 @@ def hoisted_rotations_banks(c0, c1, idx, evk_b, evk_a, t, fsp=None, *,
 @functools.partial(jax.jit, static_argnames=("use_pallas", "tile"),
                    donate_argnums=_DONATE_BANKS)
 def galois_ks_many_banks(c0, c1, idx, evk_b, evk_a, t, fsp=None, *,
-                         use_pallas: bool | None = None, tile: int = 8):
+                         use_pallas: bool | None = None, tile: int | None = None):
     """B slot rotations / conjugations, one program — the batch may MIX
     automorphisms: idx is a (B, n) stack of per-ciphertext gather rows
     and evk_b/evk_a are (k, k+1, B, n) per-ciphertext Galois key digits
@@ -448,7 +451,7 @@ class EvalPlan:
     the warm-up explicit for latency-sensitive callers (see
     examples/private_inference.py)."""
 
-    def __init__(self, ctx, *, use_pallas: bool | None = None, tile: int = 8):
+    def __init__(self, ctx, *, use_pallas: bool | None = None, tile: int | None = None):
         self.ctx = ctx
         self.n = ctx.n
         self.natural = self.n >= ops.FOURSTEP_MIN_N

@@ -82,6 +82,7 @@ import jax
 from repro.fhe import linalg
 from repro.fhe.evalplan import (Ciphertext, EvalPlan, check_level,
                                 check_same_basis, release_retired)
+from repro.kernels import autotune
 
 # op kinds a request may carry; rotate/conjugate share the Galois batch
 OPS = ("multiply", "rescale", "rotate", "conjugate", "matvec")
@@ -201,8 +202,13 @@ class CkksServeEngine:
     ``latency_us`` (p50/p99/mean/max request latency, arrival ->
     result drained)."""
 
-    def __init__(self, plan: EvalPlan, batch_tile: int = 8,
+    def __init__(self, plan: EvalPlan, batch_tile: int | None = None,
                  max_batch: int | None = None):
+        if batch_tile is None:
+            # autotuned default (pin > cache > 8): the admission batch is
+            # open-ended, so resolve against a representative group of 32
+            k = len(plan.ctx.qs) if hasattr(plan.ctx, "qs") else 2
+            batch_tile = autotune.resolve_tile("serve_batch", k, plan.n, 32)
         if batch_tile < 1:
             raise ValueError(f"batch_tile must be >= 1, got {batch_tile}")
         self.plan = plan

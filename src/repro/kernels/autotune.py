@@ -1,0 +1,304 @@
+"""Backend-aware batch-tile autotuning for the kernel entry points.
+
+Every kernel wrapper takes a ``tile`` — the batch-tile edge of its
+(prime, batch_tile) Pallas grid.  The historical default was a fixed 8
+regardless of backend, ring size, or batch; this module picks it
+per ``(backend, kernel family, k, n, b)`` instead.
+
+Resolution order (``resolve_tile``) — NOTHING here ever measures
+implicitly, so jit-signature counts stay bounded and the PR 6
+``fresh_traces`` discipline survives:
+
+  1. an explicit ``tile=`` argument (clamped to the batch),
+  2. the ``SCE_NTT_TILE`` env pin (CI sets this for determinism),
+  3. a cached result (in-process, seeded from the optional on-disk
+     JSON named by ``SCE_NTT_AUTOTUNE_CACHE``),
+  4. a fresh measurement — ONLY when ``SCE_NTT_AUTOTUNE=1``, the family
+     has a registered runner, and we are outside any jit trace,
+  5. the static default ``min(8, b)``.
+
+Every path clamps to ``max(1, min(tile, b))``: a 1-row input must never
+be zero-padded to an 8-row dispatch (the single-prime entry points
+historically skipped this clamp — 8x wasted butterfly work).
+
+Benchmarks that want a tuned tile regardless of the env flag call
+``ensure(family, k, n, b)``, which measures on a cache miss (still
+honoring the pin first).  ``table()`` / ``dump(path)`` snapshot the
+cache for the CI artifact next to ``BENCH_smoke.json``.
+"""
+from __future__ import annotations
+
+import functools
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+CANDIDATE_TILES = (1, 2, 4, 8, 16, 32)
+DEFAULT_TILE = 8
+
+ENV_PIN = "SCE_NTT_TILE"
+ENV_CACHE = "SCE_NTT_AUTOTUNE_CACHE"
+ENV_AUTOTUNE = "SCE_NTT_AUTOTUNE"
+
+# (backend, family, k, n, b) -> best tile
+_MEM: dict[tuple, int] = {}
+_DISK_LOADED = False
+
+
+def clamp(tile: int, b: int) -> int:
+    """The universal tile rule: at least 1, never wider than the batch."""
+    b = int(b)
+    if b <= 0:
+        return 1
+    return max(1, min(int(tile), b))
+
+
+def _backend() -> str:
+    return jax.default_backend()
+
+
+def _key(family: str, k: int, n: int, b: int) -> tuple:
+    return (_backend(), family, int(k), int(n), int(b))
+
+
+def _trace_clean() -> bool:
+    """True only when called outside any jit trace — measuring inside a
+    trace would time tracing, not compute, and could poison the cache."""
+    try:
+        return bool(jax.core.trace_state_clean())
+    except Exception:
+        return False
+
+
+def _env_pin() -> int | None:
+    v = os.environ.get(ENV_PIN)
+    if not v:
+        return None
+    try:
+        return int(v)
+    except ValueError:
+        return None
+
+
+def _load_disk() -> None:
+    global _DISK_LOADED
+    if _DISK_LOADED:
+        return
+    _DISK_LOADED = True
+    path = os.environ.get(ENV_CACHE)
+    if not path or not os.path.exists(path):
+        return
+    try:
+        with open(path) as f:
+            data = json.load(f)
+        for ks, tile in data.get("entries", {}).items():
+            parts = ks.split("|")
+            if len(parts) == 5:
+                be, fam, k, n, b = parts
+                _MEM[(be, fam, int(k), int(n), int(b))] = int(tile)
+    except (OSError, ValueError, KeyError):
+        pass    # a stale/corrupt cache must never break dispatch
+
+
+def _save_disk() -> None:
+    path = os.environ.get(ENV_CACHE)
+    if not path:
+        return
+    try:
+        with open(path, "w") as f:
+            json.dump(table(), f, indent=1, sort_keys=True)
+    except OSError:
+        pass
+
+
+def table() -> dict:
+    """JSON-ready snapshot of the tuning state (the CI artifact)."""
+    return {
+        "backend": _backend(),
+        "pin": _env_pin(),
+        "entries": {
+            "|".join(str(p) for p in key): tile
+            for key, tile in sorted(_MEM.items())
+        },
+    }
+
+
+def dump(path: str) -> None:
+    with open(path, "w") as f:
+        json.dump(table(), f, indent=1, sort_keys=True)
+
+
+def clear() -> None:
+    """Drop the in-process cache (tests)."""
+    global _DISK_LOADED
+    _MEM.clear()
+    _DISK_LOADED = True     # don't resurrect entries from disk
+
+
+def resolve_tile(family: str, k: int, n: int, b: int,
+                 tile: int | None = None) -> int:
+    """The one tile-resolution funnel every entry point routes through."""
+    b = int(b)
+    if tile is not None:
+        return clamp(tile, b)
+    pin = _env_pin()
+    if pin is not None:
+        return clamp(pin, b)
+    _load_disk()
+    key = _key(family, k, n, b)
+    hit = _MEM.get(key)
+    if hit is not None:
+        return clamp(hit, b)
+    if (os.environ.get(ENV_AUTOTUNE) == "1" and family in _RUNNERS
+            and _trace_clean()):
+        return clamp(measure(family, k, n, b), b)
+    return clamp(DEFAULT_TILE, b)
+
+
+def ensure(family: str, k: int, n: int, b: int) -> int:
+    """Measure-on-miss (benchmarks): pin > cache > measure > default."""
+    b = int(b)
+    pin = _env_pin()
+    if pin is not None:
+        return clamp(pin, b)
+    _load_disk()
+    key = _key(family, k, n, b)
+    hit = _MEM.get(key)
+    if hit is not None:
+        return clamp(hit, b)
+    if family in _RUNNERS and _trace_clean():
+        return clamp(measure(family, k, n, b), b)
+    return clamp(DEFAULT_TILE, b)
+
+
+def measure(family: str, k: int, n: int, b: int, *, reps: int = 3) -> int:
+    """Time every candidate tile <= b for the family's representative
+    workload and cache the argmin.  Falls back to the static default on
+    any failure (a family that cannot run at some tile must not take
+    dispatch down with it)."""
+    key = _key(family, k, n, b)
+    try:
+        run = _RUNNERS[family](int(k), int(n), int(b))
+    except Exception:
+        _MEM[key] = clamp(DEFAULT_TILE, b)
+        return _MEM[key]
+    cands = sorted({clamp(t, b) for t in CANDIDATE_TILES})
+    best_tile, best_t = clamp(DEFAULT_TILE, b), float("inf")
+    for t in cands:
+        try:
+            jax.block_until_ready(run(t))           # compile + warm
+            times = []
+            for _ in range(reps):
+                t0 = time.perf_counter()
+                jax.block_until_ready(run(t))
+                times.append(time.perf_counter() - t0)
+            dt = min(times)
+        except Exception:
+            continue
+        if dt < best_t:
+            best_tile, best_t = t, dt
+    _MEM[key] = best_tile
+    _save_disk()
+    return best_tile
+
+
+# -------------------------------------------------- family runners
+#
+# Each runner builds a representative synthetic workload ONCE (cached)
+# and returns ``fn(tile) -> array`` for the timer.  ops is imported
+# lazily: autotune must stay importable from ops without a cycle.
+
+@functools.lru_cache(maxsize=8)
+def _params(n: int):
+    from repro.core.params import make_ntt_params
+    return make_ntt_params(n)
+
+
+@functools.lru_cache(maxsize=8)
+def _pack(k: int, n: int):
+    from repro.core.params import gen_ntt_primes
+    from repro.fhe.batched import build_table_pack
+    return build_table_pack(gen_ntt_primes(k, n), n)
+
+
+def _rng_rows(shape, q):
+    rng = np.random.default_rng(0xC0FFEE)
+    return rng.integers(0, int(q), size=shape, dtype=np.uint32)
+
+
+def _run_ntt(k, n, b, inverse=False):
+    from repro.kernels import ops
+    p = _params(n)
+    x = _rng_rows((b, n), p.q)
+    fn = ops.intt if inverse else ops.ntt
+    return lambda tile: fn(x, p, use_pallas=True, tile=tile)
+
+
+def _run_ntt_banks(k, n, b, inverse=False):
+    from repro.kernels import ops
+    t = _pack(k, n)
+    x = np.stack([_rng_rows((b, n), q) for q in np.asarray(t["qs"])])
+    fn = ops.intt_banks if inverse else ops.ntt_banks
+    return lambda tile: fn(x, t, use_pallas=True, tile=tile)
+
+
+def _run_dyadic(k, n, b, mac=False):
+    from repro.kernels import ops
+    p = _params(n)
+    a = _rng_rows((b, n), p.q)
+    c = _rng_rows((b, n), p.q)
+    if mac:
+        acc = _rng_rows((b, n), p.q)
+        return lambda tile: ops.dyadic_mac(acc, a, c, p, use_pallas=True,
+                                           tile=tile)
+    return lambda tile: ops.dyadic_mul(a, c, p, use_pallas=True, tile=tile)
+
+
+def _run_twiddle_mul_banks(k, n, b):
+    from repro.kernels import ops
+    t = _pack(k, n)
+    x = np.stack([_rng_rows((b, n), q) for q in np.asarray(t["qs"])])
+    w = np.asarray(t["psi"])
+    wp = np.asarray(t["psip"])
+    qs = np.asarray(t["qs"])
+    return lambda tile: ops.twiddle_mul_banks(x, w, wp, qs, use_pallas=True,
+                                              tile=tile)
+
+
+def _run_galois_banks(k, n, b):
+    from repro.kernels import ops
+    t = _pack(k, n)
+    x = np.stack([_rng_rows((b, n), q) for q in np.asarray(t["qs"])])
+    idx = np.arange(n, dtype=np.int32)[::-1].copy()
+    return lambda tile: ops.galois_banks(x, idx, use_pallas=True, tile=tile)
+
+
+def _run_dyadic_inner_banks(k, n, b):
+    from repro.kernels import ops
+    t = _pack(k, n)
+    d = 2
+    qs = np.asarray(t["qs"])
+    ext = np.stack([np.stack([_rng_rows((b, n), q) for q in qs])
+                    for _ in range(d)])
+    evk = np.stack([np.stack([_rng_rows((n,), q) for q in qs])
+                    for _ in range(d)])
+    return lambda tile: ops.dyadic_inner_banks(ext, evk, t, use_pallas=True,
+                                               tile=tile)
+
+
+_RUNNERS = {
+    "ntt": _run_ntt,
+    "intt": functools.partial(_run_ntt, inverse=True),
+    "dyadic_mul": _run_dyadic,
+    "dyadic_mac": functools.partial(_run_dyadic, mac=True),
+    "ntt_banks": _run_ntt_banks,
+    "intt_banks": functools.partial(_run_ntt_banks, inverse=True),
+    "twiddle_mul_banks": _run_twiddle_mul_banks,
+    "galois_banks": _run_galois_banks,
+    "galois_digits_banks": _run_galois_banks,   # same gather datapath
+    "dyadic_inner_banks": _run_dyadic_inner_banks,
+    "serve_batch": _run_ntt_banks,              # batch-shaped proxy
+}

@@ -48,14 +48,37 @@ def _barrett(a, b, q, mu):
     return jnp.where(r >= q, r - q, r)
 
 
-def _mul_kernel(a_ref, b_ref, o_ref, *, q: int, mu: int):
-    o_ref[...] = _barrett(a_ref[...], b_ref[...], jnp.uint32(q), jnp.uint32(mu))
+def _barrett_lazy(a, b, q, mu):
+    # [0, 2q) band: one conditional subtract instead of two; the MAC
+    # digit loop accumulates these and reduces once in its epilogue.
+    hi = _mulhi(a, b)
+    lo = a * b
+    approx = (hi << 3) | (lo >> 29)
+    qhat = (_mulhi(approx, mu) << 1) | ((approx * mu) >> 31)
+    r = lo - qhat * q
+    return jnp.where(r >= (q << 1), r - (q << 1), r)
 
 
-def _mac_kernel(acc_ref, a_ref, b_ref, o_ref, *, q: int, mu: int):
+def _mul_kernel(a_ref, b_ref, o_ref, *, q: int, mu: int, lazy: bool):
     qc = jnp.uint32(q)
-    p = _barrett(a_ref[...], b_ref[...], qc, jnp.uint32(mu))
-    s = acc_ref[...] + p
+    muc = jnp.uint32(mu)
+    if lazy:
+        r = _barrett_lazy(a_ref[...], b_ref[...], qc, muc)
+        o_ref[...] = jnp.where(r >= qc, r - qc, r)
+    else:
+        o_ref[...] = _barrett(a_ref[...], b_ref[...], qc, muc)
+
+
+def _mac_kernel(acc_ref, a_ref, b_ref, o_ref, *, q: int, mu: int, lazy: bool):
+    qc = jnp.uint32(q)
+    if lazy:
+        # acc in [0, q), product in [0, 2q): sum < 3q, two-step reduce
+        p = _barrett_lazy(a_ref[...], b_ref[...], qc, jnp.uint32(mu))
+        s = acc_ref[...] + p
+        s = jnp.where(s >= (qc << 1), s - (qc << 1), s)
+    else:
+        p = _barrett(a_ref[...], b_ref[...], qc, jnp.uint32(mu))
+        s = acc_ref[...] + p
     o_ref[...] = jnp.where(s >= qc, s - qc, s)
 
 
@@ -74,39 +97,55 @@ def _tile_call(kernel, args, *, tile: int, interpret: bool | None):
     )(*args)
 
 
-@functools.partial(jax.jit, static_argnames=("q", "mu", "tile", "interpret"))
-def dyadic_mul(a, b, *, q: int, mu: int, tile: int = 8, interpret: bool | None = None):
-    kern = functools.partial(_mul_kernel, q=q, mu=mu)
+@functools.partial(jax.jit, static_argnames=("q", "mu", "tile", "lazy", "interpret"))
+def dyadic_mul(a, b, *, q: int, mu: int, tile: int = 8, lazy: bool = False,
+               interpret: bool | None = None):
+    kern = functools.partial(_mul_kernel, q=q, mu=mu, lazy=lazy)
     return _tile_call(kern, [a, b], tile=tile, interpret=interpret)
 
 
-@functools.partial(jax.jit, static_argnames=("q", "mu", "tile", "interpret"))
-def dyadic_mac(acc, a, b, *, q: int, mu: int, tile: int = 8, interpret: bool | None = None):
-    kern = functools.partial(_mac_kernel, q=q, mu=mu)
+@functools.partial(jax.jit, static_argnames=("q", "mu", "tile", "lazy", "interpret"))
+def dyadic_mac(acc, a, b, *, q: int, mu: int, tile: int = 8, lazy: bool = False,
+               interpret: bool | None = None):
+    kern = functools.partial(_mac_kernel, q=q, mu=mu, lazy=lazy)
     return _tile_call(kern, [acc, a, b], tile=tile, interpret=interpret)
 
 
 # ------------------------------------------------ multi-prime inner product
 
-def _inner_banks_kernel(ext_ref, evk_ref, q_ref, mu_ref, o_ref, *, digits: int):
+def _inner_banks_kernel(ext_ref, evk_ref, q_ref, mu_ref, o_ref, *, digits: int,
+                        lazy: bool):
     """Program (p, i): acc = sum_d ext[d] .* evk[d] mod q_p over all
     ``digits`` digit rows, accumulator VMEM-resident throughout.  The
     evk block is either (d, 1, n) — one key row broadcast over the batch
     tile — or (d, 1, tile, n) — per-batch-element key digits; both
-    broadcast against the (tile, n) ext rows."""
+    broadcast against the (tile, n) ext rows.
+
+    Lazy mode keeps products AND the accumulator in [0, 2q) — one
+    conditional select per digit instead of two (plus the saved Barrett
+    subtract) — and reduces exactly once in the epilogue."""
     q = q_ref[0, 0]
     mu = mu_ref[0, 0]
-    acc = _barrett(ext_ref[0, 0], evk_ref[0, 0], q, mu)
-    for d in range(1, digits):
-        prod = _barrett(ext_ref[d, 0], evk_ref[d, 0], q, mu)
-        s = acc + prod
-        acc = jnp.where(s >= q, s - q, s)
+    if lazy:
+        q2 = q << 1
+        acc = _barrett_lazy(ext_ref[0, 0], evk_ref[0, 0], q, mu)
+        for d in range(1, digits):
+            prod = _barrett_lazy(ext_ref[d, 0], evk_ref[d, 0], q, mu)
+            s = acc + prod                              # < 4q < 2^32
+            acc = jnp.where(s >= q2, s - q2, s)
+        acc = jnp.where(acc >= q, acc - q, acc)         # epilogue
+    else:
+        acc = _barrett(ext_ref[0, 0], evk_ref[0, 0], q, mu)
+        for d in range(1, digits):
+            prod = _barrett(ext_ref[d, 0], evk_ref[d, 0], q, mu)
+            s = acc + prod
+            acc = jnp.where(s >= q, s - q, s)
     o_ref[0] = acc
 
 
-@functools.partial(jax.jit, static_argnames=("digits", "tile", "interpret"))
+@functools.partial(jax.jit, static_argnames=("digits", "tile", "lazy", "interpret"))
 def dyadic_inner_banks(ext, evk, qs2, mus2, *, digits: int, tile: int = 8,
-                       interpret: bool | None = None):
+                       lazy: bool = False, interpret: bool | None = None):
     """ext: (d, k, batch, n) NTT-domain digit extensions; evk: (d, k, n)
     key digits shared by the whole batch, or (d, k, batch, n) per-batch
     key digits (a ciphertext batch mixing Galois keys); qs2/mus2: (k, 1)
@@ -120,7 +159,7 @@ def dyadic_inner_banks(ext, evk, qs2, mus2, *, digits: int, tile: int = 8,
         evk_spec = pl.BlockSpec((d, 1, tile, n), lambda p, i: (0, p, i, 0))
     else:
         evk_spec = pl.BlockSpec((d, 1, n), lambda p, i: (0, p, 0))
-    kern = functools.partial(_inner_banks_kernel, digits=digits)
+    kern = functools.partial(_inner_banks_kernel, digits=digits, lazy=lazy)
     return pl.pallas_call(
         kern,
         grid=(k, b // tile),

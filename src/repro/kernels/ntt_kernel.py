@@ -75,6 +75,11 @@ def _shoup(x, w, wp, q):
     return jnp.where(r >= q, r - q, r)
 
 
+def _shoup_lazy(x, w, wp, q):
+    # [0, 2q) Shoup product: no final subtract.  x may be any u32.
+    return x * w - _mulhi(x, wp) * q
+
+
 def _addmod(a, b, q):
     s = a + b
     return jnp.where(s >= q, s - q, s)
@@ -84,41 +89,80 @@ def _submod(a, b, q):
     return jnp.where(a >= b, a - b, a + (q - b))
 
 
+def _lazy_add(a, b, q2):
+    s = a + b
+    return jnp.where(s >= q2, s - q2, s)
+
+
+def _lazy_sub(a, b, q2):
+    return jnp.where(a >= b, a - b, a + (q2 - b))
+
+
+# Shared stage loops: one codepath for the single-prime and banks
+# kernels.  ``get_row(t)`` yields the (w, wp) rows for stage t.  In lazy
+# mode values ride in [0, 2q) (see core.modmath's lazy contract) and
+# each butterfly spends 2 conditional selects instead of 3; the caller
+# owns the epilogue reduction.
+
+def _fwd_stages(x, get_row, stages, qc, lazy):
+    bt, n = x.shape
+    q2 = qc + qc
+    for t in range(stages):
+        w, wp = get_row(t)
+        lo = x[:, : n // 2]
+        hi = x[:, n // 2:]
+        if lazy:
+            tt = _shoup_lazy(hi, w, wp, qc)
+            u = _lazy_add(lo, tt, q2)
+            v = _lazy_sub(lo, tt, q2)
+        else:
+            tt = _shoup(hi, w, wp, qc)
+            u = _addmod(lo, tt, qc)
+            v = _submod(lo, tt, qc)
+        x = jnp.stack([u, v], axis=-1).reshape(bt, n)
+    return x
+
+
+def _inv_stages(x, get_row, stages, qc, lazy):
+    bt, n = x.shape
+    q2 = qc + qc
+    for t in range(stages - 1, -1, -1):
+        w, wp = get_row(t)
+        pairs = x.reshape(bt, n // 2, 2)
+        e = pairs[..., 0]
+        o = pairs[..., 1]
+        if lazy:
+            u = _lazy_add(e, o, q2)
+            v = _shoup_lazy(_lazy_sub(e, o, q2), w, wp, qc)
+        else:
+            u = _addmod(e, o, qc)
+            v = _shoup(_submod(e, o, qc), w, wp, qc)
+        x = jnp.concatenate([u, v], axis=-1)
+    return x
+
+
 # ----------------------------------------------------------- fwd kernel
 
 def _ntt_fwd_kernel(x_ref, tw_ref, twp_ref, pre_ref, prep_ref, o_ref, *,
-                    q: int, stages: int, negacyclic: bool):
+                    q: int, stages: int, negacyclic: bool, lazy: bool):
     qc = jnp.uint32(q)
     x = x_ref[...]                      # (bt, n)
-    bt, n = x.shape
     if negacyclic:
-        x = _shoup(x, pre_ref[...], prep_ref[...], qc)
-    for t in range(stages):
-        w = tw_ref[t, :]                # (n/2,)
-        wp = twp_ref[t, :]
-        lo = x[:, : n // 2]
-        hi = x[:, n // 2:]
-        tt = _shoup(hi, w, wp, qc)
-        u = _addmod(lo, tt, qc)
-        v = _submod(lo, tt, qc)
-        x = jnp.stack([u, v], axis=-1).reshape(bt, n)
+        x = (_shoup_lazy if lazy else _shoup)(x, pre_ref[...], prep_ref[...], qc)
+    x = _fwd_stages(x, lambda t: (tw_ref[t, :], twp_ref[t, :]), stages, qc, lazy)
+    if lazy:
+        x = jnp.where(x >= qc, x - qc, x)   # epilogue: back to [0, q)
     o_ref[...] = x
 
 
 def _ntt_inv_kernel(x_ref, itw_ref, itwp_ref, post_ref, postp_ref, o_ref, *,
-                    q: int, stages: int, negacyclic: bool, ninv: int, ninv_p: int):
+                    q: int, stages: int, negacyclic: bool, ninv: int, ninv_p: int,
+                    lazy: bool):
     qc = jnp.uint32(q)
     x = x_ref[...]
-    bt, n = x.shape
-    for t in range(stages - 1, -1, -1):
-        w = itw_ref[t, :]
-        wp = itwp_ref[t, :]
-        pairs = x.reshape(bt, n // 2, 2)
-        e = pairs[..., 0]
-        o = pairs[..., 1]
-        u = _addmod(e, o, qc)
-        v = _shoup(_submod(e, o, qc), w, wp, qc)
-        x = jnp.concatenate([u, v], axis=-1)
+    x = _inv_stages(x, lambda t: (itw_ref[t, :], itwp_ref[t, :]), stages, qc, lazy)
+    # the epilogue multiply fully reduces either path (_shoup takes any
+    # u32 representative), so lazy costs nothing extra here
     if negacyclic:
         x = _shoup(x, post_ref[...], postp_ref[...], qc)   # psi^-i * n^-1 fused
     else:
@@ -148,66 +192,65 @@ def _grid_call(kernel, x, tables, row_args, *, tile: int, interpret: bool | None
     )(x, *tables, *row_args)
 
 
-@functools.partial(jax.jit, static_argnames=("q", "stages", "negacyclic", "tile", "interpret"))
+@functools.partial(jax.jit, static_argnames=("q", "stages", "negacyclic", "tile", "lazy", "interpret"))
 def ntt_fwd_pallas(x, tw, twp, pre, prep, *, q: int, stages: int,
-                   negacyclic: bool, tile: int = 8, interpret: bool | None = None):
+                   negacyclic: bool, tile: int = 8, lazy: bool = False,
+                   interpret: bool | None = None):
     """x: (batch, n) u32.  pre/prep: (1, n) psi-power rows (ignored when
     not negacyclic but still passed to keep one kernel signature)."""
-    kern = functools.partial(_ntt_fwd_kernel, q=q, stages=stages, negacyclic=negacyclic)
+    kern = functools.partial(_ntt_fwd_kernel, q=q, stages=stages,
+                             negacyclic=negacyclic, lazy=lazy)
     return _grid_call(kern, x, [tw, twp], [pre, prep], tile=tile, interpret=interpret)
 
 
-@functools.partial(jax.jit, static_argnames=("q", "stages", "negacyclic", "ninv", "ninv_p", "tile", "interpret"))
+@functools.partial(jax.jit, static_argnames=("q", "stages", "negacyclic", "ninv", "ninv_p", "tile", "lazy", "interpret"))
 def ntt_inv_pallas(x, itw, itwp, post, postp, *, q: int, stages: int,
                    negacyclic: bool, ninv: int, ninv_p: int,
-                   tile: int = 8, interpret: bool | None = None):
+                   tile: int = 8, lazy: bool = False,
+                   interpret: bool | None = None):
     kern = functools.partial(_ntt_inv_kernel, q=q, stages=stages,
-                             negacyclic=negacyclic, ninv=ninv, ninv_p=ninv_p)
+                             negacyclic=negacyclic, ninv=ninv, ninv_p=ninv_p,
+                             lazy=lazy)
     return _grid_call(kern, x, [itw, itwp], [post, postp], tile=tile, interpret=interpret)
 
 
 # ------------------------------------------------ multi-prime NTT banks
 
 def _ntt_fwd_banks_kernel(x_ref, q_ref, tw_ref, twp_ref, pre_ref, prep_ref,
-                          o_ref, *, stages: int, negacyclic: bool):
+                          o_ref, *, stages: int, negacyclic: bool, lazy: bool,
+                          reduce_out: bool):
     """One bank row: program (p, i) transforms batch tile i under prime
-    row p.  The modulus is a per-program scalar read from q_ref."""
+    row p.  The modulus is a per-program scalar read from q_ref.
+
+    lazy + reduce_out=False emits the raw [0, 2q) representatives for a
+    lazy-aware consumer (the four-step twiddle pass absorbs the
+    reduction in its own Shoup multiply)."""
     qc = q_ref[0, 0]
     x = x_ref[0]                        # (tile, n)
-    bt, n = x.shape
     if negacyclic:
-        x = _shoup(x, pre_ref[0], prep_ref[0], qc)
-    for t in range(stages):
-        w = tw_ref[0, t, :]             # (n/2,)
-        wp = twp_ref[0, t, :]
-        lo = x[:, : n // 2]
-        hi = x[:, n // 2:]
-        tt = _shoup(hi, w, wp, qc)
-        u = _addmod(lo, tt, qc)
-        v = _submod(lo, tt, qc)
-        x = jnp.stack([u, v], axis=-1).reshape(bt, n)
+        x = (_shoup_lazy if lazy else _shoup)(x, pre_ref[0], prep_ref[0], qc)
+    x = _fwd_stages(x, lambda t: (tw_ref[0, t, :], twp_ref[0, t, :]),
+                    stages, qc, lazy)
+    if lazy and reduce_out:
+        x = jnp.where(x >= qc, x - qc, x)
     o_ref[0] = x
 
 
 def _ntt_inv_banks_kernel(x_ref, q_ref, ninv_ref, ninvp_ref, itw_ref, itwp_ref,
                           post_ref, postp_ref, o_ref, *, stages: int,
-                          negacyclic: bool):
+                          negacyclic: bool, lazy: bool, reduce_out: bool):
     qc = q_ref[0, 0]
     x = x_ref[0]
-    bt, n = x.shape
-    for t in range(stages - 1, -1, -1):
-        w = itw_ref[0, t, :]
-        wp = itwp_ref[0, t, :]
-        pairs = x.reshape(bt, n // 2, 2)
-        e = pairs[..., 0]
-        o = pairs[..., 1]
-        u = _addmod(e, o, qc)
-        v = _shoup(_submod(e, o, qc), w, wp, qc)
-        x = jnp.concatenate([u, v], axis=-1)
+    x = _inv_stages(x, lambda t: (itw_ref[0, t, :], itwp_ref[0, t, :]),
+                    stages, qc, lazy)
+    # epilogue multiply: full reduce unless a lazy consumer asked for the
+    # [0, 2q) representative (reduce_out=False only makes sense in lazy
+    # mode; the eager multiply is always exact)
+    mul = _shoup_lazy if (lazy and not reduce_out) else _shoup
     if negacyclic:
-        x = _shoup(x, post_ref[0], postp_ref[0], qc)    # psi^-i * n^-1 fused
+        x = mul(x, post_ref[0], postp_ref[0], qc)       # psi^-i * n^-1 fused
     else:
-        x = _shoup(x, ninv_ref[0, 0], ninvp_ref[0, 0], qc)
+        x = mul(x, ninv_ref[0, 0], ninvp_ref[0, 0], qc)
     o_ref[0] = x
 
 
@@ -239,43 +282,52 @@ def _banks_grid_call(kernel, x, scalars, tables, rows, *, tile: int,
     )(x, *scalars, *tables, *rows)
 
 
-@functools.partial(jax.jit, static_argnames=("stages", "negacyclic", "tile", "interpret"))
+@functools.partial(jax.jit, static_argnames=("stages", "negacyclic", "tile", "lazy", "reduce_out", "interpret"))
 def ntt_fwd_banks_pallas(x, qs2, tw, twp, pre, prep, *, stages: int,
-                         negacyclic: bool, tile: int = 8,
+                         negacyclic: bool, tile: int = 8, lazy: bool = False,
+                         reduce_out: bool = True,
                          interpret: bool | None = None):
     """x: (k, batch, n) u32, row i reduced mod qs2[i, 0].
     qs2: (k, 1); tw/twp: (k, s, n/2); pre/prep: (k, n) psi rows."""
     kern = functools.partial(_ntt_fwd_banks_kernel, stages=stages,
-                             negacyclic=negacyclic)
+                             negacyclic=negacyclic, lazy=lazy,
+                             reduce_out=reduce_out)
     return _banks_grid_call(kern, x, [qs2], [tw, twp], [pre, prep],
                             tile=tile, interpret=interpret)
 
 
-@functools.partial(jax.jit, static_argnames=("stages", "negacyclic", "tile", "interpret"))
+@functools.partial(jax.jit, static_argnames=("stages", "negacyclic", "tile", "lazy", "reduce_out", "interpret"))
 def ntt_inv_banks_pallas(x, qs2, ninv2, ninvp2, itw, itwp, post, postp, *,
                          stages: int, negacyclic: bool, tile: int = 8,
+                         lazy: bool = False, reduce_out: bool = True,
                          interpret: bool | None = None):
     kern = functools.partial(_ntt_inv_banks_kernel, stages=stages,
-                             negacyclic=negacyclic)
+                             negacyclic=negacyclic, lazy=lazy,
+                             reduce_out=reduce_out)
     return _banks_grid_call(kern, x, [qs2, ninv2, ninvp2], [itw, itwp],
                             [post, postp], tile=tile, interpret=interpret)
 
 
 # ------------------------------------------- four-step twiddle multiply
 
-def _twiddle_mul_banks_kernel(x_ref, q_ref, w_ref, wp_ref, o_ref):
+def _twiddle_mul_banks_kernel(x_ref, q_ref, w_ref, wp_ref, o_ref, *, lazy: bool):
     """Step 3 of the four-step schedule (paper §IX): the pointwise
     w^(j2*k1) correction between the column and row NTT passes, fused as
     one (prime, batch_tile) Shoup multiply.  The same kernel applies the
     negacyclic psi^i pre-weights / psi^-i post-weights, which share the
-    per-prime (k, n) weight-row layout."""
-    o_ref[0] = _shoup(x_ref[0], w_ref[0], wp_ref[0], q_ref[0, 0])
+    per-prime (k, n) weight-row layout.  lazy=True emits the [0, 2q)
+    Shoup representative (the consumer owns the reduction); either way
+    any u32 input representative is accepted."""
+    mul = _shoup_lazy if lazy else _shoup
+    o_ref[0] = mul(x_ref[0], w_ref[0], wp_ref[0], q_ref[0, 0])
 
 
-@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+@functools.partial(jax.jit, static_argnames=("tile", "lazy", "interpret"))
 def twiddle_mul_banks_pallas(x, qs2, w, wp, *, tile: int = 8,
+                             lazy: bool = False,
                              interpret: bool | None = None):
     """x: (k, batch, n) u32; qs2: (k, 1); w/wp: (k, n) weight rows +
     Shoup companions.  out[p, i, :] = x[p, i, :] * w[p, :] mod qs[p]."""
-    return _banks_grid_call(_twiddle_mul_banks_kernel, x, [qs2], [], [w, wp],
+    kern = functools.partial(_twiddle_mul_banks_kernel, lazy=lazy)
+    return _banks_grid_call(kern, x, [qs2], [], [w, wp],
                             tile=tile, interpret=interpret)

@@ -39,7 +39,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.params import NTTParams, bitrev_perm
-from repro.kernels import ntt_kernel, dyadic_kernel, galois_kernel, ref
+from repro.kernels import autotune, ntt_kernel, dyadic_kernel, galois_kernel, ref
 
 # Single-kernel tile budget: below this ring size the whole log2(n)-stage
 # transform runs as ONE fused banks kernel; at or above it the large-N
@@ -62,63 +62,76 @@ def _pad_batch(x, tile):
 
 
 def ntt(x, p: NTTParams, *, negacyclic: bool = True, use_pallas: bool | None = None,
-        tile: int = 8):
-    """Batched forward NTT.  x: (..., n) u32 -> (..., n) u32 (bitrev order)."""
+        tile: int | None = None, lazy: bool = True):
+    """Batched forward NTT.  x: (..., n) u32 -> (..., n) u32 (bitrev order).
+
+    ``tile=None`` resolves through ``kernels.autotune`` (explicit arg >
+    env pin > cache > default), always clamped to the batch — a 1-row
+    input dispatches a 1-row grid, not an 8x zero-padded one.  ``lazy``
+    selects the deferred-reduction butterflies; the epilogue fully
+    reduces either way, so outputs are bit-identical."""
     use_pallas = _on_tpu() if use_pallas is None else use_pallas
     x = jnp.asarray(x)
     if not use_pallas:
-        return ref.ntt_fwd_ref(x, p, negacyclic)
+        return ref.ntt_fwd_ref(x, p, negacyclic, lazy=lazy)
     shape = x.shape
     x2 = x.reshape(-1, p.n)
+    tile = autotune.resolve_tile("ntt", 1, p.n, x2.shape[0], tile)
     x2, b = _pad_batch(x2, tile)
     out = ntt_kernel.ntt_fwd_pallas(
         x2, jnp.asarray(p.tw), jnp.asarray(p.twp),
         jnp.asarray(p.psi_pows)[None, :], jnp.asarray(p.psi_pows_p)[None, :],
-        q=p.q, stages=p.stages, negacyclic=negacyclic, tile=tile)
+        q=p.q, stages=p.stages, negacyclic=negacyclic, tile=tile, lazy=lazy)
     return out[:b].reshape(shape)
 
 
 def intt(x, p: NTTParams, *, negacyclic: bool = True, use_pallas: bool | None = None,
-         tile: int = 8):
+         tile: int | None = None, lazy: bool = True):
     use_pallas = _on_tpu() if use_pallas is None else use_pallas
     x = jnp.asarray(x)
     if not use_pallas:
-        return ref.ntt_inv_ref(x, p, negacyclic)
+        return ref.ntt_inv_ref(x, p, negacyclic, lazy=lazy)
     shape = x.shape
     x2 = x.reshape(-1, p.n)
+    tile = autotune.resolve_tile("intt", 1, p.n, x2.shape[0], tile)
     x2, b = _pad_batch(x2, tile)
     out = ntt_kernel.ntt_inv_pallas(
         x2, jnp.asarray(p.itw), jnp.asarray(p.itwp),
         jnp.asarray(p.ipsi_ninv)[None, :], jnp.asarray(p.ipsi_ninv_p)[None, :],
         q=p.q, stages=p.stages, negacyclic=negacyclic,
-        ninv=p.ninv, ninv_p=p.ninv_p, tile=tile)
+        ninv=p.ninv, ninv_p=p.ninv_p, tile=tile, lazy=lazy)
     return out[:b].reshape(shape)
 
 
-def dyadic_mul(a, b, p: NTTParams, *, use_pallas: bool | None = None, tile: int = 8):
+def dyadic_mul(a, b, p: NTTParams, *, use_pallas: bool | None = None,
+               tile: int | None = None, lazy: bool = True):
     use_pallas = _on_tpu() if use_pallas is None else use_pallas
     if not use_pallas:
-        return ref.dyadic_mul_ref(a, b, p.q, p.barrett_mu)
+        return ref.dyadic_mul_ref(a, b, p.q, p.barrett_mu, lazy=lazy)
     a = jnp.asarray(a)
     shape = a.shape
     a2 = a.reshape(-1, p.n)
     b2 = jnp.asarray(b).reshape(-1, p.n)
+    tile = autotune.resolve_tile("dyadic_mul", 1, p.n, a2.shape[0], tile)
     a2, nb = _pad_batch(a2, tile)
     b2, _ = _pad_batch(b2, tile)
-    out = dyadic_kernel.dyadic_mul(a2, b2, q=p.q, mu=p.barrett_mu, tile=tile)
+    out = dyadic_kernel.dyadic_mul(a2, b2, q=p.q, mu=p.barrett_mu, tile=tile,
+                                   lazy=lazy)
     return out[:nb].reshape(shape)
 
 
-def dyadic_mac(acc, a, b, p: NTTParams, *, use_pallas: bool | None = None, tile: int = 8):
+def dyadic_mac(acc, a, b, p: NTTParams, *, use_pallas: bool | None = None,
+               tile: int | None = None, lazy: bool = True):
     use_pallas = _on_tpu() if use_pallas is None else use_pallas
     if not use_pallas:
-        return ref.dyadic_mac_ref(acc, a, b, p.q, p.barrett_mu)
+        return ref.dyadic_mac_ref(acc, a, b, p.q, p.barrett_mu, lazy=lazy)
     acc = jnp.asarray(acc)
     shape = acc.shape
-    f = lambda t: _pad_batch(jnp.asarray(t).reshape(-1, p.n), tile)[0]
     nb = acc.reshape(-1, p.n).shape[0]
+    tile = autotune.resolve_tile("dyadic_mac", 1, p.n, nb, tile)
+    f = lambda t: _pad_batch(jnp.asarray(t).reshape(-1, p.n), tile)[0]
     out = dyadic_kernel.dyadic_mac(f(acc), f(a), f(b), q=p.q, mu=p.barrett_mu,
-                                   tile=tile)
+                                   tile=tile, lazy=lazy)
     return out[:nb].reshape(shape)
 
 
@@ -165,7 +178,8 @@ def _ct_batch_axis(fn):
 
 @_ct_batch_axis
 def ntt_banks(x, t: dict, *, negacyclic: bool = True,
-              use_pallas: bool | None = None, tile: int = 8):
+              use_pallas: bool | None = None, tile: int | None = None,
+              lazy: bool = True, reduce_out: bool = True):
     """Batched multi-prime forward NTT.  x: (k, ..., n) u32, row i
     reduced mod t['qs'][i]; t: TablePack for (at least) those k primes.
     One fused kernel gridded over (prime, batch_tile) on the Pallas
@@ -173,26 +187,35 @@ def ntt_banks(x, t: dict, *, negacyclic: bool = True,
 
     ``batch_leading=True`` flips the convention to a (b, k, ..., n)
     ciphertext-batch stack: b independent polynomials over the same
-    basis, folded into the one kernel grid (see module docstring)."""
+    basis, folded into the one kernel grid (see module docstring).
+
+    ``lazy`` defers the butterfly reductions ([0, 2q) between stages);
+    the default ``reduce_out=True`` epilogue makes the output canonical
+    and bit-identical to the eager path.  ``reduce_out=False`` (lazy
+    only) hands the raw [0, 2q) representatives to a lazy-aware consumer
+    — the four-step pipeline's twiddle pass absorbs that reduction."""
     use_pallas = _on_tpu() if use_pallas is None else use_pallas
     x = jnp.asarray(x)
     k, n = x.shape[0], x.shape[-1]
     qs, tw, twp, psi, psip = _rows(t, k, "qs", "tw", "twp", "psi", "psip")
     if not use_pallas:
-        return ref.ntt_fwd_banks_ref(x, qs, tw, twp, psi, psip, negacyclic)
+        return ref.ntt_fwd_banks_ref(x, qs, tw, twp, psi, psip, negacyclic,
+                                     lazy=lazy, reduce_out=reduce_out)
     shape = x.shape
     x3 = x.reshape(k, -1, n)
-    tile = max(1, min(tile, x3.shape[1]))   # don't 8x-pad tiny batches
+    tile = autotune.resolve_tile("ntt_banks", k, n, x3.shape[1], tile)
     x3, b = _pad_mid(x3, tile)
     out = ntt_kernel.ntt_fwd_banks_pallas(
         x3, qs[:, None], tw, twp, psi, psip,
-        stages=tw.shape[1], negacyclic=negacyclic, tile=tile)
+        stages=tw.shape[1], negacyclic=negacyclic, tile=tile, lazy=lazy,
+        reduce_out=reduce_out)
     return out[:, :b].reshape(shape)
 
 
 @_ct_batch_axis
 def intt_banks(x, t: dict, *, negacyclic: bool = True,
-               use_pallas: bool | None = None, tile: int = 8):
+               use_pallas: bool | None = None, tile: int | None = None,
+               lazy: bool = True, reduce_out: bool = True):
     use_pallas = _on_tpu() if use_pallas is None else use_pallas
     x = jnp.asarray(x)
     k, n = x.shape[0], x.shape[-1]
@@ -200,41 +223,48 @@ def intt_banks(x, t: dict, *, negacyclic: bool = True,
         t, k, "qs", "ninv", "ninv_p", "itw", "itwp", "ipsin", "ipsinp")
     if not use_pallas:
         return ref.ntt_inv_banks_ref(x, qs, ninv, ninv_p, itw, itwp,
-                                     ipsin, ipsinp, negacyclic)
+                                     ipsin, ipsinp, negacyclic,
+                                     lazy=lazy, reduce_out=reduce_out)
     shape = x.shape
     x3 = x.reshape(k, -1, n)
-    tile = max(1, min(tile, x3.shape[1]))
+    tile = autotune.resolve_tile("intt_banks", k, n, x3.shape[1], tile)
     x3, b = _pad_mid(x3, tile)
     out = ntt_kernel.ntt_inv_banks_pallas(
         x3, qs[:, None], ninv[:, None], ninv_p[:, None],
         itw, itwp, ipsin, ipsinp,
-        stages=itw.shape[1], negacyclic=negacyclic, tile=tile)
+        stages=itw.shape[1], negacyclic=negacyclic, tile=tile, lazy=lazy,
+        reduce_out=reduce_out)
     return out[:, :b].reshape(shape)
 
 
 @_ct_batch_axis
 def twiddle_mul_banks(x, w, wp, qs, *, use_pallas: bool | None = None,
-                      tile: int = 8):
+                      tile: int | None = None, lazy: bool = False):
     """Fused per-prime weight-row multiply: x (k, ..., n) u32, w/wp (k, n)
     weight rows + Shoup companions, qs (k,).  This is the four-step step-3
     twiddle correction (and the negacyclic psi pre/post-weights) as one
-    (prime, batch_tile) kernel on the Pallas path."""
+    (prime, batch_tile) kernel on the Pallas path.
+
+    Accepts any u32 input representatives (the Shoup product reduces them
+    exactly); ``lazy=True`` emits the [0, 2q) representative for a
+    lazy-aware consumer instead of the canonical value."""
     use_pallas = _on_tpu() if use_pallas is None else use_pallas
     x = jnp.asarray(x)
     if not use_pallas:
-        return ref.twiddle_mul_banks_ref(x, qs, w, wp)
+        return ref.twiddle_mul_banks_ref(x, qs, w, wp, lazy=lazy)
     k, n = x.shape[0], x.shape[-1]
     shape = x.shape
     x3 = x.reshape(k, -1, n)
-    tile = max(1, min(tile, x3.shape[1]))
+    tile = autotune.resolve_tile("twiddle_mul_banks", k, n, x3.shape[1], tile)
     x3, b = _pad_mid(x3, tile)
     out = ntt_kernel.twiddle_mul_banks_pallas(x3, qs[:, None], w, wp,
-                                              tile=tile)
+                                              tile=tile, lazy=lazy)
     return out[:, :b].reshape(shape)
 
 
 @_ct_batch_axis
-def galois_banks(x, idx, *, use_pallas: bool | None = None, tile: int = 8):
+def galois_banks(x, idx, *, use_pallas: bool | None = None,
+                 tile: int | None = None):
     """Galois automorphism in the NTT domain: out[..., j] = x[..., idx[j]].
 
     x: (k, ..., n) u32 NTT-form residue rows; idx: (n,) int32 slot
@@ -262,12 +292,17 @@ def galois_banks(x, idx, *, use_pallas: bool | None = None, tile: int = 8):
         return ref.galois_banks_ref(x, idx)
     shape = x.shape
     x3 = x.reshape(k, -1, n)
-    tile = max(1, min(tile, x3.shape[1]))
+    tile = autotune.resolve_tile("galois_banks", k, n, x3.shape[1], tile)
     x3, b = _pad_mid(x3, tile)
     if idx.ndim == 2:
         pad = x3.shape[1] - b
-        if pad:     # padded batch rows gather through the identity row 0s
-            idx = jnp.concatenate([idx, jnp.zeros((pad, n), jnp.int32)], axis=0)
+        if pad:
+            # padded batch rows gather through a true identity (iota) row:
+            # an all-zeros row would be a constant-0 gather, and the pad
+            # rows must stay a plain in-bounds passthrough of whatever
+            # (possibly unreduced) values the pad carries
+            iota = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32), (pad, n))
+            idx = jnp.concatenate([idx, iota], axis=0)
         out = galois_kernel.galois_banks_multi_pallas(x3, idx, tile=tile)
     else:
         out = galois_kernel.galois_banks_pallas(x3, idx[None, :], tile=tile)
@@ -275,7 +310,7 @@ def galois_banks(x, idx, *, use_pallas: bool | None = None, tile: int = 8):
 
 
 def galois_digits_banks(ext, idx, *, use_pallas: bool | None = None,
-                        tile: int = 8):
+                        tile: int | None = None):
     """Galois gather over key-switch digit extensions — the hoisted-
     rotation move: apply per-batch gather rows to a SHARED digit
     decomposition instead of re-decomposing per rotation.
@@ -304,10 +339,13 @@ def galois_digits_banks(ext, idx, *, use_pallas: bool | None = None,
         (idx.shape, ext.shape)
     if not use_pallas:
         return ref.galois_digits_banks_ref(ext, idx)
-    tile = max(1, min(tile, bi))
+    tile = autotune.resolve_tile("galois_digits_banks", k, n, bi, tile)
     pad = (-bi) % tile
-    if pad:     # padded batch rows gather through the identity row 0s
-        idx = jnp.concatenate([idx, jnp.zeros((pad, n), jnp.int32)], axis=0)
+    if pad:
+        # padded batch rows gather through a true identity (iota) row —
+        # see ``galois_banks``; zeros would be a constant-0 gather
+        iota = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32), (pad, n))
+        idx = jnp.concatenate([idx, iota], axis=0)
         if not shared:
             ext = jnp.concatenate(
                 [ext, jnp.zeros((d, k, pad, n), ext.dtype)], axis=2)
@@ -333,7 +371,8 @@ def fourstep_dims(fp: dict) -> tuple[int, int]:
 
 @_ct_batch_axis
 def ntt_fourstep_banks(x, fp: dict, *, negacyclic: bool = True,
-                       use_pallas: bool | None = None, tile: int = 8):
+                       use_pallas: bool | None = None, tile: int | None = None,
+                       lazy: bool = True):
     """Large-N forward NTT via the four-step (Bailey) decomposition with
     every pass on the banks kernels — the paper's §IX schedule (two
     passes of batched NTT-N1/NTT-N2 units with a reorder in between).
@@ -348,13 +387,18 @@ def ntt_fourstep_banks(x, fp: dict, *, negacyclic: bool = True,
     pass -> transpose readout.  Output is in *natural* frequency order
     (A_hat[k2*n1 + k1]), unlike the bitrev order of the single-kernel
     path; ``intt_fourstep_banks`` consumes the same convention, so any
-    NTT-domain data stays internally consistent per ring size."""
+    NTT-domain data stays internally consistent per ring size.
+
+    In lazy mode the inter-pass values ride in [0, 2q): the psi
+    pre-weight and pass 1 emit unreduced representatives, the step-3
+    Shoup twiddle absorbs them exactly (it accepts any u32), and pass 2's
+    epilogue restores [0, q) — the output is bit-identical to eager."""
     x = jnp.asarray(x)
     k = x.shape[0]
     n1, n2 = fourstep_dims(fp)
     n = n1 * n2
     assert x.shape[-1] == n, (x.shape, n1, n2)
-    kw = dict(use_pallas=use_pallas, tile=tile)
+    kw = dict(use_pallas=use_pallas, tile=tile, lazy=lazy)
     qs = fp["qs"][:k]
     shape = x.shape
     x = x.reshape(k, -1, n)
@@ -364,29 +408,34 @@ def ntt_fourstep_banks(x, fp: dict, *, negacyclic: bool = True,
     # pass 1: column NTT-N1 units; the N2 columns fold into the kernel
     # batch so all k*b*n2 transforms run in one (prime, tile) grid
     xt = x.reshape(k, b, n1, n2).swapaxes(-1, -2).reshape(k, b * n2, n1)
-    xt = ntt_banks(xt, fp["pack1"], negacyclic=False, **kw)[..., _brev(n1)]
+    xt = ntt_banks(xt, fp["pack1"], negacyclic=False, reduce_out=False,
+                   **kw)[..., _brev(n1)]
     x = xt.reshape(k, b, n2, n1).swapaxes(-1, -2).reshape(k, b, n)
     # step 3: fused twiddle correction (the inter-pass reorder weights)
     x = twiddle_mul_banks(x, fp["tw"][:k], fp["twp"][:k], qs, **kw)
-    # pass 2: row NTT-N2 units
+    # pass 2: row NTT-N2 units (epilogue restores the canonical band)
     xr = x.reshape(k, b * n1, n2)
-    xr = ntt_banks(xr, fp["pack2"], negacyclic=False, **kw)[..., _brev(n2)]
+    xr = ntt_banks(xr, fp["pack2"], negacyclic=False,
+                   **kw)[..., _brev(n2)]
     # readout: A_hat[k2*n1 + k1] = D[k1, k2]
     return xr.reshape(k, b, n1, n2).swapaxes(-1, -2).reshape(shape)
 
 
 @_ct_batch_axis
 def intt_fourstep_banks(x, fp: dict, *, negacyclic: bool = True,
-                        use_pallas: bool | None = None, tile: int = 8):
+                        use_pallas: bool | None = None, tile: int | None = None,
+                        lazy: bool = True):
     """Inverse of ``ntt_fourstep_banks`` (natural-order input).  The two
     sub-iNTT bank passes each contribute 1/Ni, so no separate n^-1; the
-    negacyclic psi^-i post-weight is the plain inverse-psi row."""
+    negacyclic psi^-i post-weight is the plain inverse-psi row.  Lazy
+    handoff mirrors the forward pipeline: unreduced between passes, the
+    final multiply (psi^-i, or pass 1's ninv epilogue) fully reduces."""
     x = jnp.asarray(x)
     k = x.shape[0]
     n1, n2 = fourstep_dims(fp)
     n = n1 * n2
     assert x.shape[-1] == n, (x.shape, n1, n2)
-    kw = dict(use_pallas=use_pallas, tile=tile)
+    kw = dict(use_pallas=use_pallas, tile=tile, lazy=lazy)
     qs = fp["qs"][:k]
     shape = x.shape
     x = x.reshape(k, -1, n)
@@ -395,22 +444,25 @@ def intt_fourstep_banks(x, fp: dict, *, negacyclic: bool = True,
     x = x.reshape(k, b, n2, n1).swapaxes(-1, -2)            # (k, b, n1, n2)
     # inverse pass 2: row iNTT-N2 banks (bitrev input order)
     xr = x.reshape(k, b * n1, n2)[..., _brev(n2)]
-    xr = intt_banks(xr, fp["pack2"], negacyclic=False, **kw)
+    xr = intt_banks(xr, fp["pack2"], negacyclic=False, reduce_out=False, **kw)
     # undo the twiddle correction
     x = twiddle_mul_banks(xr.reshape(k, b, n), fp["itw"][:k], fp["itwp"][:k],
                           qs, **kw)
-    # inverse pass 1: column iNTT-N1 banks
+    # inverse pass 1: column iNTT-N1 banks; when a psi post-weight
+    # follows it absorbs the reduction, else the ninv epilogue reduces
     xt = (x.reshape(k, b, n1, n2).swapaxes(-1, -2)
           .reshape(k, b * n2, n1)[..., _brev(n1)])
-    xt = intt_banks(xt, fp["pack1"], negacyclic=False, **kw)
+    xt = intt_banks(xt, fp["pack1"], negacyclic=False,
+                    reduce_out=not negacyclic, **kw)
     x = xt.reshape(k, b, n2, n1).swapaxes(-1, -2).reshape(k, b, n)
     if negacyclic:
-        x = twiddle_mul_banks(x, fp["ipsi"][:k], fp["ipsip"][:k], qs, **kw)
+        x = twiddle_mul_banks(x, fp["ipsi"][:k], fp["ipsip"][:k], qs,
+                              use_pallas=use_pallas, tile=tile)  # full reduce
     return x.reshape(shape)
 
 
 def dyadic_inner_banks(ext, evk, t: dict, *, use_pallas: bool | None = None,
-                       tile: int = 8):
+                       tile: int | None = None, lazy: bool = True):
     """Fused key-switch inner product: out[j] = sum_i ext[i, j] .* evk[i, j]
     mod q_j.  ext: (d, k, B, n) NTT-domain digit extensions — a
     ciphertext batch folds into the B axis; evk: (d, k, n) key digits
@@ -425,9 +477,9 @@ def dyadic_inner_banks(ext, evk, t: dict, *, use_pallas: bool | None = None,
     if evk.ndim == 4:
         assert evk.shape == ext.shape, (evk.shape, ext.shape)
     if not use_pallas:
-        return ref.dyadic_inner_banks_ref(ext, evk, t["qs"], t["mu"])
+        return ref.dyadic_inner_banks_ref(ext, evk, t["qs"], t["mu"], lazy=lazy)
     d, k, b, n = ext.shape
-    tile = max(1, min(tile, b))
+    tile = autotune.resolve_tile("dyadic_inner_banks", k, n, b, tile)
     pad = (-b) % tile
     if pad:
         z = jnp.zeros((d, k, pad, n), ext.dtype)
@@ -435,5 +487,6 @@ def dyadic_inner_banks(ext, evk, t: dict, *, use_pallas: bool | None = None,
         if evk.ndim == 4:
             evk = jnp.concatenate([evk, z], axis=2)
     out = dyadic_kernel.dyadic_inner_banks(
-        ext, evk, t["qs"][:, None], t["mu"][:, None], digits=d, tile=tile)
+        ext, evk, t["qs"][:, None], t["mu"][:, None], digits=d, tile=tile,
+        lazy=lazy)
     return out[:, :b]

@@ -9,68 +9,95 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import ntt as _ntt
-from repro.core.modmath import mulmod_barrett, mulmod_shoup, addmod
+from repro.core.modmath import (
+    addmod,
+    lazy_addmod,
+    mulmod_barrett,
+    mulmod_barrett_lazy,
+    mulmod_shoup,
+    mulmod_shoup_lazy,
+)
 from repro.core.params import NTTParams
 
 
-def ntt_fwd_ref(x, p: NTTParams, negacyclic: bool):
+def ntt_fwd_ref(x, p: NTTParams, negacyclic: bool, lazy: bool = False):
     x = jnp.asarray(x)
     if negacyclic:
-        return _ntt.ntt_negacyclic(x, p)
-    return _ntt.ntt_cyclic(x, p)
+        return _ntt.ntt_negacyclic(x, p, lazy=lazy)
+    return _ntt.ntt_cyclic(x, p, lazy=lazy)
 
 
-def ntt_inv_ref(x, p: NTTParams, negacyclic: bool):
+def ntt_inv_ref(x, p: NTTParams, negacyclic: bool, lazy: bool = False):
     x = jnp.asarray(x)
     if negacyclic:
-        return _ntt.intt_negacyclic(x, p)
-    return _ntt.intt_cyclic(x, p)
+        return _ntt.intt_negacyclic(x, p, lazy=lazy)
+    return _ntt.intt_cyclic(x, p, lazy=lazy)
 
 
-def dyadic_mul_ref(a, b, q: int, mu: int):
-    return mulmod_barrett(jnp.asarray(a), jnp.asarray(b), jnp.uint32(q), jnp.uint32(mu))
+def dyadic_mul_ref(a, b, q: int, mu: int, lazy: bool = False):
+    a = jnp.asarray(a)
+    b = jnp.asarray(b)
+    qc = jnp.uint32(q)
+    if lazy:
+        r = mulmod_barrett_lazy(a, b, qc, jnp.uint32(mu))
+        return jnp.where(r >= qc, r - qc, r)
+    return mulmod_barrett(a, b, qc, jnp.uint32(mu))
 
 
-def dyadic_mac_ref(acc, a, b, q: int, mu: int):
-    p = mulmod_barrett(jnp.asarray(a), jnp.asarray(b), jnp.uint32(q), jnp.uint32(mu))
-    return addmod(jnp.asarray(acc), p, jnp.uint32(q))
+def dyadic_mac_ref(acc, a, b, q: int, mu: int, lazy: bool = False):
+    qc = jnp.uint32(q)
+    if lazy:
+        p = mulmod_barrett_lazy(jnp.asarray(a), jnp.asarray(b), qc, jnp.uint32(mu))
+        s = jnp.asarray(acc) + p
+        s = jnp.where(s >= (qc << 1), s - (qc << 1), s)
+        return jnp.where(s >= qc, s - qc, s)
+    p = mulmod_barrett(jnp.asarray(a), jnp.asarray(b), qc, jnp.uint32(mu))
+    return addmod(jnp.asarray(acc), p, qc)
 
 
 # ---------------------------------------------- multi-prime bank oracles
 
-def ntt_fwd_banks_ref(x, qs, tw, twp, pre, prep, negacyclic: bool):
+def ntt_fwd_banks_ref(x, qs, tw, twp, pre, prep, negacyclic: bool,
+                      lazy: bool = False, reduce_out: bool = True):
     """vmap over the prime axis: x (k, ..., n), per-prime tables stacked
-    on axis 0 (the TablePack layout).  Same math as the banks kernel."""
+    on axis 0 (the TablePack layout).  Same math as the banks kernel —
+    in lazy reduce_out=False mode the op SEQUENCE mirrors the kernel
+    exactly, so even the [0, 2q) representatives match bit-for-bit."""
 
     def per(xi, q, twi, twpi, ps, psp):
         q = jnp.uint32(q)
         if negacyclic:
-            xi = mulmod_shoup(xi, ps, psp, q)
-        return _ntt.cg_ntt(xi, twi, twpi, q, unroll=2)
+            xi = (mulmod_shoup_lazy if lazy else mulmod_shoup)(xi, ps, psp, q)
+        return _ntt.cg_ntt(xi, twi, twpi, q, unroll=2, lazy=lazy,
+                           reduce_out=reduce_out)
 
     return jax.vmap(per)(x, qs, tw, twp, pre, prep)
 
 
 def ntt_inv_banks_ref(x, qs, ninv, ninv_p, itw, itwp, post, postp,
-                      negacyclic: bool):
+                      negacyclic: bool, lazy: bool = False,
+                      reduce_out: bool = True):
     def per(xi, q, nv, nvp, itwi, itwpi, ips, ipsp):
         q = jnp.uint32(q)
-        xi = _ntt.cg_intt(xi, itwi, itwpi, 0, 0, q, apply_ninv=False, unroll=2)
+        xi = _ntt.cg_intt(xi, itwi, itwpi, 0, 0, q, apply_ninv=False, unroll=2,
+                          lazy=lazy, reduce_out=False)
+        mul = mulmod_shoup_lazy if (lazy and not reduce_out) else mulmod_shoup
         if negacyclic:
-            return mulmod_shoup(xi, ips, ipsp, q)       # psi^-i * n^-1 fused
-        return mulmod_shoup(xi, nv, nvp, q)
+            return mul(xi, ips, ipsp, q)                # psi^-i * n^-1 fused
+        return mul(xi, nv, nvp, q)
 
     return jax.vmap(per)(x, qs, ninv, ninv_p, itw, itwp, post, postp)
 
 
-def twiddle_mul_banks_ref(x, qs, w, wp):
+def twiddle_mul_banks_ref(x, qs, w, wp, lazy: bool = False):
     """Four-step twiddle correction: x (k, ..., n) times per-prime weight
     rows w/wp (k, n) mod qs (k,) — same math as the fused kernel."""
     ex = (1,) * (x.ndim - 2)
     k, n = w.shape
-    return mulmod_shoup(x, w.reshape((k,) + ex + (n,)),
-                        wp.reshape((k,) + ex + (n,)),
-                        qs.reshape((k,) + ex + (1,)))
+    mul = mulmod_shoup_lazy if lazy else mulmod_shoup
+    return mul(x, w.reshape((k,) + ex + (n,)),
+               wp.reshape((k,) + ex + (n,)),
+               qs.reshape((k,) + ex + (1,)))
 
 
 def galois_banks_ref(x, idx):
@@ -99,13 +126,21 @@ def galois_digits_banks_ref(x, idx):
     return jnp.take_along_axis(x, idx[None, None], axis=-1)
 
 
-def dyadic_inner_banks_ref(ext, evk, qs, mus):
+def dyadic_inner_banks_ref(ext, evk, qs, mus, lazy: bool = False):
     """ext: (d, k, B, n); evk: (d, k, n) shared or (d, k, B, n) per-batch
     key digits; qs/mus: (k,).  Accumulates the digit products in the
-    same order as the fused kernel (exact match)."""
+    same order as the fused kernel (exact match, both modes)."""
     q = qs[:, None, None]
     mu = mus[:, None, None]
     evk_b = evk if evk.ndim == 4 else evk[:, :, None, :]
+    if lazy:
+        prods = mulmod_barrett_lazy(ext, evk_b, q[None], mu[None])
+
+        def body(acc, p):
+            return lazy_addmod(acc, p, q), None
+
+        acc, _ = jax.lax.scan(body, prods[0], prods[1:])
+        return jnp.where(acc >= q, acc - q, acc)
     prods = mulmod_barrett(ext, evk_b, q[None], mu[None])
 
     def body(acc, p):

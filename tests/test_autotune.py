@@ -1,0 +1,198 @@
+"""Tile-resolution rules for ``kernels.autotune``.
+
+The invariants under test: explicit > pin > cache > (gated) measure >
+default; every path clamps to the batch; nothing measures implicitly
+(no env flag, or inside a jit trace) so jit-signature counts and the
+serve-path ``fresh_traces`` discipline stay intact.
+"""
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.kernels import autotune, ops
+from repro.core.params import make_ntt_params
+
+
+@pytest.fixture(autouse=True)
+def _clean(monkeypatch):
+    monkeypatch.delenv(autotune.ENV_PIN, raising=False)
+    monkeypatch.delenv(autotune.ENV_CACHE, raising=False)
+    monkeypatch.delenv(autotune.ENV_AUTOTUNE, raising=False)
+    autotune.clear()
+    yield
+    autotune.clear()
+
+
+def test_clamp_rule():
+    assert autotune.clamp(8, 1) == 1
+    assert autotune.clamp(8, 5) == 5
+    assert autotune.clamp(8, 100) == 8
+    assert autotune.clamp(0, 4) == 1
+    assert autotune.clamp(8, 0) == 1
+    assert autotune.clamp(8, -3) == 1
+
+
+def test_resolve_precedence():
+    # default: min(8, b)
+    assert autotune.resolve_tile("ntt", 1, 256, 100) == autotune.DEFAULT_TILE
+    assert autotune.resolve_tile("ntt", 1, 256, 3) == 3
+    # explicit beats everything, still clamped
+    assert autotune.resolve_tile("ntt", 1, 256, 5, tile=32) == 5
+    assert autotune.resolve_tile("ntt", 1, 256, 100, tile=16) == 16
+
+
+def test_env_pin(monkeypatch):
+    monkeypatch.setenv(autotune.ENV_PIN, "4")
+    assert autotune.resolve_tile("ntt", 1, 256, 100) == 4
+    assert autotune.resolve_tile("ntt", 1, 256, 2) == 2    # still clamped
+    # explicit argument outranks the pin
+    assert autotune.resolve_tile("ntt", 1, 256, 100, tile=16) == 16
+    # garbage pin falls through to the default, never raises
+    monkeypatch.setenv(autotune.ENV_PIN, "banana")
+    assert autotune.resolve_tile("ntt", 1, 256, 100) == autotune.DEFAULT_TILE
+
+
+def test_cache_hit_beats_default(monkeypatch):
+    key = (jax.default_backend(), "ntt", 1, 256, 100)
+    monkeypatch.setitem(autotune._MEM, key, 16)
+    assert autotune.resolve_tile("ntt", 1, 256, 100) == 16
+    # pin still outranks the cache
+    monkeypatch.setenv(autotune.ENV_PIN, "2")
+    assert autotune.resolve_tile("ntt", 1, 256, 100) == 2
+
+
+def test_no_measurement_without_flag(monkeypatch):
+    def boom(*a, **kw):
+        raise AssertionError("measure() ran without SCE_NTT_AUTOTUNE=1")
+
+    monkeypatch.setattr(autotune, "measure", boom)
+    assert autotune.resolve_tile("ntt_banks", 2, 256, 100) == \
+        autotune.DEFAULT_TILE
+
+
+def test_no_measurement_inside_trace(monkeypatch):
+    """Even with the flag on, a resolve inside a jit trace must take the
+    deterministic path — timing a trace would poison the cache AND mint
+    a new jit signature per candidate."""
+    monkeypatch.setenv(autotune.ENV_AUTOTUNE, "1")
+
+    def boom(*a, **kw):
+        raise AssertionError("measure() ran inside a jit trace")
+
+    monkeypatch.setattr(autotune, "measure", boom)
+    import jax.numpy as jnp
+
+    @jax.jit
+    def prog(x):
+        t = autotune.resolve_tile("ntt_banks", 2, 256, 100)
+        return x * t
+
+    out = prog(jnp.ones((2,), jnp.uint32))
+    assert int(out[0]) == autotune.DEFAULT_TILE
+
+
+def test_measure_gated_flag_runs_fake_runner(monkeypatch):
+    """With the flag on and outside a trace, resolve measures once and
+    caches the argmin; the second resolve is a pure cache hit."""
+    calls = []
+
+    def fake_runner(k, n, b):
+        def run(tile):
+            calls.append(tile)
+            return np.zeros((1,), np.uint32)
+        return run
+
+    fake_clock = iter(range(1000))
+    times = {1: 9.0, 2: 5.0, 4: 1.0, 8: 7.0}
+
+    def fake_measure_time(run, tile):
+        run(tile)
+        return times[tile]
+
+    monkeypatch.setenv(autotune.ENV_AUTOTUNE, "1")
+    monkeypatch.setitem(autotune._RUNNERS, "fake_fam", fake_runner)
+    # patch the timer indirection: drive measure() through a shim that
+    # reuses its candidate/caching logic but deterministic "times"
+    real_measure = autotune.measure
+
+    def shim(family, k, n, b, *, reps=3):
+        key = (jax.default_backend(), family, int(k), int(n), int(b))
+        run = autotune._RUNNERS[family](k, n, b)
+        cands = sorted({autotune.clamp(t, b) for t in
+                        autotune.CANDIDATE_TILES})
+        best = min(cands, key=lambda t: fake_measure_time(run, t))
+        autotune._MEM[key] = best
+        return best
+
+    monkeypatch.setattr(autotune, "measure", shim)
+    got = autotune.resolve_tile("fake_fam", 1, 128, 8)
+    assert got == 4 and calls == [1, 2, 4, 8]
+    calls.clear()
+    monkeypatch.setattr(autotune, "measure", real_measure)
+    assert autotune.resolve_tile("fake_fam", 1, 128, 8) == 4
+    assert calls == []      # cache hit, no re-measure
+
+
+def test_real_measure_smoke(monkeypatch):
+    """The real timer path end to end on a tiny workload: returns a
+    candidate, caches it, and ensure() reuses the entry."""
+    monkeypatch.setenv(autotune.ENV_AUTOTUNE, "1")
+    got = autotune.measure("ntt", 1, 64, 2, reps=1)
+    assert got in (1, 2)
+    assert autotune.resolve_tile("ntt", 1, 64, 2) == got
+    assert autotune.ensure("ntt", 1, 64, 2) == got
+
+
+def test_disk_cache_roundtrip(tmp_path, monkeypatch):
+    path = tmp_path / "tiles.json"
+    monkeypatch.setenv(autotune.ENV_CACHE, str(path))
+    key = (jax.default_backend(), "ntt_banks", 3, 1024, 16)
+    autotune._MEM[key] = 16
+    autotune._save_disk()
+    data = json.loads(path.read_text())
+    assert data["entries"]["|".join(str(p) for p in key)] == 16
+    # a fresh process (simulated by clear + reload) sees the entry
+    autotune.clear()
+    autotune._DISK_LOADED = False
+    assert autotune.resolve_tile("ntt_banks", 3, 1024, 16) == 16
+
+
+def test_disk_cache_corrupt_is_ignored(tmp_path, monkeypatch):
+    path = tmp_path / "tiles.json"
+    path.write_text("{ not json")
+    monkeypatch.setenv(autotune.ENV_CACHE, str(path))
+    autotune._DISK_LOADED = False
+    assert autotune.resolve_tile("ntt", 1, 256, 100) == autotune.DEFAULT_TILE
+
+
+def test_dump_and_table(tmp_path):
+    key = (jax.default_backend(), "dyadic_mul", 1, 512, 8)
+    autotune._MEM[key] = 2
+    t = autotune.table()
+    assert t["backend"] == jax.default_backend()
+    out = tmp_path / "snap.json"
+    autotune.dump(str(out))
+    assert json.loads(out.read_text())["entries"][
+        "|".join(str(p) for p in key)] == 2
+
+
+def test_ops_honors_env_pin(monkeypatch):
+    """End to end: the pin reaches the kernel dispatch (captured via the
+    kernel wrapper) and is still clamped to the batch."""
+    from repro.kernels import ntt_kernel
+    p = make_ntt_params(256)
+    seen = {}
+
+    def fake_fwd(x2, *args, tile, **kw):
+        seen["tile"] = tile
+        import jax.numpy as jnp
+        return jnp.zeros_like(x2)
+
+    monkeypatch.setattr(ntt_kernel, "ntt_fwd_pallas", fake_fwd)
+    monkeypatch.setenv(autotune.ENV_PIN, "2")
+    rng = np.random.default_rng(7)
+    x = rng.integers(0, p.q, size=(8, 256), dtype=np.uint32)
+    ops.ntt(x, p, use_pallas=True)
+    assert seen["tile"] == 2

@@ -86,3 +86,96 @@ def test_barrett_other_primes(bits):
         a, b = _rand(1024, q), _rand(1024, q)
         got = np.asarray(mm.mulmod_barrett(jnp.asarray(a), jnp.asarray(b), jnp.uint32(q), jnp.uint32(mu)))
         assert np.array_equal(got, mm.mulmod_np(a, b, q))
+
+
+# ------------------------------------------------------- lazy reduction
+#
+# The lazy contract (values in [0, 2q) between stages): each helper must
+# (a) stay inside its band, (b) stay congruent mod q, and (c) match its
+# numpy oracle bit-for-bit INCLUDING the representative — the kernels
+# hand unreduced values across stage boundaries, so the representative
+# itself is part of the pinned behavior.
+
+@settings(max_examples=200, deadline=None)
+@given(a=st.integers(0, 2 * Q - 1), b=st.integers(0, 2 * Q - 1))
+def test_lazy_addsub_property(a, b):
+    ga = int(mm.lazy_addmod(jnp.uint32(a), jnp.uint32(b), jnp.uint32(Q)))
+    gs = int(mm.lazy_submod(jnp.uint32(a), jnp.uint32(b), jnp.uint32(Q)))
+    assert ga < 2 * Q and ga % Q == (a + b) % Q
+    assert gs < 2 * Q and gs % Q == (a - b) % Q
+    assert ga == int(mm.lazy_addmod_np(a, b, Q))
+    assert gs == int(mm.lazy_submod_np(a, b, Q))
+
+
+@settings(max_examples=200, deadline=None)
+@given(x=st.integers(0, 2**32 - 1), w=st.integers(0, Q - 1))
+def test_shoup_lazy_property(x, w):
+    """mulmod_shoup_lazy accepts ANY u32 x and lands in [0, 2q)."""
+    wp = mm.shoup_precompute(w, Q)
+    got = int(mm.mulmod_shoup_lazy(jnp.uint32(x), jnp.uint32(w),
+                                   jnp.uint32(wp), jnp.uint32(Q)))
+    assert got < 2 * Q and got % Q == (x * w) % Q
+    assert got == int(mm.mulmod_shoup_lazy_np(x, w, Q))
+
+
+@settings(max_examples=200, deadline=None)
+@given(a=st.integers(0, Q - 1), b=st.integers(0, Q - 1))
+def test_barrett_lazy_property(a, b):
+    mu = mm.barrett_precompute(Q)
+    got = int(mm.mulmod_barrett_lazy(jnp.uint32(a), jnp.uint32(b),
+                                     jnp.uint32(Q), jnp.uint32(mu)))
+    assert got < 2 * Q and got % Q == (a * b) % Q
+    assert got == int(mm.mulmod_barrett_lazy_np(a, b, Q))
+
+
+def test_lazy_band_edges_exact():
+    """All pairs over the {0, 1, q-1, q, q+1, 2q-1} boundary set — the
+    exact band edges the hypothesis sweep may or may not hit."""
+    edges = np.array([0, 1, Q - 1, Q, Q + 1, 2 * Q - 1], dtype=np.uint32)
+    a = np.repeat(edges, len(edges))
+    b = np.tile(edges, len(edges))
+    qa = jnp.uint32(Q)
+    ga = np.asarray(mm.lazy_addmod(jnp.asarray(a), jnp.asarray(b), qa))
+    gs = np.asarray(mm.lazy_submod(jnp.asarray(a), jnp.asarray(b), qa))
+    assert np.array_equal(ga, mm.lazy_addmod_np(a, b, Q))
+    assert np.array_equal(gs, mm.lazy_submod_np(a, b, Q))
+    assert ga.max() < 2 * Q and gs.max() < 2 * Q
+    w = Q - 1
+    wp = mm.shoup_precompute(w, Q)
+    gm = np.asarray(mm.mulmod_shoup_lazy(jnp.asarray(a), jnp.uint32(w),
+                                         jnp.uint32(wp), qa))
+    assert np.array_equal(gm, mm.mulmod_shoup_lazy_np(a, w, Q))
+    assert gm.max() < 2 * Q
+
+
+def test_barrett_precompute_range_valueerror():
+    """The 2^28 < q < 2^30 guard is a ValueError, not a bare assert."""
+    for bad in (0, 1, 1 << 28, 1 << 30, (1 << 31) - 1):
+        with pytest.raises(ValueError, match="barrett_precompute"):
+            mm.barrett_precompute(bad)
+    assert mm.barrett_precompute(Q) == (1 << 60) // Q
+
+
+def test_barrett_precompute_guard_survives_python_O():
+    """Under ``python -O`` an assert is stripped; the guard must not be.
+    Runs the check in a real ``-O`` subprocess."""
+    import os
+    import subprocess
+    import sys
+    src = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), os.pardir, "src"))
+    code = (
+        "from repro.core.modmath import barrett_precompute\n"
+        "try:\n"
+        "    barrett_precompute(1 << 31)\n"
+        "except ValueError:\n"
+        "    print('GUARDED')\n"
+        "else:\n"
+        "    print('UNGUARDED')\n"
+    )
+    env = dict(os.environ)
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-O", "-c", code], env=env,
+                         capture_output=True, text=True, timeout=300)
+    assert out.returncode == 0, out.stderr
+    assert "GUARDED" in out.stdout and "UNGUARDED" not in out.stdout
