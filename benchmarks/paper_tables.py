@@ -34,6 +34,18 @@
                       trace (serve_async/sync_throughput — gated: async
                       must win) + p99/p50 request latency under a
                       seeded Poisson offered load (serve_slo_p99)
+  serve_slo_sweep     offered-load sweep: p50/p99 vs Poisson arrival
+                      rate at 25/50/70/90/110% of measured capacity
+                      (serve_slo_sweep_l{pct} rows; gated on presence
+                      + monotone offered load only)
+  ckks_multiply_sharded_d4  batch-32 multiply through EvalPlan(mesh=
+                      4 x "b") on 4 forced host devices (child process)
+                      vs single-device — bit-exact always, >= 2x on
+                      multi-core runners (the PR 8 smoke gate)
+  scaling_table       ntt-aie-shaped device-count table (1/2/4):
+                      wall/throughput/speedup/efficiency per count —
+                      the --scaling subset CI writes to
+                      BENCH_scaling.json
   validation_1e5      scaled version of §VII.C's 1e5 random-NTT check
 
 Each function returns a list of (name, us_per_call, derived) rows.
@@ -659,6 +671,231 @@ def serve_slo():
     ]
 
 
+def serve_slo_sweep():
+    """Offered-load sweep (the PR 6 leftover): p50/p99 request latency
+    vs Poisson arrival rate at ~5 operating points — 25/50/70/90/110%
+    of the engine's measured backlog capacity — over the same seeded
+    mixed trace as ``serve_slo``.  The 110% point intentionally offers
+    more than the drain sustains: the queue grows for the whole trace
+    and the tail shows saturation, which is the part of the curve an
+    operator actually needs (where the knee is, not just that one SLO
+    point holds).
+
+    Rows: ``serve_slo_sweep_l{25,50,70,90,110}``; us = p99 latency at
+    that point; derived carries ``offered=<rate>`` req/s.  The gate
+    (benchmarks/check_smoke.py) checks row presence and that offered
+    load increases monotonically across the family — NEVER absolute
+    latency: these are queueing percentiles on a shared CI box, and the
+    knee's position moves with host load even when the engine is fine."""
+    from repro.fhe import linalg
+    from repro.fhe.ckks import CkksContext
+    from repro.fhe.serve import CkksServeEngine, synthetic_trace
+
+    ctx = CkksContext(n=1024, levels=2, scale_bits=28, seed=19)
+    rng = np.random.default_rng(20)
+    d = 16
+    M = linalg.PtMatrix.encode(ctx, rng.uniform(-0.5, 0.5, (d, d)))
+    N, tile = 48, 4
+    reqs, _ = synthetic_trace(ctx, N, seed=21, matrix=M)
+    plan = ctx.plan()
+    engine = CkksServeEngine(plan, batch_tile=tile, max_batch=8 * tile)
+    sizes = tuple(range(tile, 8 * tile + 1, tile))
+    plan.prepare(rotations=(1, 2), conjugate=True, batch_sizes=sizes,
+                 matvecs=(M,))
+    plan.prepare(basis=ctx.qs[:-1], rotations=(1, 2), conjugate=True,
+                 batch_sizes=sizes)
+    engine.run_async(list(reqs))                 # warm every signature
+    engine.run_async(list(reqs))                 # measured backlog capacity
+    cap = N / engine.stats["wall_s"]             # req/s the drain sustains
+
+    rows = []
+    for pct in (25, 50, 70, 90, 110):
+        rate = cap * pct / 100.0
+        reqs_p, arr = synthetic_trace(ctx, N, seed=21, rate=rate, matrix=M)
+        engine.run_async(reqs_p, arr)
+        lat = engine.stats["latency_us"]
+        rows.append((
+            f"serve_slo_sweep_l{pct}", lat["p99"],
+            f"offered={rate:.1f} req/s ({pct}% of {cap:.0f} req/s "
+            f"capacity, Poisson): p50={lat['p50']:.0f}us "
+            f"p99={lat['p99']:.0f}us mean={lat['mean']:.0f}us "
+            f"over {lat['count']} req"))
+    return rows
+
+
+# ------------------------------------------------- multi-device scaling
+
+def _scaling_child(counts, *, n=1024, B=32, timeout=540):
+    """Run the device-scaling measurement in a CHILD python with 4
+    forced host devices (works on any host — the 1-device container
+    included), timing ``multiply_many`` over B ciphertexts through
+    ``EvalPlan(mesh=...)`` at each device count in ``counts`` with
+    paired passes, plus a bit-exactness check of the widest mesh
+    against the single-device program.  Returns the child's parsed JSON
+    record, or ``None`` when the environment cannot deliver the
+    simulated devices (sandbox spawn limits, stalls) — callers emit a
+    1-device fallback row so the smoke gate's presence check survives.
+
+    The child inherits the FULL parent env (plus the forced-device
+    XLA flag): dropping ``JAX_PLATFORMS`` historically sent jax into
+    the TPU-metadata retry loop and hung the bench."""
+    import json as _json
+    import subprocess
+    import sys as _sys
+
+    script = f"""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=4")
+import json, time
+import numpy as np
+import jax
+from repro import compat
+from repro.fhe.ckks import CkksContext
+from repro.fhe.evalplan import EvalPlan
+
+counts = {list(counts)!r}
+if jax.device_count() < max(counts):
+    print(json.dumps({{"devices": jax.device_count()}}))
+    raise SystemExit(0)
+ctx = CkksContext(n={n}, levels=2, seed=23)
+rng = np.random.default_rng(5)
+def enc():
+    z = rng.uniform(-1, 1, ctx.slots) + 1j * rng.uniform(-1, 1, ctx.slots)
+    return ctx.encrypt(ctx.encode(z))
+cts = [enc() for _ in range({B})]
+bts = [enc() for _ in range({B})]
+plans = {{}}
+for d in counts:
+    plans[d] = (ctx.plan() if d == 1 else EvalPlan(
+        ctx, mesh=compat.make_mesh((d,), ("b",),
+                                   devices=jax.devices()[:d])))
+def run(p):
+    out = p.multiply_many(cts, bts)
+    jax.block_until_ready([x.c0.data for x in out] +
+                          [x.c1.data for x in out])
+    return out
+outs = {{d: run(p) for d, p in plans.items()}}      # compile + warm
+exact = all(
+    np.array_equal(np.asarray(a.c0.data), np.asarray(b.c0.data))
+    and np.array_equal(np.asarray(a.c1.data), np.asarray(b.c1.data))
+    for a, b in zip(outs[min(counts)], outs[max(counts)]))
+best = None                                         # paired passes
+for _ in range(3):
+    ts = {{}}
+    for d, p in plans.items():
+        t0 = time.perf_counter()
+        for _ in range(3):
+            run(p)
+        ts[d] = (time.perf_counter() - t0) / 3 * 1e6
+    if best is None or sum(ts.values()) < sum(best.values()):
+        best = ts
+print(json.dumps({{"devices": jax.device_count(), "b": {B},
+                   "exact": bool(exact),
+                   "times_us": {{str(d): t for d, t in best.items()}}}}))
+"""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    try:
+        r = subprocess.run([_sys.executable, "-c", script],
+                           capture_output=True, text=True, timeout=timeout,
+                           env=env, cwd=repo)
+    except subprocess.TimeoutExpired:
+        return None
+    for line in reversed(r.stdout.strip().splitlines()):
+        try:
+            rec = _json.loads(line)
+        except ValueError:
+            continue
+        return rec if "times_us" in rec else None
+    return None
+
+
+def ckks_multiply_sharded_d4():
+    """The PR 8 headline row (gated by benchmarks/check_smoke.py):
+    batch-32 ciphertext multiply through ``EvalPlan(mesh=4 x "b")`` on
+    4 forced host devices vs the single-device program, bit-exactness
+    required always.  The derived string carries ``devices=``,
+    ``speedup=x`` and ``exact=`` for the gate: on a multi-core runner
+    with real simulated devices the sharded dispatch must reach 2x; a
+    1-core container (4 simulated devices time-share one core, nothing
+    to win) or a sandbox that cannot spawn the child reports a
+    devices=1 fallback measured in-process through a mesh of ONE — the
+    same sharded code path, so exactness is still a real check."""
+    rec = _scaling_child((1, 4))
+    if rec is not None:
+        t1 = rec["times_us"]["1"]
+        t4 = rec["times_us"]["4"]
+        return [("ckks_multiply_sharded_d4", t4,
+                 f"devices=4 B={rec['b']} n=2^10: sharded {t4:.0f}us vs "
+                 f"single {t1:.0f}us speedup=x{t1 / t4:.2f} "
+                 f"exact={'OK' if rec['exact'] else 'FAIL'} "
+                 f"({os.cpu_count() or 1} cores)")]
+    # fallback: no simulated devices — mesh-of-1 in-process, same
+    # shard_map path, real bit-exactness, presence gate satisfied
+    from repro import compat
+    from repro.fhe.ckks import CkksContext
+    from repro.fhe.evalplan import EvalPlan
+
+    ctx = CkksContext(n=1024, levels=2, seed=23)
+    rng = np.random.default_rng(5)
+    B = 32
+
+    def enc():
+        z = rng.uniform(-1, 1, ctx.slots) + 1j * rng.uniform(-1, 1, ctx.slots)
+        return ctx.encrypt(ctx.encode(z))
+
+    cts = [enc() for _ in range(B)]
+    bts = [enc() for _ in range(B)]
+    plain = ctx.plan()
+    sharded = EvalPlan(ctx, mesh=compat.make_mesh((1,), ("b",)))
+
+    def block(out):
+        jax.block_until_ready([x.c0.data for x in out] +
+                              [x.c1.data for x in out])
+        return out
+
+    ref = block(plain.multiply_many(cts, bts))
+    got = block(sharded.multiply_many(cts, bts))
+    exact = all(
+        np.array_equal(np.asarray(a.c0.data), np.asarray(b.c0.data))
+        and np.array_equal(np.asarray(a.c1.data), np.asarray(b.c1.data))
+        for a, b in zip(ref, got))
+    ts, ta = _paired_time(
+        [lambda: block(plain.multiply_many(cts, bts)),
+         lambda: block(sharded.multiply_many(cts, bts))])
+    return [("ckks_multiply_sharded_d4", ta,
+             f"devices=1 (no simulated 4-device child) B={B} n=2^10: "
+             f"mesh-of-1 {ta:.0f}us vs single {ts:.0f}us speedup=x1.00 "
+             f"exact={'OK' if exact else 'FAIL'} "
+             f"({os.cpu_count() or 1} cores)")]
+
+
+def scaling_table():
+    """The ntt-aie ``plot_efficiency`` report shape over device counts
+    1/2/4 (simulated host devices): per-count wall, throughput, speedup
+    and parallel efficiency for the batch-32 sharded multiply.  Written
+    to ``BENCH_scaling.json`` by the CI forced-4-device job."""
+    rec = _scaling_child((1, 2, 4))
+    if rec is None:
+        return [("ckks_multiply_scale_d1", 0.0,
+                 "SKIP: simulated-device child unavailable")]
+    t1 = rec["times_us"]["1"]
+    rows = []
+    for d in (1, 2, 4):
+        td = rec["times_us"][str(d)]
+        rows.append((
+            f"ckks_multiply_scale_d{d}", td,
+            f"devices={d} B={rec['b']} n=2^10: "
+            f"{rec['b'] / (td / 1e6):.0f} mul/s "
+            f"speedup=x{t1 / td:.2f} "
+            f"efficiency={t1 / (td * d) * 100:.0f}% "
+            f"exact={'OK' if rec['exact'] else 'FAIL'} "
+            f"({os.cpu_count() or 1} cores)"))
+    return rows
+
+
 # ---------------------------------------------------------- validation
 
 def validation_1e5():
@@ -684,7 +921,14 @@ def validation_1e5():
 ALL = [table2_mulmod, table3_ntt128, fig21_large_ntt, ntt_fourstep_2_14,
        fig22_keyswitch, keyswitch_banks, keyswitch_banks_2_14, lazy_kernels,
        ckks_ops, ckks_batched_ops, hoisted_rotations, serve_slo,
+       serve_slo_sweep, ckks_multiply_sharded_d4, scaling_table,
        validation_1e5]
+
+# --scaling subset: the ntt-aie-shaped device-count table + the offered-
+# load sweep — what the CI forced-4-device job writes to
+# BENCH_scaling.json (it forces 4 host devices via XLA_FLAGS, so the
+# child measurement sees real simulated devices there)
+SCALING = [scaling_table, serve_slo_sweep]
 
 # fast subset for CI / --smoke: NTT-128 rows, the bank-parallel keyswitch
 # throughput datapoint, the large-N (2^14) four-step + keyswitch rows,
@@ -699,6 +943,11 @@ ALL = [table2_mulmod, table3_ntt128, fig21_large_ntt, ntt_fourstep_2_14,
 # and the lazy-reduction A/B rows (gated: lazy NTT/keyswitch must not
 # lose to eager, and the autotuned tile must stay within tolerance of
 # the fixed tile=8 baseline; exact=OK pins lazy == eager bit-for-bit)
+# PR 8 adds the offered-load sweep rows (gated on presence + monotone
+# offered load only) and the sharded-vs-single multiply row (gated:
+# bit-exact always; >= 2x speedup only when the child delivered 4
+# simulated devices AND the checking host has > 1 core to back them)
 SMOKE = [table3_ntt128, keyswitch_banks, ntt_fourstep_2_14,
          keyswitch_banks_2_14, lazy_kernels, ckks_ops, ckks_batched_ops,
-         hoisted_rotations, serve_slo]
+         hoisted_rotations, serve_slo, serve_slo_sweep,
+         ckks_multiply_sharded_d4]

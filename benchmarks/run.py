@@ -44,12 +44,17 @@ def main() -> None:
     ap.add_argument("--skip-slow", action="store_true")
     ap.add_argument("--smoke", action="store_true",
                     help="fast CI subset; nonzero exit on any ERROR row")
+    ap.add_argument("--scaling", action="store_true",
+                    help="device-scaling subset (ntt-aie-shaped table + "
+                         "offered-load sweep) — the forced-4-device CI "
+                         "job's BENCH_scaling.json")
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="also write rows as a JSON record (bench trajectory)")
     args = ap.parse_args()
 
     from benchmarks import paper_tables
-    fns = paper_tables.SMOKE if args.smoke else paper_tables.ALL
+    fns = (paper_tables.SCALING if args.scaling
+           else paper_tables.SMOKE if args.smoke else paper_tables.ALL)
     failed = False
     rows = []
     print("name,us_per_call,derived")
@@ -66,7 +71,8 @@ def main() -> None:
                          "derived": f"ERROR: {type(e).__name__}: {e}"})
             print(f"{fn.__name__},NaN,ERROR: {type(e).__name__}: {e}")
     if args.json:
-        rec = {"suite": "smoke" if args.smoke else "all",
+        rec = {"suite": ("scaling" if args.scaling
+                         else "smoke" if args.smoke else "all"),
                "unix_time": int(time.time()),
                "platform": platform.platform(),
                "git": os.environ.get("GITHUB_SHA", ""),
@@ -81,7 +87,7 @@ def main() -> None:
         tile_path = os.path.splitext(args.json)[0] + "_autotune.json"
         autotune.dump(tile_path)
         print(f"# wrote autotune table to {tile_path}", file=sys.stderr)
-    if args.smoke and failed:
+    if (args.smoke or args.scaling) and failed:
         sys.exit(1)
 
     # roofline summaries from the dry-run sweep (if present)

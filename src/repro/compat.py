@@ -36,3 +36,24 @@ def use_mesh(mesh):
     if hasattr(jax, "set_mesh"):
         return jax.set_mesh(mesh)
     return mesh
+
+
+def make_mesh(shape, axis_names, devices=None):
+    """``jax.make_mesh`` where available; otherwise (or when an explicit
+    ``devices`` subset is requested — e.g. a scaling sweep meshing over
+    the first d of the host's devices) build ``jax.sharding.Mesh`` from
+    the device list directly."""
+    import math
+
+    import numpy as np
+
+    if devices is None and hasattr(jax, "make_mesh"):
+        return jax.make_mesh(tuple(shape), tuple(axis_names))
+    devs = list(devices) if devices is not None else jax.devices()
+    need = math.prod(shape)
+    if len(devs) < need:
+        raise ValueError(
+            f"make_mesh: mesh shape {tuple(shape)} needs {need} devices, "
+            f"have {len(devs)}")
+    return jax.sharding.Mesh(
+        np.array(devs[:need]).reshape(tuple(shape)), tuple(axis_names))

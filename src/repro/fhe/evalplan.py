@@ -48,6 +48,19 @@ stacks; no Python loop over primes, digits or rows survives in any of
 these paths.  The host-orchestrated ``fhe.keyswitch`` module remains as
 the bit-exact oracle the tests pin against.
 
+Scale-out: ``EvalPlan(mesh=...)`` shards the batched programs over a
+device mesh.  A mesh axis named "b" splits the ciphertext batch axis
+(and the hoisted program's rotation axis) across devices via
+``shard_map`` twins of the ``*_many`` programs
+(``sharded_many_programs``) — per-shard compute only, no collectives,
+tables/keys replicated; a mesh axis named "k" commits the RNS prime
+axis of the residue stacks to the mesh (``NamedSharding``) and lets
+XLA's SPMD partitioner insert exactly the collectives the
+decompose/mod-down cross-prime reductions genuinely need.  Either way
+the outputs stay bit-identical to the unsharded programs (integer
+modular arithmetic has no association-order effects), pinned by
+tests/test_sharded_eval.py.
+
 Key generation is host-side by design (the CMOS coprocessor role): the
 plan asks its ``CkksContext`` for key material once per basis and keeps
 only the stacked device tensors.
@@ -60,7 +73,9 @@ from collections import deque
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec
 
+from repro import compat
 from repro.core.modmath import addmod, mulmod_barrett
 from repro.core.params import galois_eval_perm
 from repro.fhe import batched as FB
@@ -200,6 +215,28 @@ def galois_ks_banks(c0, c1, idx, evk_b, evk_a, t, fsp=None, *,
 _DONATE_BANKS = () if jax.default_backend() == "cpu" else (0, 1)
 
 
+# The batched program BODIES are plain functions, shared by two jitted
+# skins: the module-level single-device programs below, and the
+# per-mesh ``shard_map`` twins ``sharded_many_programs`` builds (each
+# shard runs the identical pipeline on its local batch rows, so the
+# twins are bit-identical by construction).
+
+def _multiply_many_impl(a0, a1, b0, b1, evk_b, evk_a, t, fsp=None,
+                        use_pallas: bool | None = None,
+                        tile: int | None = None):
+    k = a0.shape[1]
+    q = t["qs"][:k][None, :, None]
+    mu = t["mu"][:k][None, :, None]
+    d0 = mulmod_barrett(a0, b0, q, mu)
+    d1 = addmod(mulmod_barrett(a0, b1, q, mu),
+                mulmod_barrett(a1, b0, q, mu), q)
+    d2 = mulmod_barrett(a1, b1, q, mu)
+    ks0, ks1 = batched_keyswitch(d2.swapaxes(0, 1), evk_b, evk_a, t, fsp=fsp,
+                                 use_pallas=use_pallas, tile=tile)
+    return (addmod(d0, ks0.swapaxes(0, 1), q),
+            addmod(d1, ks1.swapaxes(0, 1), q))
+
+
 @functools.partial(jax.jit, static_argnames=("use_pallas", "tile"),
                    donate_argnums=_DONATE_BANKS)
 def multiply_many_banks(a0, a1, b0, b1, evk_b, evk_a, t, fsp=None, *,
@@ -220,17 +257,18 @@ def multiply_many_banks(a0, a1, b0, b1, evk_b, evk_a, t, fsp=None, *,
     (``retire_donated``) — PJRT invalidates a donated handle at
     dispatch, and destroying it while the program is still pending
     blocks the host on the whole dependency chain."""
-    k = a0.shape[1]
-    q = t["qs"][:k][None, :, None]
-    mu = t["mu"][:k][None, :, None]
-    d0 = mulmod_barrett(a0, b0, q, mu)
-    d1 = addmod(mulmod_barrett(a0, b1, q, mu),
-                mulmod_barrett(a1, b0, q, mu), q)
-    d2 = mulmod_barrett(a1, b1, q, mu)
-    ks0, ks1 = batched_keyswitch(d2.swapaxes(0, 1), evk_b, evk_a, t, fsp=fsp,
-                                 use_pallas=use_pallas, tile=tile)
-    return (addmod(d0, ks0.swapaxes(0, 1), q),
-            addmod(d1, ks1.swapaxes(0, 1), q))
+    return _multiply_many_impl(a0, a1, b0, b1, evk_b, evk_a, t, fsp,
+                               use_pallas, tile)
+
+
+def _rescale_many_impl(c0, c1, t, fsp=None, use_pallas: bool | None = None,
+                       tile: int | None = None):
+    B, kp1, n = c0.shape
+    acc = jnp.stack([c0, c1], axis=1)                  # (B, 2, k+1, n)
+    acc = acc.reshape(2 * B, kp1, n).swapaxes(0, 1)    # (k+1, 2B, n)
+    out = mod_down_banks(acc, t, fsp=fsp, use_pallas=use_pallas, tile=tile)
+    out = out.swapaxes(0, 1).reshape(B, 2, kp1 - 1, n)
+    return out[:, 0], out[:, 1]
 
 
 @functools.partial(jax.jit, static_argnames=("use_pallas", "tile"))
@@ -242,12 +280,7 @@ def rescale_many_banks(c0, c1, t, fsp=None, *, use_pallas: bool | None = None,
     No buffer donation here: the outputs are (B, k, n) — one prime row
     smaller than the (B, k+1, n) inputs — so XLA could never alias them
     and donation would only emit unusable-donation warnings."""
-    B, kp1, n = c0.shape
-    acc = jnp.stack([c0, c1], axis=1)                  # (B, 2, k+1, n)
-    acc = acc.reshape(2 * B, kp1, n).swapaxes(0, 1)    # (k+1, 2B, n)
-    out = mod_down_banks(acc, t, fsp=fsp, use_pallas=use_pallas, tile=tile)
-    out = out.swapaxes(0, 1).reshape(B, 2, kp1 - 1, n)
-    return out[:, 0], out[:, 1]
+    return _rescale_many_impl(c0, c1, t, fsp, use_pallas, tile)
 
 
 @functools.partial(jax.jit, static_argnames=("use_pallas", "tile"))
@@ -272,6 +305,13 @@ def hoisted_rotations_banks(c0, c1, idx, evk_b, evk_a, t, fsp=None, *,
     all 2R accumulator halves; the R axis folds into the existing
     (prime, batch_tile) kernel grids, so there is no Python loop over
     rotations or primes anywhere in the path."""
+    return _hoisted_rotations_impl(c0, c1, idx, evk_b, evk_a, t, fsp,
+                                   use_pallas, tile)
+
+
+def _hoisted_rotations_impl(c0, c1, idx, evk_b, evk_a, t, fsp=None,
+                            use_pallas: bool | None = None,
+                            tile: int | None = None):
     k, n = c0.shape
     R = idx.shape[0]
     q = t["qs"][:k][:, None, None]
@@ -308,6 +348,13 @@ def galois_ks_many_banks(c0, c1, idx, evk_b, evk_a, t, fsp=None, *,
     see ``multiply_many_banks`` for the policy and the
     pending-destructor hazard); the key/idx/table operands are NOT —
     they live in the plan's caches and must survive the dispatch."""
+    return _galois_ks_many_impl(c0, c1, idx, evk_b, evk_a, t, fsp,
+                                use_pallas, tile)
+
+
+def _galois_ks_many_impl(c0, c1, idx, evk_b, evk_a, t, fsp=None,
+                         use_pallas: bool | None = None,
+                         tile: int | None = None):
     k = c0.shape[1]
     q = t["qs"][:k][None, :, None]
     c0g = ops.galois_banks(c0, idx, use_pallas=use_pallas, tile=tile,
@@ -442,6 +489,62 @@ _JITTED_PROGRAMS = (multiply_banks, rescale_banks, galois_ks_banks,
                     plain_mac_banks, accumulate_banks,
                     _stack_banks, _unstack_banks)
 
+# The per-mesh ``shard_map`` twins register here as they are built, so
+# ``trace_count`` keeps covering every compiled signature in the process
+# (a sharded serve loop's ``fresh_traces`` discipline is the same as the
+# single-device one).
+_SHARDED_PROGRAMS: list = []
+
+
+@functools.lru_cache(maxsize=None)
+def sharded_many_programs(mesh, use_pallas: bool | None = None,
+                          tile: int | None = None) -> dict:
+    """Jitted ``shard_map`` twins of the batched programs over ``mesh``'s
+    "b" axis: the leading ciphertext-batch axis (the hoisted program's
+    rotation axis) splits across devices, tables/keys replicate (``P()``
+    — the ``NamedSharding``-replicated convention the README documents),
+    and each shard runs the IDENTICAL pipeline body on its local rows.
+    No collectives anywhere: batch rows never interact, so the gathered
+    result is bit-identical to the single-device programs (pinned in
+    tests/test_sharded_eval.py).  Callers pad the batch to a multiple of
+    the axis size first (``EvalPlan._pad_batch``).
+
+    Five programs: ``multiply`` / ``rescale`` / ``galois_shared`` (one
+    gather row + key for the whole batch) / ``galois_mixed``
+    (per-ciphertext rows + (k, k+1, B, n) key stacks, both batch-sharded)
+    / ``hoisted`` (c0/c1 replicated, the R rotation axis sharded — each
+    shard pays its own digit decomposition, trading D-1 extra decomposes
+    for a collective-free program).
+
+    Cached per (mesh, use_pallas, tile) — ``Mesh`` is hashable — and
+    appended to ``_SHARDED_PROGRAMS`` for ``trace_count``."""
+    ct = PartitionSpec("b")                    # leading batch axis sharded
+    rep = PartitionSpec()                      # replicated tables/keys
+    key_b = PartitionSpec(None, None, "b")     # (k, k+1, B, n) key stacks
+    col_b = PartitionSpec(None, "b")           # (k, R, n) hoisted outputs
+    kw = dict(use_pallas=use_pallas, tile=tile)
+
+    def build(impl, in_specs, out_specs):
+        fn = jax.jit(compat.shard_map(functools.partial(impl, **kw),
+                                      mesh=mesh, in_specs=in_specs,
+                                      out_specs=out_specs))
+        _SHARDED_PROGRAMS.append(fn)
+        return fn
+
+    return {
+        "multiply": build(_multiply_many_impl,
+                          (ct, ct, ct, ct, rep, rep, rep, rep), (ct, ct)),
+        "rescale": build(_rescale_many_impl, (ct, ct, rep, rep), (ct, ct)),
+        "galois_shared": build(_galois_ks_many_impl,
+                               (ct, ct, rep, rep, rep, rep, rep), (ct, ct)),
+        "galois_mixed": build(_galois_ks_many_impl,
+                              (ct, ct, ct, key_b, key_b, rep, rep),
+                              (ct, ct)),
+        "hoisted": build(_hoisted_rotations_impl,
+                         (rep, rep, ct, key_b, key_b, rep, rep),
+                         (col_b, col_b)),
+    }
+
 
 class EvalPlan:
     """Precomputed device tables + jitted programs for one CkksContext.
@@ -449,18 +552,79 @@ class EvalPlan:
     The plan caches per-basis artifacts (packs, stacked keys, gather
     rows) so a serving loop pays keygen/stacking once; ``prepare`` makes
     the warm-up explicit for latency-sensitive callers (see
-    examples/private_inference.py)."""
+    examples/private_inference.py).
 
-    def __init__(self, ctx, *, use_pallas: bool | None = None, tile: int | None = None):
+    ``mesh`` scales the plan out (the paper's replicated-PE tier): an
+    axis named "b" routes every batched op through the ``shard_map``
+    twins (``sharded_many_programs`` — batch rows split across devices,
+    collective-free, bit-identical results); an axis named "k" commits
+    the RNS prime axis of the residue stacks to the mesh via
+    ``NamedSharding`` and lets XLA's SPMD partitioner shard the plain
+    programs, inserting exactly the collectives the decompose/mod-down
+    cross-prime reductions need.  A mesh of ONE device is valid and
+    exercises the same code path (the tier-1 no-op equivalence test)."""
+
+    def __init__(self, ctx, *, use_pallas: bool | None = None,
+                 tile: int | None = None, mesh=None):
         self.ctx = ctx
         self.n = ctx.n
         self.natural = self.n >= ops.FOURSTEP_MIN_N
         self._kw = dict(use_pallas=use_pallas, tile=tile)
+        self.mesh = mesh
+        self._sharded = None
+        self._kmesh = False
+        if mesh is not None:
+            bad = set(mesh.axis_names) - {"b", "k"}
+            if bad:
+                raise ValueError(
+                    f"EvalPlan: unknown mesh axis name(s) {sorted(bad)} — "
+                    "the scale-out convention shards the ciphertext batch "
+                    "axis over 'b' and the RNS prime axis over 'k' "
+                    "(see README 'Scale-out')")
+            if "b" in mesh.axis_names:
+                # even a size-1 "b" axis routes through the shard_map
+                # twins, so single-device tests cover the sharded path
+                self._sharded = sharded_many_programs(mesh, use_pallas, tile)
+            self._kmesh = ("k" in mesh.axis_names
+                           and int(mesh.shape["k"]) > 1)
         self._keys: dict = {}        # ('relin', basis) | ('galois', g, basis)
         self._batch_keys: dict = {}  # (gs tuple, basis) -> stacked, bounded
         self._idx: dict[int, jnp.ndarray] = {}
         self._rescale_tables: dict = {}      # basis -> (t, fsp) views
         self.reset_stats()
+
+    # ------------------------------------------------------- mesh helpers
+
+    @property
+    def mesh_devices(self) -> int:
+        """Shard count of the batch ("b") mesh axis — the serve engine's
+        group-sizing multiplier and autotune's ``shards=`` divisor
+        (1 when unsharded or k-only)."""
+        if self.mesh is not None and "b" in self.mesh.axis_names:
+            return int(self.mesh.shape["b"])
+        return 1
+
+    def _pad_batch(self, items: list) -> list:
+        """Pad a (nonempty) batch list to a multiple of the "b" axis size
+        by repeating the last element — ``shard_map`` needs the sharded
+        axis divisible by the mesh axis.  Callers zip results against the
+        ORIGINAL list, so the pad rows are computed and dropped; counters
+        charge only the logical batch."""
+        r = (-len(items)) % self.mesh_devices
+        return list(items) + [items[-1]] * r
+
+    def _shard_k(self, arr):
+        """Commit a residue stack's prime axis (second-to-last: (..., k,
+        n)) to the mesh's "k" axis.  Identity when the plan has no
+        sharded "k" axis — or when the stack's prime count does not
+        divide the axis (``NamedSharding`` requires divisibility and the
+        basis shrinks as levels drop, so k-sharding degrades per-basis
+        rather than failing); otherwise the jitted programs consume the
+        committed operand and XLA SPMD-partitions the whole dispatch."""
+        if not self._kmesh or arr.shape[-2] % int(self.mesh.shape["k"]):
+            return arr
+        spec = PartitionSpec(*([None] * (arr.ndim - 2)), "k", None)
+        return jax.device_put(arr, NamedSharding(self.mesh, spec))
 
     # ---------------------------------------------------------- counters
     #
@@ -489,9 +653,10 @@ class EvalPlan:
         request that pays XLA compilation inside its latency window
         shows up as ``trace_count`` growth, so the serve engine reports
         the per-run delta as ``stats['fresh_traces']`` and a correct
-        ``prepare`` warm-up pins it at 0."""
+        ``prepare`` warm-up pins it at 0.  Covers the per-mesh
+        ``shard_map`` twins too (``_SHARDED_PROGRAMS``)."""
         return sum(getattr(p, "_cache_size", lambda: 0)()
-                   for p in _JITTED_PROGRAMS)
+                   for p in _JITTED_PROGRAMS + tuple(_SHARDED_PROGRAMS))
 
     def _count(self, dispatches=1, key_switches=0, decomposes=0):
         self.stats["dispatches"] += dispatches
@@ -683,7 +848,10 @@ class EvalPlan:
         basis = a.primes
         t, fsp = self.keyswitch_tables(basis)
         eb, ea = self.relin_key(basis)
-        c0, c1 = multiply_banks(a.c0.data, a.c1.data, b.c0.data, b.c1.data,
+        c0, c1 = multiply_banks(self._shard_k(a.c0.data),
+                                self._shard_k(a.c1.data),
+                                self._shard_k(b.c0.data),
+                                self._shard_k(b.c1.data),
                                 eb, ea, t, fsp, **self._kw)
         self._count(1, key_switches=1, decomposes=1)
         return Ciphertext(RnsPoly(c0, basis, True), RnsPoly(c1, basis, True),
@@ -693,7 +861,8 @@ class EvalPlan:
         check_level("rescale", a, need=1)
         basis = a.primes
         t, fsp = self.rescale_tables(basis)
-        c0, c1 = rescale_banks(a.c0.data, a.c1.data, t, fsp, **self._kw)
+        c0, c1 = rescale_banks(self._shard_k(a.c0.data),
+                               self._shard_k(a.c1.data), t, fsp, **self._kw)
         self._count(1)
         rest = basis[:-1]
         return Ciphertext(RnsPoly(c0, rest, True), RnsPoly(c1, rest, True),
@@ -704,7 +873,8 @@ class EvalPlan:
         basis = a.primes
         t, fsp = self.keyswitch_tables(basis)
         eb, ea = self.galois_key(g, basis)
-        c0, c1 = galois_ks_banks(a.c0.data, a.c1.data, self.eval_idx(g),
+        c0, c1 = galois_ks_banks(self._shard_k(a.c0.data),
+                                 self._shard_k(a.c1.data), self.eval_idx(g),
                                  eb, ea, t, fsp, **self._kw)
         self._count(1, key_switches=1, decomposes=1)
         return Ciphertext(RnsPoly(c0, basis, True), RnsPoly(c1, basis, True),
@@ -750,12 +920,20 @@ class EvalPlan:
         t, fsp = self.keyswitch_tables(basis)
         eb, ea = self.relin_key(basis)
         stack = lambda ps: _stack_banks([p.data for p in ps])
-        a0s, a1s = stack([a.c0 for a in As]), stack([a.c1 for a in As])
-        c0, c1 = multiply_many_banks(
-            a0s, a1s,
-            stack([b.c0 for b in Bs]), stack([b.c1 for b in Bs]),
-            eb, ea, t, fsp, **self._kw)
-        retire_donated(c0, a0s, a1s)
+        if self._sharded is not None:
+            Ap, Bp = self._pad_batch(list(As)), self._pad_batch(list(Bs))
+            c0, c1 = self._sharded["multiply"](
+                stack([a.c0 for a in Ap]), stack([a.c1 for a in Ap]),
+                stack([b.c0 for b in Bp]), stack([b.c1 for b in Bp]),
+                eb, ea, t, fsp)
+        else:
+            a0s, a1s = stack([a.c0 for a in As]), stack([a.c1 for a in As])
+            c0, c1 = multiply_many_banks(
+                self._shard_k(a0s), self._shard_k(a1s),
+                self._shard_k(stack([b.c0 for b in Bs])),
+                self._shard_k(stack([b.c1 for b in Bs])),
+                eb, ea, t, fsp, **self._kw)
+            retire_donated(c0, a0s, a1s)
         self._count(1, key_switches=len(As), decomposes=len(As))
         return [Ciphertext(RnsPoly(r0, basis, True),
                            RnsPoly(r1, basis, True), a.scale * b.scale)
@@ -771,9 +949,16 @@ class EvalPlan:
             check_level("rescale_many", ct, need=1)
         basis = self._common_basis("rescale_many", cts)
         t, fsp = self.rescale_tables(basis)
-        c0, c1 = rescale_many_banks(
-            _stack_banks([ct.c0.data for ct in cts]),
-            _stack_banks([ct.c1.data for ct in cts]), t, fsp, **self._kw)
+        if self._sharded is not None:
+            pad = self._pad_batch(list(cts))
+            c0, c1 = self._sharded["rescale"](
+                _stack_banks([ct.c0.data for ct in pad]),
+                _stack_banks([ct.c1.data for ct in pad]), t, fsp)
+        else:
+            c0, c1 = rescale_many_banks(
+                self._shard_k(_stack_banks([ct.c0.data for ct in cts])),
+                self._shard_k(_stack_banks([ct.c1.data for ct in cts])),
+                t, fsp, **self._kw)
         self._count(1)
         rest = basis[:-1]
         return [Ciphertext(RnsPoly(r0, rest, True),
@@ -797,16 +982,30 @@ class EvalPlan:
             check_level("galois_ks_many", ct)
         basis = self._common_basis("galois_ks_many", cts)
         t, fsp = self.keyswitch_tables(basis)
-        if len(set(gs)) == 1:
-            eb, ea = self.galois_key(gs[0], basis)
-            idx = self.eval_idx(gs[0])
+        if self._sharded is not None:
+            pad_cts = self._pad_batch(list(cts))
+            pad_gs = self._pad_batch(list(gs))
+            s0 = _stack_banks([ct.c0.data for ct in pad_cts])
+            s1 = _stack_banks([ct.c1.data for ct in pad_cts])
+            if len(set(pad_gs)) == 1:
+                eb, ea = self.galois_key(pad_gs[0], basis)
+                c0, c1 = self._sharded["galois_shared"](
+                    s0, s1, self.eval_idx(pad_gs[0]), eb, ea, t, fsp)
+            else:
+                eb, ea, idx = self._galois_batch_key(tuple(pad_gs), basis)
+                c0, c1 = self._sharded["galois_mixed"](
+                    s0, s1, idx, eb, ea, t, fsp)
         else:
-            eb, ea, idx = self._galois_batch_key(tuple(gs), basis)
-        s0 = _stack_banks([ct.c0.data for ct in cts])
-        s1 = _stack_banks([ct.c1.data for ct in cts])
-        c0, c1 = galois_ks_many_banks(s0, s1, idx, eb, ea, t, fsp,
-                                      **self._kw)
-        retire_donated(c0, s0, s1)
+            if len(set(gs)) == 1:
+                eb, ea = self.galois_key(gs[0], basis)
+                idx = self.eval_idx(gs[0])
+            else:
+                eb, ea, idx = self._galois_batch_key(tuple(gs), basis)
+            s0 = self._shard_k(_stack_banks([ct.c0.data for ct in cts]))
+            s1 = self._shard_k(_stack_banks([ct.c1.data for ct in cts]))
+            c0, c1 = galois_ks_many_banks(s0, s1, idx, eb, ea, t, fsp,
+                                          **self._kw)
+            retire_donated(c0, s0, s1)
         self._count(1, key_switches=len(cts), decomposes=len(cts))
         return [Ciphertext(RnsPoly(r0, basis, True),
                            RnsPoly(r1, basis, True), ct.scale)
@@ -832,14 +1031,24 @@ class EvalPlan:
         check_level("hoisted_galois", a)
         basis = a.primes
         t, fsp = self.keyswitch_tables(basis)
-        eb, ea, idx = self._galois_batch_key(gs, basis)
-        c0, c1 = hoisted_rotations_banks(a.c0.data, a.c1.data, idx,
-                                         eb, ea, t, fsp, **self._kw)
+        if self._sharded is not None:
+            # shard the rotation axis: pad gs to the mesh width and drop
+            # the pad columns on unpack (each shard re-runs the shared
+            # decomposition locally — collective-free)
+            pad_gs = tuple(self._pad_batch(list(gs)))
+            eb, ea, idx = self._galois_batch_key(pad_gs, basis)
+            c0, c1 = self._sharded["hoisted"](a.c0.data, a.c1.data, idx,
+                                              eb, ea, t, fsp)
+        else:
+            eb, ea, idx = self._galois_batch_key(gs, basis)
+            c0, c1 = hoisted_rotations_banks(self._shard_k(a.c0.data),
+                                             self._shard_k(a.c1.data), idx,
+                                             eb, ea, t, fsp, **self._kw)
         self._count(1, key_switches=len(gs), decomposes=1)
         return [Ciphertext(RnsPoly(r0, basis, True),
                            RnsPoly(r1, basis, True), a.scale)
-                for r0, r1 in zip(_unstack_banks(c0, axis=1),
-                                  _unstack_banks(c1, axis=1))]
+                for r0, r1 in zip(_unstack_banks(c0, axis=1)[:len(gs)],
+                                  _unstack_banks(c1, axis=1)[:len(gs)])]
 
     def rotate_hoisted(self, a: Ciphertext, rs) -> list[Ciphertext]:
         """Rotate one ciphertext by every amount in ``rs`` with the

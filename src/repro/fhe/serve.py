@@ -184,16 +184,21 @@ class CkksServeEngine:
     double-buffered continuous-batching drain (same grouping policy,
     same bit-exact answers, host work overlapped with device compute).
     ``max_batch`` caps how many requests one async group may take — it
-    bounds the padded-batch jit signatures to multiples of
-    ``batch_tile`` up to ``max_batch``, which is exactly the
-    ``batch_sizes`` a caller should warm via ``EvalPlan.prepare``.
+    bounds the padded-batch jit signatures to multiples of the GROUP
+    tile up to ``max_batch``, which is exactly the ``batch_sizes`` a
+    caller should warm via ``EvalPlan.prepare``.  On a mesh-sharded plan
+    the group tile is ``batch_tile * plan.mesh_devices`` (every device
+    gets a full kernel tile per dispatch — see ``__init__``); on a
+    single device it degenerates to ``batch_tile`` exactly as before.
 
     stats (reset per run): ``mode``, ``dispatches`` (request groups
     dispatched), ``batched_ops`` (real requests inside them), ``padded``
     (tile-padding ghost rows), ``identity`` (host-side short-circuits),
     ``failed`` (rid -> message), ``groups`` ((kind, basis-level) ->
-    count), ``fresh_traces`` (jit signatures compiled during the run —
-    0 after a complete warm-up), plus the device-work deltas read off
+    count), ``devices`` / ``per_device_rows`` (mesh width and the batch
+    rows each device ran — equal by construction, the saturation
+    invariant), ``fresh_traces`` (jit signatures compiled during the
+    run — 0 after a complete warm-up), plus the device-work deltas read off
     the plan's cumulative counters: ``program_dispatches`` (jitted
     programs actually launched — a matvec group launches several per
     request), ``key_switches``, ``decomposes``, and ``hoisted_reuse``
@@ -204,19 +209,30 @@ class CkksServeEngine:
 
     def __init__(self, plan: EvalPlan, batch_tile: int | None = None,
                  max_batch: int | None = None):
+        # a mesh-sharded plan splits each batched dispatch over its "b"
+        # axis, so the engine sizes groups to batch_tile * devices: every
+        # device then sees a full batch_tile of rows per dispatch (the
+        # device-saturation analog of the paper's replicated-PE scaling)
+        # and the plan's own shard-padding never fires on engine traffic
+        self.devices = getattr(plan, "mesh_devices", 1)
         if batch_tile is None:
             # autotuned default (pin > cache > 8): the admission batch is
             # open-ended, so resolve against a representative group of 32
+            # — against the PER-SHARD batch on a sharded plan (shards=),
+            # because that is the kernel grid each device actually runs
             k = len(plan.ctx.qs) if hasattr(plan.ctx, "qs") else 2
-            batch_tile = autotune.resolve_tile("serve_batch", k, plan.n, 32)
+            batch_tile = autotune.resolve_tile("serve_batch", k, plan.n, 32,
+                                               shards=self.devices)
         if batch_tile < 1:
             raise ValueError(f"batch_tile must be >= 1, got {batch_tile}")
         self.plan = plan
         self.batch_tile = batch_tile
-        self.max_batch = max_batch if max_batch is not None else 4 * batch_tile
-        if self.max_batch < batch_tile:
+        self.group_tile = batch_tile * self.devices
+        self.max_batch = (max_batch if max_batch is not None
+                          else 4 * self.group_tile)
+        if self.max_batch < self.group_tile:
             raise ValueError(f"max_batch {self.max_batch} < batch_tile "
-                             f"{batch_tile}")
+                             f"{batch_tile} x {self.devices} device(s)")
         self.stats: dict = {}
 
     # ------------------------------------------------------------ policy
@@ -271,7 +287,7 @@ class CkksServeEngine:
 
     def _dispatch(self, kind: str, reqs: list) -> list[Ciphertext]:
         plan = self.plan
-        reqs = _pad(reqs, self.batch_tile)
+        reqs = _pad(reqs, self.group_tile)
         if kind == "multiply":
             outs = plan.multiply_many([r.ct for r in reqs],
                                       [r.other for r in reqs])
@@ -306,14 +322,24 @@ class CkksServeEngine:
     def _init_stats(self, mode: str, failed: dict) -> dict:
         stats = self.stats = {
             "mode": mode, "dispatches": 0, "batched_ops": 0, "padded": 0,
-            "identity": 0, "failed": failed, "groups": {}}
+            "identity": 0, "failed": failed, "groups": {},
+            "devices": self.devices,
+            "per_device_rows": [0] * self.devices}
         return stats
 
     def _account_group(self, stats, kind: str, reqs: list):
         stats["dispatches"] += 1
         stats["batched_ops"] += len(reqs)
         if kind != "matvec":                 # matvec never tile-pads
-            stats["padded"] += -len(reqs) % self.batch_tile
+            pad = -len(reqs) % self.group_tile
+            stats["padded"] += pad
+            # per-device dispatch accounting: a group-tile-padded batch
+            # splits evenly over the mesh's "b" axis, so each device ran
+            # exactly rows/devices of it — the saturation evidence the
+            # scaling bench asserts on (every device equally loaded)
+            rows = (len(reqs) + pad) // self.devices
+            for d in range(self.devices):
+                stats["per_device_rows"][d] += rows
         key = f"{kind}@L{len(reqs[0].ct.primes) - 1}"
         stats["groups"][key] = stats["groups"].get(key, 0) + len(reqs)
 

@@ -21,6 +21,17 @@ Every path clamps to ``max(1, min(tile, b))``: a 1-row input must never
 be zero-padded to an 8-row dispatch (the single-prime entry points
 historically skipped this clamp — 8x wasted butterfly work).
 
+Sharded dispatch resolves against the PER-SHARD batch: a caller whose
+(B, k, n) stack is split over ``shards`` mesh devices passes
+``shards=`` and every step of the funnel — cache key, clamp, measured
+workload — sees ``ceil(b / shards)`` instead of the global ``b``.  A
+mesh of 4 devices over b=32 therefore hits (and writes) the b=8 cache
+entry: the kernel grid each device actually runs is 8 rows wide, and
+keying on the global batch would tune (and cache) tiles for a shape no
+device ever dispatches.  Tile resolution INSIDE a ``shard_map`` body
+needs no ``shards=`` — the entry points see the local block shape
+there, which is already the per-shard batch.
+
 Benchmarks that want a tuned tile regardless of the env flag call
 ``ensure(family, k, n, b)``, which measures on a cache miss (still
 honoring the pin first).  ``table()`` / ``dump(path)`` snapshot the
@@ -138,10 +149,22 @@ def clear() -> None:
     _DISK_LOADED = True     # don't resurrect entries from disk
 
 
+def shard_batch(b: int, shards: int = 1) -> int:
+    """The per-shard batch a ``shards``-way data-parallel dispatch hands
+    each device: ``ceil(b / shards)`` (the last shard may run padded)."""
+    b, shards = int(b), max(1, int(shards))
+    return -(-b // shards) if b > 0 else b
+
+
 def resolve_tile(family: str, k: int, n: int, b: int,
-                 tile: int | None = None) -> int:
-    """The one tile-resolution funnel every entry point routes through."""
-    b = int(b)
+                 tile: int | None = None, *, shards: int = 1) -> int:
+    """The one tile-resolution funnel every entry point routes through.
+
+    ``shards`` > 1 resolves against the per-shard batch ``ceil(b /
+    shards)`` — the batch each mesh device actually dispatches — so the
+    cache key, the clamp and any measurement all describe the kernel
+    grid that really runs (see module docstring)."""
+    b = shard_batch(b, shards)
     if tile is not None:
         return clamp(tile, b)
     pin = _env_pin()
@@ -158,9 +181,10 @@ def resolve_tile(family: str, k: int, n: int, b: int,
     return clamp(DEFAULT_TILE, b)
 
 
-def ensure(family: str, k: int, n: int, b: int) -> int:
-    """Measure-on-miss (benchmarks): pin > cache > measure > default."""
-    b = int(b)
+def ensure(family: str, k: int, n: int, b: int, *, shards: int = 1) -> int:
+    """Measure-on-miss (benchmarks): pin > cache > measure > default.
+    ``shards`` resolves against the per-shard batch like ``resolve_tile``."""
+    b = shard_batch(b, shards)
     pin = _env_pin()
     if pin is not None:
         return clamp(pin, b)

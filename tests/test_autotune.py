@@ -178,6 +178,58 @@ def test_dump_and_table(tmp_path):
         "|".join(str(p) for p in key)] == 2
 
 
+def test_shard_batch_rule():
+    assert autotune.shard_batch(32, 1) == 32
+    assert autotune.shard_batch(32, 4) == 8
+    assert autotune.shard_batch(33, 4) == 9      # ceil, not floor
+    assert autotune.shard_batch(2, 4) == 1       # more shards than rows
+    assert autotune.shard_batch(32) == 32        # default: unsharded
+    assert autotune.shard_batch(0, 4) == 0       # empty batch unchanged
+
+
+def test_resolve_uses_per_shard_cache_entry(monkeypatch):
+    """The PR 8 regression: a 4-device mesh over b=32 dispatches b=8 per
+    shard, so resolution must hit the b=8 cache entry — keying on the
+    global batch would tune for a grid no device ever runs."""
+    k, n = 3, 1024
+    be = jax.default_backend()
+    monkeypatch.setitem(autotune._MEM, (be, "serve_batch", k, n, 8), 16)
+    monkeypatch.setitem(autotune._MEM, (be, "serve_batch", k, n, 32), 2)
+    # unsharded resolve sees the global-batch entry...
+    assert autotune.resolve_tile("serve_batch", k, n, 32) == 2
+    # ...the 4-shard resolve sees the per-shard one (clamped to b=8)
+    assert autotune.resolve_tile("serve_batch", k, n, 32, shards=4) == 8
+    # ensure() follows the same funnel
+    assert autotune.ensure("serve_batch", k, n, 32, shards=4) == 8
+    # per-shard clamp: 4 shards over b=4 -> one row each, tile 1
+    assert autotune.resolve_tile("serve_batch", k, n, 4, shards=4) == 1
+    # explicit tile still outranks, clamped to the per-shard batch
+    assert autotune.resolve_tile("serve_batch", k, n, 32, tile=32,
+                                 shards=4) == 8
+
+
+def test_serve_engine_resolves_per_shard_tile(monkeypatch):
+    """End to end through the serve engine with a FAKE 4-device mesh:
+    the engine must resolve its batch tile against the per-shard batch
+    (hitting a seeded b=8 entry) and size groups to tile * devices."""
+    from repro.fhe import serve
+    from repro.fhe.ckks import CkksContext
+
+    ctx = CkksContext(n=64, levels=2, seed=3)
+    plan = ctx.plan()
+    k = len(plan.ctx.qs)
+    be = jax.default_backend()
+    monkeypatch.setitem(autotune._MEM, (be, "serve_batch", k, plan.n, 8), 2)
+    monkeypatch.setitem(autotune._MEM, (be, "serve_batch", k, plan.n, 32), 8)
+    monkeypatch.setattr(type(plan), "mesh_devices",
+                        property(lambda self: 4))
+    eng = serve.CkksServeEngine(plan)
+    assert eng.devices == 4
+    assert eng.batch_tile == 2          # the b=8 per-shard entry, not b=32
+    assert eng.group_tile == 8          # tile x devices
+    assert eng.max_batch == 32          # 4 x group_tile default
+
+
 def test_ops_honors_env_pin(monkeypatch):
     """End to end: the pin reaches the kernel dispatch (captured via the
     kernel wrapper) and is still clamped to the batch."""
