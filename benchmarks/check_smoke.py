@@ -50,7 +50,15 @@ Checks (CI runs this right after ``benchmarks.run --smoke --json``):
      dispatch must reach ``SHARDED_MIN_SPEEDUP``.  A 1-core host
      time-shares all 4 simulated devices on one core — no speedup is
      physically available, so only presence + exactness are gated
-     there (the forced-4-device CI job runs on multi-core runners).
+     there (the forced-4-device CI job runs on multi-core runners),
+  8. the ML-KEM scheme rows: ``ntt_kyber_256`` present, and each
+     ``mlkem_{keygen,encaps,decaps}_b64`` row must (a) carry
+     ``kat=OK`` — the bench re-verifies the checked-in FIPS 203 KAT
+     vectors before timing, so a wrong scheme can never post a number
+     — and (b) beat its own ``b1_us=`` column per op
+     (``us_per_call / 64 < b1_us``): one batched dispatch must be
+     faster per op than 64 sequential single-request calls, the whole
+     point of routing the scheme through the batched banks kernels.
 """
 from __future__ import annotations
 
@@ -69,7 +77,12 @@ REQUIRED = ("ckks_multiply_b1", "ckks_multiply_b8", "ckks_multiply_b32",
             "serve_slo_sweep_l110",
             "ckks_multiply_sharded_d4",
             "ntt_lazy_2_14", "ntt_eager_2_14", "ntt_lazy_tile8_2_14",
-            "keyswitch_lazy_2_14", "keyswitch_eager_2_14")
+            "keyswitch_lazy_2_14", "keyswitch_eager_2_14",
+            "ntt_kyber_256", "mlkem_keygen_b64", "mlkem_encaps_b64",
+            "mlkem_decaps_b64")
+
+# the ML-KEM batched rows (gate 8): batched-beats-b1 per op + kat=OK
+MLKEM_ROWS = ("mlkem_keygen_b64", "mlkem_encaps_b64", "mlkem_decaps_b64")
 
 # the sweep family in offered-load order (the monotonicity gate)
 SWEEP_ROWS = ("serve_slo_sweep_l25", "serve_slo_sweep_l50",
@@ -212,6 +225,29 @@ def check(path: str) -> int:
               f"{cores}-core host; the sharded dispatch is not scaling "
               "over the batch axis")
         return 1
+    # 8. ML-KEM: kat=OK on every batched row, batched beats b1 per op
+    for name in MLKEM_ROWS:
+        row = rows[name]
+        derived = str(row["derived"])
+        if "kat=OK" not in derived:
+            print(f"check_smoke: FAIL — {name} does not report kat=OK; the "
+                  "scheme no longer reproduces the checked-in FIPS 203 "
+                  "vectors and its throughput numbers are meaningless")
+            return 1
+        m_b1 = re.search(r"b1_us=([0-9.]+)", derived)
+        if m_b1 is None:
+            print(f"check_smoke: FAIL — {name} carries no b1_us= baseline "
+                  "in its derived column")
+            return 1
+        per = per_op_us(row)
+        b1_op = float(m_b1.group(1))
+        print(f"check_smoke: {name} per-op b64={per:.1f}us b1={b1_op:.1f}us "
+              f"(x{b1_op / per:.2f} amortization)")
+        if not per < b1_op:
+            print(f"check_smoke: FAIL — {name} is not faster per op than "
+                  "64 sequential b=1 calls; the batched ML-KEM dispatch "
+                  "layer regressed")
+            return 1
     print("check_smoke: OK")
     return 0
 

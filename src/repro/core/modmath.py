@@ -1,14 +1,33 @@
-"""Modular arithmetic on a 32-bit datapath (the paper's datapath width).
+"""Modular arithmetic on the paper's datapath, generic over lane width.
 
-All device-side ops use ONLY uint32 arithmetic (wraparound mullo + a
-16-bit-limb mulhi), because the TPU VPU has no native 32x32->64 multiply.
-This mirrors the paper's 32-bit RSFQ datapath.  Every op has a numpy
-uint64 oracle (``*_np``) used as the test gold standard.
+The primary datapath is uint32 (the paper's 32-bit RSFQ width): all
+device-side ops use ONLY uint32 arithmetic (wraparound mullo + a
+16-bit-limb mulhi), because the TPU VPU has no native 32x32->64
+multiply.  Every op has a numpy uint64 oracle (``*_np``) used as the
+test gold standard.
 
 Three modular multipliers are provided, matching the paper's §IV.B
 comparison (Table II): Shoup (chosen by the paper — one operand is a
 precomputed twiddle), Barrett, and Montgomery (rejected by the paper for
 its conversion overhead; included for the comparison benchmark).
+
+Ring-dtype dispatch (the scheme-generic ring substrate): every jnp
+multiplier helper branches on the ELEMENT DTYPE of its input.  uint32
+lanes carry the CKKS RNS primes (q in the Barrett window (2^28, 2^30),
+lazy band [0, 2q) < 2^31); uint16 lanes carry small-ring schemes like
+ML-KEM's q = 3329 (window (2^10, 2^12), lazy band 4q < 2^16).  The
+16-bit path upcasts to u32 internally — a 16x16 product fits one u32
+exactly, so it needs no limb mulhi at all:
+
+  Shoup-16    wp = floor(w * 2^16 / q) fits u16; for ANY u16 x,
+              r = x*w - ((x*wp) >> 16)*q is EXACT in u32 and < 2q.
+  Barrett-16  mu = floor(2^26 / q) fits u16 (q > 2^10); P = a*b < 2^24,
+              approx = P >> 10, qhat = (approx*mu) >> 16; r = P - qhat*q
+              verified < 2q exhaustively across the window edges.
+
+The per-dtype constant windows live in ``BARRETT_WINDOWS`` /
+``SHOUP_SHIFTS`` so ``core.ringspec.RingSpec`` and the precompute
+guards share ONE source of truth.
 """
 from __future__ import annotations
 
@@ -16,7 +35,32 @@ import numpy as np
 import jax.numpy as jnp
 
 U32 = jnp.uint32
+U16 = jnp.uint16
 MASK16 = 0xFFFF
+
+# accepted modulus window per lane width: bits -> (lo, hi), exclusive.
+# 32: the CKKS RNS prime range (mu = 2^60/q fits u32, 2q < 2^31).
+# 16: mu = 2^26/q fits u16 needs q > 2^10; the Barrett error bound and
+#     the u16 lazy band (4q < 2^16) need q < 2^12.
+BARRETT_WINDOWS = {32: (1 << 28, 1 << 30), 16: (1 << 10, 1 << 12)}
+BARRETT_MU_SHIFTS = {32: 60, 16: 26}
+SHOUP_SHIFTS = {32: 32, 16: 16}
+
+_DTYPE_BITS = {"uint32": 32, "uint16": 16}
+
+
+def dtype_bits(dtype) -> int:
+    """Lane width in bits for a ring element dtype (name or jnp dtype)."""
+    name = dtype if isinstance(dtype, str) else jnp.dtype(dtype).name
+    if name not in _DTYPE_BITS:
+        raise ValueError(
+            f"dtype_bits: unsupported ring element dtype {name!r} "
+            f"(expected one of {sorted(_DTYPE_BITS)})")
+    return _DTYPE_BITS[name]
+
+
+def _is16(x) -> bool:
+    return jnp.asarray(x).dtype == jnp.uint16
 
 
 # ---------------------------------------------------------------- limbs
@@ -86,29 +130,59 @@ def lazy_submod(a, b, q):
     return jnp.where(a >= b, a - b, a + (q2 - b))
 
 
+def _shoup16_lazy_u32(x, w, wp, q):
+    """u32-domain core of the 16-bit Shoup multiply: inputs are u32
+    arrays holding u16 values, wp = floor(w*2^16/q).  A 16x16 product is
+    EXACT in u32, so r = x*w - floor(x*wp/2^16)*q needs no limb tricks
+    and lands in [0, 2q) for ANY u16 x (exhaustively verified)."""
+    hi = (x * wp) >> 16
+    return x * w - hi * q
+
+
 def mulmod_shoup_lazy(x, w, wp, q):
     """Shoup multiply WITHOUT the final conditional subtract: result in
-    [0, 2q), congruent to x*w mod q.  x may be any u32 (in particular a
-    lazy [0, 2q) value); w < q with wp = floor(w*2^32/q).  This is the
-    butterfly-stage form — ``mulmod_shoup`` = this + one subtract."""
+    [0, 2q), congruent to x*w mod q.  x may carry any lazy-band value;
+    w < q with wp = floor(w*2^S/q), S the lane's ``SHOUP_SHIFTS`` entry.
+    This is the butterfly-stage form — ``mulmod_shoup`` = this + one
+    subtract.  uint16 lanes upcast to u32 internally; 2q < 2^16 keeps
+    the result representable on the way back down."""
+    if _is16(x):
+        u = jnp.uint32
+        r = _shoup16_lazy_u32(x.astype(u), jnp.asarray(w, u),
+                              jnp.asarray(wp, u), jnp.asarray(q, u))
+        return r.astype(jnp.uint16)
     hi = mulhi_u32(x, wp)
     return mullo_u32(x, w) - mullo_u32(hi, q)   # wraps; lands in [0, 2q)
 
 
 # ---------------------------------------------------------------- Shoup
 
-def shoup_precompute(w: int, q: int) -> int:
-    """w' = floor(w * 2^32 / q); the TW' (TWP) companion of the paper."""
-    return (int(w) << 32) // int(q)
+def shoup_precompute(w: int, q: int, bits: int = 32) -> int:
+    """w' = floor(w * 2^bits / q); the TW' (TWP) companion of the paper.
+    ``bits`` is the ring element lane width (32 for CKKS RNS primes,
+    16 for small rings like ML-KEM's q=3329)."""
+    if bits not in SHOUP_SHIFTS:
+        raise ValueError(
+            f"shoup_precompute: unsupported lane width {bits} "
+            f"(expected one of {sorted(SHOUP_SHIFTS)})")
+    return (int(w) << bits) // int(q)
 
 
 def mulmod_shoup(x, w, wp, q):
-    """x * w mod q where w has precomputed companion wp = floor(w*2^32/q).
+    """x * w mod q where w has precomputed companion wp (see
+    ``shoup_precompute``).
 
-    Requires q < 2^31, w < q.  x may be any u32 < 2q (lazy-friendly);
-    result is fully reduced in [0, q).  One mulhi + two mullo + one
-    conditional subtract — the paper's small-area BU multiplier.
+    w < q; x may be any lazy-band value (any u32 on 32-bit lanes, any
+    u16 on 16-bit lanes); result is fully reduced in [0, q).  One mulhi
+    + two mullo + one conditional subtract — the paper's small-area BU
+    multiplier.
     """
+    if _is16(x):
+        u = jnp.uint32
+        q32 = jnp.asarray(q, u)
+        r = _shoup16_lazy_u32(x.astype(u), jnp.asarray(w, u),
+                              jnp.asarray(wp, u), q32)
+        return jnp.where(r >= q32, r - q32, r).astype(jnp.uint16)
     hi = mulhi_u32(x, wp)
     r = mullo_u32(x, w) - mullo_u32(hi, q)      # wraps; lands in [0, 2q)
     return jnp.where(r >= q, r - q, r)
@@ -116,28 +190,57 @@ def mulmod_shoup(x, w, wp, q):
 
 # -------------------------------------------------------------- Barrett
 
-def barrett_precompute(q: int) -> int:
-    """mu = floor(2^60 / q) for 2^28 < q < 2^30 (our RNS prime range).
+def barrett_precompute(q: int, bits: int = 32) -> int:
+    """mu = floor(2^s / q) for q inside the lane's Barrett window.
 
-    The range check is a ``ValueError`` (the scheme-API convention), not
-    an ``assert``: under ``python -O`` an assert is stripped and an
+    bits=32 (the RNS prime range): s=60, window (2^28, 2^30).
+    bits=16 (small rings, e.g. ML-KEM): s=26, window (2^10, 2^12) — mu
+    fits u16 and the error bound keeps r < 2q (verified exhaustively).
+
+    The range check is a ``ValueError`` naming the offending modulus and
+    the accepted range for the ring's dtype (the scheme-API convention),
+    not an ``assert``: under ``python -O`` an assert is stripped and an
     out-of-range q would silently yield a wrong mu — every Barrett
     product downstream would be garbage with no error anywhere."""
     q = int(q)
-    if not (1 << 28) < q < (1 << 30):
+    if bits not in BARRETT_WINDOWS:
         raise ValueError(
-            f"barrett_precompute: q={q} outside the u32-limb Barrett range "
-            f"(2^28, 2^30) — mu would be silently wrong")
-    return (1 << 60) // q
+            f"barrett_precompute: unsupported lane width {bits} "
+            f"(expected one of {sorted(BARRETT_WINDOWS)})")
+    lo, hi = BARRETT_WINDOWS[bits]
+    if not lo < q < hi:
+        raise ValueError(
+            f"barrett_precompute: q={q} outside the uint{bits}-lane "
+            f"Barrett range ({lo}, {hi}) exclusive — mu would be "
+            f"silently wrong")
+    return (1 << BARRETT_MU_SHIFTS[bits]) // q
+
+
+def _barrett16_lazy_u32(a, b, q, mu):
+    """u32-domain core of the 16-bit Barrett reduction: inputs are u32
+    arrays holding values < q (q in (2^10, 2^12)), mu = floor(2^26/q).
+    P = a*b < 2^24; approx = P >> 10 and qhat = (approx*mu) >> 16 both
+    stay < 2^30; r = P - qhat*q < 2q (exhaustive across the window)."""
+    prod = a * b
+    qhat = ((prod >> 10) * mu) >> 16
+    return prod - qhat * q
 
 
 def mulmod_barrett(a, b, q, mu):
-    """a * b mod q via Barrett reduction, u32 limbs only.
+    """a * b mod q via Barrett reduction on the lane's native width.
 
-    P = a*b < 2^60 (q < 2^30).  approx = floor(P / 2^29) fits u32,
-    qhat = floor(approx * mu / 2^31) fits u32; r = lo(P) - qhat*q needs
-    at most two conditional subtracts.
+    u32 lanes: P = a*b < 2^60 (q < 2^30), approx = floor(P / 2^29) fits
+    u32, qhat = floor(approx * mu / 2^31) fits u32; r = lo(P) - qhat*q
+    needs at most two conditional subtracts.  u16 lanes upcast to u32
+    (see ``_barrett16_lazy_u32``); inputs must be in [0, q).
     """
+    if _is16(a):
+        u = jnp.uint32
+        q32 = jnp.asarray(q, u)
+        r = _barrett16_lazy_u32(a.astype(u), jnp.asarray(b).astype(u),
+                                q32, jnp.asarray(mu, u))
+        r = jnp.where(r >= q32 + q32, r - (q32 + q32), r)
+        return jnp.where(r >= q32, r - q32, r).astype(jnp.uint16)
     hi = mulhi_u32(a, b)
     lo = mullo_u32(a, b)
     approx = (hi << 3) | (lo >> 29)
@@ -152,6 +255,13 @@ def mulmod_barrett_lazy(a, b, q, mu):
     conditional subtract (of 2q) instead of two.  Inputs in [0, q); the
     MAC digit loops accumulate these with ``lazy_addmod`` and pay the
     exact reduction once in the epilogue."""
+    if _is16(a):
+        u = jnp.uint32
+        q32 = jnp.asarray(q, u)
+        r = _barrett16_lazy_u32(a.astype(u), jnp.asarray(b).astype(u),
+                                q32, jnp.asarray(mu, u))
+        return jnp.where(r >= q32 + q32, r - (q32 + q32), r) \
+            .astype(jnp.uint16)
     hi = mulhi_u32(a, b)
     lo = mullo_u32(a, b)
     approx = (hi << 3) | (lo >> 29)
@@ -232,24 +342,34 @@ def lazy_submod_np(a, b, q):
     return (a + np.where(a >= b, np.uint64(0), q2) - b).astype(np.uint32)
 
 
-def mulmod_shoup_lazy_np(x, w, q):
-    """r = x*w - floor(x*wp / 2^32)*q mod 2^32, wp = floor(w*2^32/q)."""
+def mulmod_shoup_lazy_np(x, w, q, bits=32):
+    """r = x*w - floor(x*wp / 2^S)*q mod 2^S', wp = floor(w*2^S/q),
+    where S is the lane's Shoup shift (32 or 16).  The 16-bit lane's
+    product is exact in u64, so no masking is needed there."""
     x = np.asarray(x, dtype=np.uint64)
-    wp = (int(w) << 32) // int(q)
-    hi = (x * np.uint64(wp)) >> np.uint64(32)
-    r = (x * np.uint64(w) - hi * np.uint64(q)) & np.uint64(0xFFFFFFFF)
+    w = np.asarray(w, dtype=np.uint64)
+    sh = np.uint64(SHOUP_SHIFTS[bits])
+    wp = (w << sh) // np.uint64(q)      # exact in u64 on both lanes
+    hi = (x * wp) >> sh
+    r = x * w - hi * np.uint64(q)
+    if bits == 32:
+        r &= np.uint64(0xFFFFFFFF)
     return r.astype(np.uint32)
 
 
-def mulmod_barrett_lazy_np(a, b, q):
+def mulmod_barrett_lazy_np(a, b, q, bits=32):
     """The [0, 2q) Barrett representative: (a*b) mod q, plus q when the
     device datapath's single 2q-subtract leaves the high copy."""
     a64 = np.asarray(a, dtype=np.uint64)
     b64 = np.asarray(b, dtype=np.uint64)
-    mu = (1 << 60) // int(q)
+    mu = (1 << BARRETT_MU_SHIFTS[bits]) // int(q)
     prod = a64 * b64
-    approx = prod >> np.uint64(29)
-    qhat = (approx * np.uint64(mu)) >> np.uint64(31)
-    r = (prod - qhat * np.uint64(q)) & np.uint64(0xFFFFFFFF)
+    if bits == 16:
+        qhat = ((prod >> np.uint64(10)) * np.uint64(mu)) >> np.uint64(16)
+        r = prod - qhat * np.uint64(q)          # exact in u64; < 2q
+    else:
+        approx = prod >> np.uint64(29)
+        qhat = (approx * np.uint64(mu)) >> np.uint64(31)
+        r = (prod - qhat * np.uint64(q)) & np.uint64(0xFFFFFFFF)
     q2 = np.uint64(2 * int(q))
     return (r - np.where(r >= q2, q2, np.uint64(0))).astype(np.uint32)

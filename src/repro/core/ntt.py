@@ -90,8 +90,12 @@ def cg_ntt(x, tw, twp, q: int, unroll: int = 1, lazy: bool = False,
     lazy=True keeps values in [0, 2q) between stages (see modmath's lazy
     contract); reduce_out=False additionally skips the epilogue reduce so
     a downstream lazy-aware consumer (four-step twiddle pass) can absorb
-    it.  Eager mode is always fully reduced regardless of reduce_out."""
-    qc = jnp.uint32(q)
+    it.  Eager mode is always fully reduced regardless of reduce_out.
+
+    Dtype-generic: a uint16 x (small-ring schemes, e.g. ML-KEM) runs the
+    16-bit modmath branch; the scalar q is cast to the element dtype."""
+    x = jnp.asarray(x)
+    qc = jnp.asarray(q, x.dtype)
     fn = _fwd_stage_lazy if lazy else _fwd_stage
 
     def stage(carry, wrow):
@@ -111,7 +115,8 @@ def cg_intt(x, itw, itwp, ninv: int, ninv_p: int, q: int, apply_ninv: bool = Tru
     In lazy mode the n^-1 epilogue multiply doubles as the exact
     reduction (mulmod_shoup accepts any u32 representative), so the lazy
     path gets its [0, q) output for free when apply_ninv=True."""
-    qc = jnp.uint32(q)
+    x = jnp.asarray(x)
+    qc = jnp.asarray(q, x.dtype)
     fn = _inv_stage_lazy if lazy else _inv_stage
 
     def stage(carry, wrow):
@@ -120,7 +125,8 @@ def cg_intt(x, itw, itwp, ninv: int, ninv_p: int, q: int, apply_ninv: bool = Tru
     out, _ = jax.lax.scan(stage, x, (itw, itwp), reverse=True, unroll=unroll)
     if apply_ninv:
         mul = mulmod_shoup_lazy if (lazy and not reduce_out) else mulmod_shoup
-        out = mul(out, jnp.uint32(ninv), jnp.uint32(ninv_p), qc)
+        out = mul(out, jnp.asarray(ninv, x.dtype),
+                  jnp.asarray(ninv_p, x.dtype), qc)
     elif lazy and reduce_out:
         out = jnp.where(out >= qc, out - qc, out)
     return out

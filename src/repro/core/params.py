@@ -82,11 +82,22 @@ def primitive_root(q: int) -> int:
 
 
 def root_of_unity(order: int, q: int) -> int:
-    """A primitive ``order``-th root of unity mod q (order | q-1)."""
-    assert (q - 1) % order == 0
+    """A primitive ``order``-th root of unity mod q (order | q-1).
+
+    ValueError (not assert — ``python -O`` strips asserts) naming the
+    offending modulus: a silently-wrong root poisons every twiddle
+    table built from it."""
+    if (q - 1) % order != 0:
+        raise ValueError(
+            f"root_of_unity: modulus q={q} has no order-{order} root "
+            f"(need order | q-1; q-1 = {q - 1} leaves remainder "
+            f"{(q - 1) % order})")
     g = primitive_root(q)
     w = pow(g, (q - 1) // order, q)
-    assert pow(w, order, q) == 1 and pow(w, order // 2, q) != 1
+    if not (pow(w, order, q) == 1 and pow(w, order // 2, q) != 1):
+        raise ValueError(
+            f"root_of_unity: derived w={w} is not a primitive order-"
+            f"{order} root mod q={q}")
     return w
 
 
@@ -196,10 +207,20 @@ def make_ntt_params(n: int, q: int | None = None, bits: int = 30,
     the sub-NTT roots to be specific powers of the big transform's root."""
     if q is None:
         q = gen_ntt_primes(1, n, bits)[0]
-    assert (q - 1) % (2 * n) == 0, "q must be ≡ 1 mod 2n"
+    if (q - 1) % (2 * n) != 0:
+        # ValueError, not assert: under python -O a stripped assert
+        # would let a non-NTT-friendly modulus through and every
+        # twiddle table downstream would be silently wrong.
+        raise ValueError(
+            f"make_ntt_params: modulus q={q} is not NTT-friendly for "
+            f"n={n} (need q ≡ 1 mod 2n = {2 * n}; "
+            f"q-1 mod 2n = {(q - 1) % (2 * n)})")
     if psi is None:
         psi = root_of_unity(2 * n, q)
-    assert pow(psi, 2 * n, q) == 1 and pow(psi, n, q) != 1, "psi must have order 2n"
+    if not (pow(psi, 2 * n, q) == 1 and pow(psi, n, q) != 1):
+        raise ValueError(
+            f"make_ntt_params: psi={psi} does not have exact order "
+            f"2n={2 * n} mod q={q}")
     omega = pow(psi, 2, q)
 
     exps = cg_twiddle_exponents(n)

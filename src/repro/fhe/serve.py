@@ -50,6 +50,13 @@ Grouping rules (also the "when batching does not apply" rules):
     instead of blocking the drain (no head-of-line blocking on shape).
   * Per-request scales ride along host-side (exact per-ciphertext
     tracking), so scale differences never split a group.
+  * Schemes NEVER batch together: ``mlkem_*`` requests (FIPS 203
+    keygen/encaps/decaps, ciphertext-less ``payload`` dicts riding the
+    u16 banks kernels via ``repro.pq.mlkem``) group under a scheme tag
+    instead of a residue basis, an ML-KEM request carrying a CKKS
+    ciphertext fails alone at screening, and ``_dispatch`` refuses a
+    mixed batch outright — one engine drains a mixed CKKS + ML-KEM
+    queue, but every dispatch is single-scheme.
 
 Padding: each group is padded up to a multiple of ``batch_tile`` by
 repeating its last request (results for pad rows are dropped).  That
@@ -84,26 +91,50 @@ from repro.fhe.evalplan import (Ciphertext, EvalPlan, check_level,
                                 check_same_basis, release_retired)
 from repro.kernels import autotune
 
-# op kinds a request may carry; rotate/conjugate share the Galois batch
-OPS = ("multiply", "rescale", "rotate", "conjugate", "matvec")
+# op kinds a request may carry; rotate/conjugate share the Galois batch.
+# mlkem_* kinds are the ML-KEM scheme's requests: ciphertext-less,
+# payload-carrying, and NEVER batched with any CKKS kind (cross-scheme
+# groups are rejected — see _screen / _dispatch).
+MLKEM_OPS = ("mlkem_keygen", "mlkem_encaps", "mlkem_decaps")
+OPS = ("multiply", "rescale", "rotate", "conjugate", "matvec") + MLKEM_OPS
+
+# per-op required payload keys for the ML-KEM request kinds
+_MLKEM_PAYLOAD = {
+    "mlkem_keygen": ("d", "z"),          # (32,) u8 seeds
+    "mlkem_encaps": ("ek", "m"),         # (1184,) key, (32,) randomness
+    "mlkem_decaps": ("dk", "ct"),        # (2400,) key, (1088,) ciphertext
+}
 
 
 @dataclasses.dataclass
 class FheRequest:
     """One homomorphic op on one ciphertext (plus an operand for
     multiply, a slot amount for rotate, a ``linalg.PtMatrix`` weight
-    pack for matvec)."""
+    pack for matvec) — or one ML-KEM op carrying a byte-array
+    ``payload`` dict instead of a ciphertext (``ct=None``)."""
     rid: int
     op: str
-    ct: Ciphertext
+    ct: Ciphertext | None = None
     other: Ciphertext | None = None      # multiply rhs
     r: int = 0                           # rotate amount
     matrix: "linalg.PtMatrix | None" = None   # matvec weight pack
+    payload: dict | None = None          # ML-KEM byte-array inputs
 
     def __post_init__(self):
         if self.op not in OPS:
             raise ValueError(f"request {self.rid}: unknown op {self.op!r} "
                              f"(expected one of {OPS})")
+        if self.op in MLKEM_OPS:
+            want = _MLKEM_PAYLOAD[self.op]
+            if self.payload is None or any(k not in self.payload
+                                           for k in want):
+                raise ValueError(
+                    f"request {self.rid}: {self.op} needs a payload dict "
+                    f"with keys {want}")
+            return          # ct deliberately unchecked: screened per-drain
+        if self.ct is None:
+            raise ValueError(
+                f"request {self.rid}: {self.op} needs a ciphertext")
         if self.op == "multiply" and self.other is None:
             raise ValueError(f"request {self.rid}: multiply needs 'other'")
         if self.op == "matvec" and not isinstance(self.matrix, linalg.PtMatrix):
@@ -241,6 +272,15 @@ class CkksServeEngine:
     def _kind(req: FheRequest) -> str:
         return "galois" if req.op in ("rotate", "conjugate") else req.op
 
+    @staticmethod
+    def _basis(req: FheRequest):
+        """The shape/scheme component of the group key: CKKS requests
+        group by residue basis, ML-KEM requests (no ciphertext) by a
+        scheme tag — so cross-scheme requests can never share a group
+        even if a kind ever collided."""
+        return (req.ct.primes if req.ct is not None
+                else ("mlkem", req.op))
+
     def _screen(self, req: FheRequest, done: dict, failed: dict) -> bool:
         """Admission-time screening for one request; returns True if it
         should queue for dispatch.  Identity rotations (r = 0 mod
@@ -250,6 +290,17 @@ class CkksServeEngine:
         to run first and failed such requests; pinned in
         tests/test_serve_fhe.py).  Validation failures land in
         ``failed`` so a bad request never aborts the batch."""
+        if req.op in MLKEM_OPS:
+            if req.ct is not None:
+                # cross-scheme guard: an ML-KEM request smuggling a CKKS
+                # ciphertext fails ALONE — it must never open (or join)
+                # a batch whose kernels expect the other scheme's lanes
+                failed[req.rid] = (
+                    f"request {req.rid}: {req.op} is an ML-KEM op and "
+                    f"cannot carry a CKKS ciphertext — cross-scheme "
+                    f"requests never batch together")
+                return False
+            return True
         if req.op == "rotate" and req.r % (self.plan.n // 2) == 0:
             ct = req.ct
             done[req.rid] = Ciphertext(ct.c0, ct.c1, ct.scale)
@@ -278,16 +329,27 @@ class CkksServeEngine:
         failed: dict[int, str] = {}
         for req in requests:
             if self._screen(req, done, failed):
-                groups[(self._kind(req), req.ct.primes)].append(req)
+                groups[(self._kind(req), self._basis(req))].append(req)
         return groups, done, failed
 
     def _g_of(self, req: FheRequest) -> int:
         return (2 * self.plan.n - 1 if req.op == "conjugate"
                 else self.plan.rotation_group_element(req.r))
 
-    def _dispatch(self, kind: str, reqs: list) -> list[Ciphertext]:
+    def _dispatch(self, kind: str, reqs: list) -> list:
         plan = self.plan
+        schemes = {"mlkem" if r.op in MLKEM_OPS else "ckks" for r in reqs}
+        if len(schemes) > 1:
+            # belt and braces under the grouping policy: the (kind,
+            # basis) key already separates schemes, so reaching here
+            # means a caller bypassed grouping — refuse loudly rather
+            # than feed one scheme's rows to the other's kernels
+            raise ValueError(
+                f"_dispatch: cross-scheme batch {sorted(schemes)} — "
+                f"CKKS and ML-KEM requests never batch together")
         reqs = _pad(reqs, self.group_tile)
+        if kind in MLKEM_OPS:
+            return self._mlkem_dispatch(kind, reqs)
         if kind == "multiply":
             outs = plan.multiply_many([r.ct for r in reqs],
                                       [r.other for r in reqs])
@@ -297,6 +359,37 @@ class CkksServeEngine:
             outs = plan.galois_ks_many([r.ct for r in reqs],
                                        [self._g_of(r) for r in reqs])
         return outs
+
+    @staticmethod
+    def _mlkem_dispatch(kind: str, reqs: list) -> list:
+        """One batched ML-KEM dispatch for a (padded) same-op group: the
+        payload rows stack into (b, …) u8 arrays and ride the pq.mlkem
+        batch entry points — whose polynomial arithmetic runs through
+        the SAME banks kernels as the CKKS groups, on the u16 ring.
+        Per-request results: keygen -> (ek, dk), encaps -> (K, ct),
+        decaps -> K."""
+        from repro.pq import mlkem      # lazy: pq is optional for CKKS use
+
+        def rows(key):
+            return np.stack([np.asarray(r.payload[key], dtype=np.uint8)
+                             for r in reqs])
+
+        if kind == "mlkem_keygen":
+            ek, dk = mlkem.keygen_batch(rows("d"), rows("z"))
+            return [(ek[i], dk[i]) for i in range(len(reqs))]
+        if kind == "mlkem_encaps":
+            key, ct = mlkem.encaps_batch(rows("ek"), rows("m"))
+            return [(key[i], ct[i]) for i in range(len(reqs))]
+        key = mlkem.decaps_batch(rows("dk"), rows("ct"))
+        return [key[i] for i in range(len(reqs))]
+
+    @staticmethod
+    def _block_outs(outs: list) -> None:
+        """Synchronize a drained group: CKKS outs block on their device
+        stacks; ML-KEM outs are host numpy already (their device work
+        was synchronized inside the batched kernel calls)."""
+        jax.block_until_ready([x for ct in outs if isinstance(ct, Ciphertext)
+                               for x in (ct.c0.data, ct.c1.data)])
 
     def _matvec_group(self, reqs: list, failed: dict):
         """Per-request matvec composites (no tile padding).  ANY
@@ -340,7 +433,8 @@ class CkksServeEngine:
             rows = (len(reqs) + pad) // self.devices
             for d in range(self.devices):
                 stats["per_device_rows"][d] += rows
-        key = f"{kind}@L{len(reqs[0].ct.primes) - 1}"
+        key = (f"{kind}@mlkem" if kind in MLKEM_OPS
+               else f"{kind}@L{len(reqs[0].ct.primes) - 1}")
         stats["groups"][key] = stats["groups"].get(key, 0) + len(reqs)
 
     def _finish_stats(self, stats, before, traces_before, t0):
@@ -400,8 +494,7 @@ class CkksServeEngine:
                 outs = self._dispatch(kind, reqs)
             # the drain discipline: fully synchronize this group before
             # staging the next one (run_async defers exactly this)
-            jax.block_until_ready([x for ct in outs
-                                   for x in (ct.c0.data, ct.c1.data)])
+            self._block_outs(outs)
             for req, ct in zip(reqs, outs):      # zip drops pad rows
                 out[req.rid] = ct
             self._account_group(stats, kind, reqs)
@@ -418,12 +511,12 @@ class CkksServeEngine:
         dispatches, so a request at a new basis opens a group instead
         of blocking the drain."""
         head = pending[0]
-        key = (self._kind(head), head.ct.primes)
+        key = (self._kind(head), self._basis(head))
         take: list = []
         rest: deque = deque()
         for req in pending:
             if (len(take) < self.max_batch
-                    and (self._kind(req), req.ct.primes) == key):
+                    and (self._kind(req), self._basis(req)) == key):
                 take.append(req)
             else:
                 rest.append(req)
@@ -434,8 +527,7 @@ class CkksServeEngine:
     def _drain(self, batch, out, done_t, t0, stats):
         """Block on an in-flight batch and deliver its answers."""
         kind, reqs, outs = batch
-        jax.block_until_ready([x for ct in outs
-                               for x in (ct.c0.data, ct.c1.data)])
+        self._block_outs(outs)
         done = time.perf_counter() - t0
         for req, ct in zip(reqs, outs):          # zip drops pad rows
             out[req.rid] = ct

@@ -3,7 +3,11 @@
 Every kernel wrapper takes a ``tile`` — the batch-tile edge of its
 (prime, batch_tile) Pallas grid.  The historical default was a fixed 8
 regardless of backend, ring size, or batch; this module picks it
-per ``(backend, kernel family, k, n, b)`` instead.
+per ``(backend, kernel family, k, n, b, dtype)`` instead.  The dtype
+component keeps scheme families apart: a uint16 small-ring workload
+(ML-KEM's n=256/q=3329) must never collide with the uint32 CKKS entry
+for the same (family, k, n, b) — their kernels, lane widths and best
+tiles are unrelated.
 
 Resolution order (``resolve_tile``) — NOTHING here ever measures
 implicitly, so jit-signature counts stay bounded and the PR 6
@@ -43,6 +47,7 @@ import functools
 import json
 import os
 import time
+import warnings
 
 import jax
 import numpy as np
@@ -54,9 +59,10 @@ ENV_PIN = "SCE_NTT_TILE"
 ENV_CACHE = "SCE_NTT_AUTOTUNE_CACHE"
 ENV_AUTOTUNE = "SCE_NTT_AUTOTUNE"
 
-# (backend, family, k, n, b) -> best tile
+# (backend, family, k, n, b, dtype) -> best tile
 _MEM: dict[tuple, int] = {}
 _DISK_LOADED = False
+_KEY_PARTS = 6      # the persisted "be|fam|k|n|b|dtype" format
 
 
 def clamp(tile: int, b: int) -> int:
@@ -71,8 +77,9 @@ def _backend() -> str:
     return jax.default_backend()
 
 
-def _key(family: str, k: int, n: int, b: int) -> tuple:
-    return (_backend(), family, int(k), int(n), int(b))
+def _key(family: str, k: int, n: int, b: int,
+         dtype: str = "uint32") -> tuple:
+    return (_backend(), family, int(k), int(n), int(b), str(dtype))
 
 
 def _trace_clean() -> bool:
@@ -105,11 +112,23 @@ def _load_disk() -> None:
     try:
         with open(path) as f:
             data = json.load(f)
+        stale = 0
         for ks, tile in data.get("entries", {}).items():
             parts = ks.split("|")
-            if len(parts) == 5:
-                be, fam, k, n, b = parts
-                _MEM[(be, fam, int(k), int(n), int(b))] = int(tile)
+            if len(parts) == _KEY_PARTS:
+                be, fam, k, n, b, dt = parts
+                _MEM[(be, fam, int(k), int(n), int(b), dt)] = int(tile)
+            else:
+                # pre-dtype (5-part) entries are ambiguous: silently
+                # reading one as uint32 could hand a u16 family a tile
+                # tuned for the wrong lane width — skip them loudly
+                stale += 1
+        if stale:
+            warnings.warn(
+                f"autotune: ignoring {stale} old-format entr"
+                f"{'y' if stale == 1 else 'ies'} in {path!r} (expected "
+                f"{_KEY_PARTS}-part 'backend|family|k|n|b|dtype' keys); "
+                "re-measure to refresh the cache", stacklevel=2)
     except (OSError, ValueError, KeyError):
         pass    # a stale/corrupt cache must never break dispatch
 
@@ -157,13 +176,16 @@ def shard_batch(b: int, shards: int = 1) -> int:
 
 
 def resolve_tile(family: str, k: int, n: int, b: int,
-                 tile: int | None = None, *, shards: int = 1) -> int:
+                 tile: int | None = None, *, shards: int = 1,
+                 dtype: str = "uint32") -> int:
     """The one tile-resolution funnel every entry point routes through.
 
     ``shards`` > 1 resolves against the per-shard batch ``ceil(b /
     shards)`` — the batch each mesh device actually dispatches — so the
     cache key, the clamp and any measurement all describe the kernel
-    grid that really runs (see module docstring)."""
+    grid that really runs (see module docstring).  ``dtype`` is the ring
+    element dtype name; non-u32 families resolve through their own cache
+    entries and never alias the CKKS u32 ones."""
     b = shard_batch(b, shards)
     if tile is not None:
         return clamp(tile, b)
@@ -171,17 +193,18 @@ def resolve_tile(family: str, k: int, n: int, b: int,
     if pin is not None:
         return clamp(pin, b)
     _load_disk()
-    key = _key(family, k, n, b)
+    key = _key(family, k, n, b, dtype)
     hit = _MEM.get(key)
     if hit is not None:
         return clamp(hit, b)
     if (os.environ.get(ENV_AUTOTUNE) == "1" and family in _RUNNERS
             and _trace_clean()):
-        return clamp(measure(family, k, n, b), b)
+        return clamp(measure(family, k, n, b, dtype=dtype), b)
     return clamp(DEFAULT_TILE, b)
 
 
-def ensure(family: str, k: int, n: int, b: int, *, shards: int = 1) -> int:
+def ensure(family: str, k: int, n: int, b: int, *, shards: int = 1,
+           dtype: str = "uint32") -> int:
     """Measure-on-miss (benchmarks): pin > cache > measure > default.
     ``shards`` resolves against the per-shard batch like ``resolve_tile``."""
     b = shard_batch(b, shards)
@@ -189,21 +212,28 @@ def ensure(family: str, k: int, n: int, b: int, *, shards: int = 1) -> int:
     if pin is not None:
         return clamp(pin, b)
     _load_disk()
-    key = _key(family, k, n, b)
+    key = _key(family, k, n, b, dtype)
     hit = _MEM.get(key)
     if hit is not None:
         return clamp(hit, b)
     if family in _RUNNERS and _trace_clean():
-        return clamp(measure(family, k, n, b), b)
+        return clamp(measure(family, k, n, b, dtype=dtype), b)
     return clamp(DEFAULT_TILE, b)
 
 
-def measure(family: str, k: int, n: int, b: int, *, reps: int = 3) -> int:
+def measure(family: str, k: int, n: int, b: int, *, reps: int = 3,
+            dtype: str = "uint32") -> int:
     """Time every candidate tile <= b for the family's representative
     workload and cache the argmin.  Falls back to the static default on
     any failure (a family that cannot run at some tile must not take
-    dispatch down with it)."""
-    key = _key(family, k, n, b)
+    dispatch down with it).  The registered runners are u32 workloads;
+    a non-u32 dtype caches the static default until a same-width runner
+    exists (never a tile timed on the wrong lane width)."""
+    key = _key(family, k, n, b, dtype)
+    if dtype != "uint32":
+        _MEM[key] = clamp(DEFAULT_TILE, b)
+        _save_disk()
+        return _MEM[key]
     try:
         run = _RUNNERS[family](int(k), int(n), int(b))
     except Exception:

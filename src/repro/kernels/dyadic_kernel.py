@@ -14,6 +14,14 @@ Kernels:
     a single program.  Grid (prime, batch_tile); the digit loop is
     unrolled inside the kernel so the accumulator stays in VMEM across
     all digits (the paper's pipelined MM -> MA chain).
+  * ``dyadic_basemul_banks`` — the degree-1 basecase multiplication of
+    an INCOMPLETE ring (``core.ringspec.RingSpec`` with block=2, e.g.
+    ML-KEM): pair j of the NTT domain is (x[j], x[j+n/2]) and products
+    are (a0+a1·X)(b0+b1·X) mod (X² − γ_j) with per-pair ζ factors γ.
+
+Barrett reduction follows the element dtype (see core.modmath): u32
+lanes use the limb mulhi; u16 lanes upcast to an exact u32 product with
+the (2^10, 2^12) window constants.
 """
 from __future__ import annotations
 
@@ -25,6 +33,7 @@ from jax.experimental import pallas as pl
 
 from repro.core.modmath import MASK16
 from repro.kernels import resolve_interpret
+from repro.kernels.ntt_kernel import _shoup, _shoup_lazy
 
 
 def _mulhi(a, b):
@@ -38,7 +47,21 @@ def _mulhi(a, b):
     return a1 * b1 + (m1 >> 16) + (m2 >> 16)
 
 
+def _barrett16_lazy(a, b, q, mu):
+    # 16-bit lane: P = a*b < 2^24 exact in u32; mu = floor(2^26/q),
+    # qhat = ((P >> 10) * mu) >> 16; r < 2q (exhaustive over the window).
+    u = jnp.uint32
+    prod = a.astype(u) * b.astype(u)
+    qhat = ((prod >> 10) * mu.astype(u)) >> 16
+    return prod - qhat * q.astype(u)
+
+
 def _barrett(a, b, q, mu):
+    if a.dtype == jnp.uint16:
+        r = _barrett16_lazy(a, b, q, mu)
+        q32 = q.astype(jnp.uint32)
+        r = jnp.where(r >= (q32 << 1), r - (q32 << 1), r)
+        return jnp.where(r >= q32, r - q32, r).astype(jnp.uint16)
     hi = _mulhi(a, b)
     lo = a * b
     approx = (hi << 3) | (lo >> 29)
@@ -51,6 +74,11 @@ def _barrett(a, b, q, mu):
 def _barrett_lazy(a, b, q, mu):
     # [0, 2q) band: one conditional subtract instead of two; the MAC
     # digit loop accumulates these and reduces once in its epilogue.
+    if a.dtype == jnp.uint16:
+        r = _barrett16_lazy(a, b, q, mu)
+        q32 = q.astype(jnp.uint32)
+        return jnp.where(r >= (q32 << 1), r - (q32 << 1), r) \
+            .astype(jnp.uint16)
     hi = _mulhi(a, b)
     lo = a * b
     approx = (hi << 3) | (lo >> 29)
@@ -92,7 +120,7 @@ def _tile_call(kernel, args, *, tile: int, interpret: bool | None):
         grid=(b // tile,),
         in_specs=[spec] * len(args),
         out_specs=spec,
-        out_shape=jax.ShapeDtypeStruct((b, n), jnp.uint32),
+        out_shape=jax.ShapeDtypeStruct((b, n), args[0].dtype),
         interpret=interpret,
     )(*args)
 
@@ -170,6 +198,77 @@ def dyadic_inner_banks(ext, evk, qs2, mus2, *, digits: int, tile: int = 8,
             pl.BlockSpec((1, 1), lambda p, i: (p, 0)),
         ],
         out_specs=pl.BlockSpec((1, tile, n), lambda p, i: (p, i, 0)),
-        out_shape=jax.ShapeDtypeStruct((k, b, n), jnp.uint32),
+        out_shape=jax.ShapeDtypeStruct((k, b, n), ext.dtype),
         interpret=interpret,
     )(ext, evk, qs2, mus2)
+
+
+# ----------------------------------------- incomplete-ring basecase mul
+
+def _basemul_banks_kernel(a_ref, b_ref, q_ref, mu_ref, g_ref, gp_ref,
+                          o_ref, *, lazy: bool):
+    """Program (p, i): degree-1 residue products for one batch tile.
+
+    Pair j of the CG-ordered NTT domain is (x[j], x[j+n/2]); the product
+    mod (X² − γ_j) is
+
+        c0[j] = a0·b0 + γ_j·(a1·b1)      c1[j] = a0·b1 + a1·b0
+
+    Variable×variable products use Barrett (no precomputed operand);
+    the γ_j multiply is Shoup (g/gp are the precomputed per-pair rows).
+    Lazy mode accumulates in the [0, 2q) band — on u16 lanes the raw
+    sum stays < 4q < 2^16 — and the epilogue always reduces to [0, q)
+    (the basecase ends the transform, so there is no lazy consumer)."""
+    q = q_ref[0, 0]
+    mu = mu_ref[0, 0]
+    a = a_ref[0]                        # (tile, n)
+    b = b_ref[0]
+    n = a.shape[-1]
+    h = n // 2
+    a0, a1 = a[:, :h], a[:, h:]
+    b0, b1 = b[:, :h], b[:, h:]
+    g = g_ref[0]                        # (1, h) γ row
+    gp = gp_ref[0]
+    if lazy:
+        q2 = q + q
+        t = _shoup_lazy(_barrett_lazy(a1, b1, q, mu), g, gp, q)
+        s0 = _barrett_lazy(a0, b0, q, mu) + t          # < 4q
+        c0 = jnp.where(s0 >= q2, s0 - q2, s0)
+        s1 = _barrett_lazy(a0, b1, q, mu) + _barrett_lazy(a1, b0, q, mu)
+        c1 = jnp.where(s1 >= q2, s1 - q2, s1)
+        c0 = jnp.where(c0 >= q, c0 - q, c0)            # epilogue
+        c1 = jnp.where(c1 >= q, c1 - q, c1)
+    else:
+        t = _shoup(_barrett(a1, b1, q, mu), g, gp, q)
+        s0 = _barrett(a0, b0, q, mu) + t
+        c0 = jnp.where(s0 >= q, s0 - q, s0)
+        s1 = _barrett(a0, b1, q, mu) + _barrett(a1, b0, q, mu)
+        c1 = jnp.where(s1 >= q, s1 - q, s1)
+    o_ref[0] = jnp.concatenate([c0, c1], axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "lazy", "interpret"))
+def dyadic_basemul_banks(a, b, qs2, mus2, gamma, gammap, *, tile: int = 8,
+                         lazy: bool = False, interpret: bool | None = None):
+    """a, b: (k, batch, n) NTT-domain operands of an incomplete ring
+    (canonical [0, q) inputs); qs2/mus2: (k, 1); gamma/gammap: (k, n/2)
+    per-pair ζ factors + Shoup companions.  Returns (k, batch, n)."""
+    interpret = resolve_interpret(interpret)
+    k, bb, n = a.shape
+    assert a.shape == b.shape and bb % tile == 0
+    kern = functools.partial(_basemul_banks_kernel, lazy=lazy)
+    return pl.pallas_call(
+        kern,
+        grid=(k, bb // tile),
+        in_specs=[
+            pl.BlockSpec((1, tile, n), lambda p, i: (p, i, 0)),
+            pl.BlockSpec((1, tile, n), lambda p, i: (p, i, 0)),
+            pl.BlockSpec((1, 1), lambda p, i: (p, 0)),
+            pl.BlockSpec((1, 1), lambda p, i: (p, 0)),
+            pl.BlockSpec((1, n // 2), lambda p, i: (p, 0)),
+            pl.BlockSpec((1, n // 2), lambda p, i: (p, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, tile, n), lambda p, i: (p, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((k, bb, n), a.dtype),
+        interpret=interpret,
+    )(a, b, qs2, mus2, gamma, gammap)

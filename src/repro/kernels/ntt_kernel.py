@@ -9,7 +9,12 @@ overlaps compute on the previous tile).
 
 Twiddles (and their Shoup TW' companions, paper §IV.A) are resident in
 VMEM for all programs; stage t reads row t — the materialized circulating
-CSRM.  All arithmetic is u32 (16-bit-limb mulhi), see core.modmath.
+CSRM.  Arithmetic follows the element dtype (see core.modmath): u32
+lanes use the 16-bit-limb mulhi; u16 lanes (small rings, e.g. ML-KEM's
+q=3329) upcast to an exact u32 product.  The stage loop is depth-generic:
+``stages = log2(n) − log2(block)`` rows stop the INCOMPLETE transform of
+a block>1 ``core.ringspec.RingSpec`` at its degree-(block−1) basecase,
+so the same kernels serve complete (CKKS) and incomplete (Kyber) rings.
 
 Two kernel families live here:
 
@@ -70,13 +75,28 @@ def _mulhi(a, b):
     return a1 * b1 + (m1 >> 16) + (m2 >> 16)
 
 
+def _shoup16_lazy(x, w, wp, q):
+    # 16-bit lane: a 16x16 product is exact in u32, so the Shoup hi-part
+    # is a plain shift (wp = floor(w*2^16/q)); result < 2q < 2^16.
+    u = jnp.uint32
+    r = x.astype(u) * w.astype(u) \
+        - ((x.astype(u) * wp.astype(u)) >> 16) * q.astype(u)
+    return r
+
+
 def _shoup(x, w, wp, q):
+    if x.dtype == jnp.uint16:
+        r = _shoup16_lazy(x, w, wp, q)
+        q32 = q.astype(jnp.uint32)
+        return jnp.where(r >= q32, r - q32, r).astype(jnp.uint16)
     r = x * w - _mulhi(x, wp) * q
     return jnp.where(r >= q, r - q, r)
 
 
 def _shoup_lazy(x, w, wp, q):
-    # [0, 2q) Shoup product: no final subtract.  x may be any u32.
+    # [0, 2q) Shoup product: no final subtract.  x may be any lane value.
+    if x.dtype == jnp.uint16:
+        return _shoup16_lazy(x, w, wp, q).astype(jnp.uint16)
     return x * w - _mulhi(x, wp) * q
 
 
@@ -187,7 +207,7 @@ def _grid_call(kernel, x, tables, row_args, *, tile: int, interpret: bool | None
         grid=(b // tile,),
         in_specs=[pl.BlockSpec((tile, n), lambda i: (i, 0))] + s_tables + s_rows,
         out_specs=pl.BlockSpec((tile, n), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((b, n), jnp.uint32),
+        out_shape=jax.ShapeDtypeStruct((b, n), x.dtype),
         interpret=interpret,
     )(x, *tables, *row_args)
 
@@ -277,7 +297,7 @@ def _banks_grid_call(kernel, x, scalars, tables, rows, *, tile: int,
         grid=(k, b // tile),
         in_specs=in_specs,
         out_specs=pl.BlockSpec((1, tile, n), lambda p, i: (p, i, 0)),
-        out_shape=jax.ShapeDtypeStruct((k, b, n), jnp.uint32),
+        out_shape=jax.ShapeDtypeStruct((k, b, n), x.dtype),
         interpret=interpret,
     )(x, *scalars, *tables, *rows)
 

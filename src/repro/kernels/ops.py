@@ -203,7 +203,8 @@ def ntt_banks(x, t: dict, *, negacyclic: bool = True,
                                      lazy=lazy, reduce_out=reduce_out)
     shape = x.shape
     x3 = x.reshape(k, -1, n)
-    tile = autotune.resolve_tile("ntt_banks", k, n, x3.shape[1], tile)
+    tile = autotune.resolve_tile("ntt_banks", k, n, x3.shape[1], tile,
+                                 dtype=x.dtype.name)
     x3, b = _pad_mid(x3, tile)
     out = ntt_kernel.ntt_fwd_banks_pallas(
         x3, qs[:, None], tw, twp, psi, psip,
@@ -227,7 +228,8 @@ def intt_banks(x, t: dict, *, negacyclic: bool = True,
                                      lazy=lazy, reduce_out=reduce_out)
     shape = x.shape
     x3 = x.reshape(k, -1, n)
-    tile = autotune.resolve_tile("intt_banks", k, n, x3.shape[1], tile)
+    tile = autotune.resolve_tile("intt_banks", k, n, x3.shape[1], tile,
+                                 dtype=x.dtype.name)
     x3, b = _pad_mid(x3, tile)
     out = ntt_kernel.ntt_inv_banks_pallas(
         x3, qs[:, None], ninv[:, None], ninv_p[:, None],
@@ -255,7 +257,8 @@ def twiddle_mul_banks(x, w, wp, qs, *, use_pallas: bool | None = None,
     k, n = x.shape[0], x.shape[-1]
     shape = x.shape
     x3 = x.reshape(k, -1, n)
-    tile = autotune.resolve_tile("twiddle_mul_banks", k, n, x3.shape[1], tile)
+    tile = autotune.resolve_tile("twiddle_mul_banks", k, n, x3.shape[1], tile,
+                                 dtype=x.dtype.name)
     x3, b = _pad_mid(x3, tile)
     out = ntt_kernel.twiddle_mul_banks_pallas(x3, qs[:, None], w, wp,
                                               tile=tile, lazy=lazy)
@@ -292,7 +295,8 @@ def galois_banks(x, idx, *, use_pallas: bool | None = None,
         return ref.galois_banks_ref(x, idx)
     shape = x.shape
     x3 = x.reshape(k, -1, n)
-    tile = autotune.resolve_tile("galois_banks", k, n, x3.shape[1], tile)
+    tile = autotune.resolve_tile("galois_banks", k, n, x3.shape[1], tile,
+                                 dtype=x.dtype.name)
     x3, b = _pad_mid(x3, tile)
     if idx.ndim == 2:
         pad = x3.shape[1] - b
@@ -339,7 +343,8 @@ def galois_digits_banks(ext, idx, *, use_pallas: bool | None = None,
         (idx.shape, ext.shape)
     if not use_pallas:
         return ref.galois_digits_banks_ref(ext, idx)
-    tile = autotune.resolve_tile("galois_digits_banks", k, n, bi, tile)
+    tile = autotune.resolve_tile("galois_digits_banks", k, n, bi, tile,
+                                 dtype=ext.dtype.name)
     pad = (-bi) % tile
     if pad:
         # padded batch rows gather through a true identity (iota) row —
@@ -479,7 +484,8 @@ def dyadic_inner_banks(ext, evk, t: dict, *, use_pallas: bool | None = None,
     if not use_pallas:
         return ref.dyadic_inner_banks_ref(ext, evk, t["qs"], t["mu"], lazy=lazy)
     d, k, b, n = ext.shape
-    tile = autotune.resolve_tile("dyadic_inner_banks", k, n, b, tile)
+    tile = autotune.resolve_tile("dyadic_inner_banks", k, n, b, tile,
+                                 dtype=ext.dtype.name)
     pad = (-b) % tile
     if pad:
         z = jnp.zeros((d, k, pad, n), ext.dtype)
@@ -490,3 +496,44 @@ def dyadic_inner_banks(ext, evk, t: dict, *, use_pallas: bool | None = None,
         ext, evk, t["qs"][:, None], t["mu"][:, None], digits=d, tile=tile,
         lazy=lazy)
     return out[:, :b]
+
+
+def dyadic_basemul_banks(a, b, t: dict, *, batch_leading: bool = False,
+                         use_pallas: bool | None = None,
+                         tile: int | None = None, lazy: bool = True):
+    """Degree-1 basecase multiplication of an INCOMPLETE ring (a
+    ``core.ringspec.RingSpec`` with block=2, e.g. ML-KEM): pair j of the
+    CG-ordered NTT domain is (x[j], x[j+n/2]) and
+
+        c0[j] = a0·b0 + γ_j·(a1·b1)      c1[j] = a0·b1 + a1·b0
+
+    with the per-pair ζ factors γ from the ring pack's ``gamma`` /
+    ``gammap`` rows.  a, b: (k, ..., n) canonical [0, q) NTT-domain
+    operands over the pack's rings (or (b, k, ..., n) stacks with
+    ``batch_leading=True`` — both operands swap); t: a
+    ``core.ringspec.ring_table_pack``.  This is the incomplete-domain
+    counterpart of the complete transform's pointwise product."""
+    if batch_leading:
+        return _swap_ct_axis(
+            dyadic_basemul_banks(_swap_ct_axis(a), _swap_ct_axis(b), t,
+                                 use_pallas=use_pallas, tile=tile, lazy=lazy))
+    use_pallas = _on_tpu() if use_pallas is None else use_pallas
+    a = jnp.asarray(a)
+    b = jnp.asarray(b)
+    assert a.shape == b.shape, (a.shape, b.shape)
+    k, n = a.shape[0], a.shape[-1]
+    qs, mus, gamma, gammap = _rows(t, k, "qs", "mu", "gamma", "gammap")
+    if not use_pallas:
+        return ref.dyadic_basemul_banks_ref(a, b, qs, mus, gamma, gammap,
+                                            lazy=lazy)
+    shape = a.shape
+    a3 = a.reshape(k, -1, n)
+    b3 = b.reshape(k, -1, n)
+    tile = autotune.resolve_tile("dyadic_basemul_banks", k, n, a3.shape[1],
+                                 tile, dtype=a.dtype.name)
+    a3, bsz = _pad_mid(a3, tile)
+    b3, _ = _pad_mid(b3, tile)
+    out = dyadic_kernel.dyadic_basemul_banks(
+        a3, b3, qs[:, None], mus[:, None], gamma, gammap, tile=tile,
+        lazy=lazy)
+    return out[:, :bsz].reshape(shape)

@@ -65,7 +65,8 @@ def ntt_fwd_banks_ref(x, qs, tw, twp, pre, prep, negacyclic: bool,
     exactly, so even the [0, 2q) representatives match bit-for-bit."""
 
     def per(xi, q, twi, twpi, ps, psp):
-        q = jnp.uint32(q)
+        # q keeps the pack's element dtype (u32 CKKS rows, u16 small
+        # rings) so the modmath dtype dispatch sees matching lanes
         if negacyclic:
             xi = (mulmod_shoup_lazy if lazy else mulmod_shoup)(xi, ps, psp, q)
         return _ntt.cg_ntt(xi, twi, twpi, q, unroll=2, lazy=lazy,
@@ -78,7 +79,6 @@ def ntt_inv_banks_ref(x, qs, ninv, ninv_p, itw, itwp, post, postp,
                       negacyclic: bool, lazy: bool = False,
                       reduce_out: bool = True):
     def per(xi, q, nv, nvp, itwi, itwpi, ips, ipsp):
-        q = jnp.uint32(q)
         xi = _ntt.cg_intt(xi, itwi, itwpi, 0, 0, q, apply_ninv=False, unroll=2,
                           lazy=lazy, reduce_out=False)
         mul = mulmod_shoup_lazy if (lazy and not reduce_out) else mulmod_shoup
@@ -124,6 +124,43 @@ def galois_digits_banks_ref(x, idx):
     if x.shape[2] == 1 and idx.shape[0] != 1:
         return jnp.take(x[:, :, 0], idx, axis=-1)
     return jnp.take_along_axis(x, idx[None, None], axis=-1)
+
+
+def dyadic_basemul_banks_ref(a, b, qs, mus, gamma, gammap,
+                             lazy: bool = False):
+    """Degree-1 basecase multiplication of an incomplete ring (block=2):
+    a, b (k, ..., n) canonical NTT-domain operands, gamma/gammap (k, n/2)
+    per-pair ζ factors.  Mirrors the kernel's exact op sequence
+    (Barrett for var×var, Shoup for γ, lazy band accumulate)."""
+    a = jnp.asarray(a)
+    b = jnp.asarray(b)
+    n = a.shape[-1]
+    h = n // 2
+    ex = (1,) * (a.ndim - 2)
+    k = qs.shape[0]
+    q = qs.reshape((k,) + ex + (1,))
+    mu = mus.reshape((k,) + ex + (1,))
+    g = gamma.reshape((k,) + ex + (h,))
+    gp = gammap.reshape((k,) + ex + (h,))
+    a0, a1 = a[..., :h], a[..., h:]
+    b0, b1 = b[..., :h], b[..., h:]
+    if lazy:
+        q2 = q + q
+        t = mulmod_shoup_lazy(mulmod_barrett_lazy(a1, b1, q, mu), g, gp, q)
+        s0 = mulmod_barrett_lazy(a0, b0, q, mu) + t
+        c0 = jnp.where(s0 >= q2, s0 - q2, s0)
+        s1 = mulmod_barrett_lazy(a0, b1, q, mu) \
+            + mulmod_barrett_lazy(a1, b0, q, mu)
+        c1 = jnp.where(s1 >= q2, s1 - q2, s1)
+        c0 = jnp.where(c0 >= q, c0 - q, c0)
+        c1 = jnp.where(c1 >= q, c1 - q, c1)
+    else:
+        t = mulmod_shoup(mulmod_barrett(a1, b1, q, mu), g, gp, q)
+        s0 = mulmod_barrett(a0, b0, q, mu) + t
+        c0 = jnp.where(s0 >= q, s0 - q, s0)
+        s1 = mulmod_barrett(a0, b1, q, mu) + mulmod_barrett(a1, b0, q, mu)
+        c1 = jnp.where(s1 >= q, s1 - q, s1)
+    return jnp.concatenate([c0, c1], axis=-1)
 
 
 def dyadic_inner_banks_ref(ext, evk, qs, mus, lazy: bool = False):

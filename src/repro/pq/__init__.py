@@ -1,0 +1,6 @@
+"""Post-quantum schemes over the scheme-generic banks kernels.
+
+The first resident is ML-KEM-768 (``repro.pq.mlkem``): every
+polynomial multiply/NTT routes through ``kernels.ops`` under the
+``core.ringspec.MLKEM_RING`` descriptor — no scheme-private NTT.
+"""

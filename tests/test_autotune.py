@@ -55,7 +55,7 @@ def test_env_pin(monkeypatch):
 
 
 def test_cache_hit_beats_default(monkeypatch):
-    key = (jax.default_backend(), "ntt", 1, 256, 100)
+    key = (jax.default_backend(), "ntt", 1, 256, 100, "uint32")
     monkeypatch.setitem(autotune._MEM, key, 16)
     assert autotune.resolve_tile("ntt", 1, 256, 100) == 16
     # pin still outranks the cache
@@ -117,8 +117,9 @@ def test_measure_gated_flag_runs_fake_runner(monkeypatch):
     # reuses its candidate/caching logic but deterministic "times"
     real_measure = autotune.measure
 
-    def shim(family, k, n, b, *, reps=3):
-        key = (jax.default_backend(), family, int(k), int(n), int(b))
+    def shim(family, k, n, b, *, reps=3, dtype="uint32"):
+        key = (jax.default_backend(), family, int(k), int(n), int(b),
+               "uint32")
         run = autotune._RUNNERS[family](k, n, b)
         cands = sorted({autotune.clamp(t, b) for t in
                         autotune.CANDIDATE_TILES})
@@ -148,7 +149,7 @@ def test_real_measure_smoke(monkeypatch):
 def test_disk_cache_roundtrip(tmp_path, monkeypatch):
     path = tmp_path / "tiles.json"
     monkeypatch.setenv(autotune.ENV_CACHE, str(path))
-    key = (jax.default_backend(), "ntt_banks", 3, 1024, 16)
+    key = (jax.default_backend(), "ntt_banks", 3, 1024, 16, "uint32")
     autotune._MEM[key] = 16
     autotune._save_disk()
     data = json.loads(path.read_text())
@@ -168,7 +169,7 @@ def test_disk_cache_corrupt_is_ignored(tmp_path, monkeypatch):
 
 
 def test_dump_and_table(tmp_path):
-    key = (jax.default_backend(), "dyadic_mul", 1, 512, 8)
+    key = (jax.default_backend(), "dyadic_mul", 1, 512, 8, "uint32")
     autotune._MEM[key] = 2
     t = autotune.table()
     assert t["backend"] == jax.default_backend()
@@ -193,8 +194,10 @@ def test_resolve_uses_per_shard_cache_entry(monkeypatch):
     global batch would tune for a grid no device ever runs."""
     k, n = 3, 1024
     be = jax.default_backend()
-    monkeypatch.setitem(autotune._MEM, (be, "serve_batch", k, n, 8), 16)
-    monkeypatch.setitem(autotune._MEM, (be, "serve_batch", k, n, 32), 2)
+    monkeypatch.setitem(autotune._MEM,
+                        (be, "serve_batch", k, n, 8, "uint32"), 16)
+    monkeypatch.setitem(autotune._MEM,
+                        (be, "serve_batch", k, n, 32, "uint32"), 2)
     # unsharded resolve sees the global-batch entry...
     assert autotune.resolve_tile("serve_batch", k, n, 32) == 2
     # ...the 4-shard resolve sees the per-shard one (clamped to b=8)
@@ -219,8 +222,10 @@ def test_serve_engine_resolves_per_shard_tile(monkeypatch):
     plan = ctx.plan()
     k = len(plan.ctx.qs)
     be = jax.default_backend()
-    monkeypatch.setitem(autotune._MEM, (be, "serve_batch", k, plan.n, 8), 2)
-    monkeypatch.setitem(autotune._MEM, (be, "serve_batch", k, plan.n, 32), 8)
+    monkeypatch.setitem(autotune._MEM,
+                        (be, "serve_batch", k, plan.n, 8, "uint32"), 2)
+    monkeypatch.setitem(autotune._MEM,
+                        (be, "serve_batch", k, plan.n, 32, "uint32"), 8)
     monkeypatch.setattr(type(plan), "mesh_devices",
                         property(lambda self: 4))
     eng = serve.CkksServeEngine(plan)
@@ -228,6 +233,78 @@ def test_serve_engine_resolves_per_shard_tile(monkeypatch):
     assert eng.batch_tile == 2          # the b=8 per-shard entry, not b=32
     assert eng.group_tile == 8          # tile x devices
     assert eng.max_batch == 32          # 4 x group_tile default
+
+
+def test_dtype_keys_do_not_collide(monkeypatch):
+    """The scheme-collision regression: a u16 small-ring family and the
+    u32 CKKS family with identical (family, k, n, b) resolve through
+    DIFFERENT cache entries."""
+    be = jax.default_backend()
+    monkeypatch.setitem(autotune._MEM,
+                        (be, "ntt_banks", 1, 256, 64, "uint32"), 32)
+    monkeypatch.setitem(autotune._MEM,
+                        (be, "ntt_banks", 1, 256, 64, "uint16"), 4)
+    assert autotune.resolve_tile("ntt_banks", 1, 256, 64) == 32
+    assert autotune.resolve_tile("ntt_banks", 1, 256, 64,
+                                 dtype="uint16") == 4
+    # a u16 entry alone must NOT satisfy a u32 lookup (or vice versa)
+    autotune.clear()
+    monkeypatch.setitem(autotune._MEM,
+                        (be, "ntt_banks", 1, 256, 64, "uint16"), 4)
+    assert autotune.resolve_tile("ntt_banks", 1, 256, 64) == \
+        autotune.DEFAULT_TILE
+
+
+def test_disk_cache_roundtrips_dtype(tmp_path, monkeypatch):
+    """u16 and u32 entries survive a save/load cycle as distinct keys."""
+    path = tmp_path / "tiles.json"
+    monkeypatch.setenv(autotune.ENV_CACHE, str(path))
+    be = jax.default_backend()
+    autotune._MEM[(be, "ntt_banks", 1, 256, 64, "uint32")] = 16
+    autotune._MEM[(be, "ntt_banks", 1, 256, 64, "uint16")] = 2
+    autotune._save_disk()
+    entries = json.loads(path.read_text())["entries"]
+    assert entries[f"{be}|ntt_banks|1|256|64|uint32"] == 16
+    assert entries[f"{be}|ntt_banks|1|256|64|uint16"] == 2
+    autotune.clear()
+    autotune._DISK_LOADED = False
+    assert autotune.resolve_tile("ntt_banks", 1, 256, 64) == 16
+    assert autotune.resolve_tile("ntt_banks", 1, 256, 64,
+                                 dtype="uint16") == 2
+
+
+def test_disk_cache_old_format_ignored_with_warning(tmp_path, monkeypatch):
+    """Pre-dtype (5-part) persisted entries are skipped with a warning —
+    never misread as some dtype's tile."""
+    path = tmp_path / "tiles.json"
+    be = jax.default_backend()
+    path.write_text(json.dumps({"entries": {
+        f"{be}|ntt_banks|1|256|64": 32,              # old 5-part key
+        f"{be}|ntt_banks|1|256|64|uint16": 2,        # current format
+    }}))
+    monkeypatch.setenv(autotune.ENV_CACHE, str(path))
+    autotune.clear()
+    autotune._DISK_LOADED = False
+    with pytest.warns(UserWarning, match="old-format"):
+        autotune._load_disk()
+    # the stale entry resolved nothing; the 6-part one loaded fine
+    assert autotune.resolve_tile("ntt_banks", 1, 256, 64) == \
+        autotune.DEFAULT_TILE
+    assert autotune.resolve_tile("ntt_banks", 1, 256, 64,
+                                 dtype="uint16") == 2
+
+
+def test_measure_non_u32_caches_default_without_timing(monkeypatch):
+    """A u16 family never times the u32 runners — it caches the clamped
+    static default under its own key instead."""
+    def boom(*a, **kw):
+        raise AssertionError("u32 runner invoked for a uint16 measure")
+
+    monkeypatch.setitem(autotune._RUNNERS, "ntt_banks", boom)
+    got = autotune.measure("ntt_banks", 1, 256, 64, dtype="uint16")
+    assert got == autotune.DEFAULT_TILE
+    assert autotune.resolve_tile("ntt_banks", 1, 256, 64,
+                                 dtype="uint16") == got
 
 
 def test_ops_honors_env_pin(monkeypatch):

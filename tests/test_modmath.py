@@ -156,15 +156,40 @@ def test_barrett_precompute_range_valueerror():
     assert mm.barrett_precompute(Q) == (1 << 60) // Q
 
 
-def test_barrett_precompute_guard_survives_python_O():
-    """Under ``python -O`` an assert is stripped; the guard must not be.
-    Runs the check in a real ``-O`` subprocess."""
+def test_barrett_precompute_16bit_window_valueerror():
+    """The 16-bit lane has its own (2^10, 2^12) window; the error names
+    the offending modulus and the accepted range."""
+    for bad in (0, 1, 1 << 10, 1 << 12, 3329 << 4):
+        with pytest.raises(ValueError, match=rf"q={bad}.*uint16"):
+            mm.barrett_precompute(bad, bits=16)
+    assert mm.barrett_precompute(3329, bits=16) == (1 << 26) // 3329
+    # a q valid for one lane is NOT silently accepted by the other
+    with pytest.raises(ValueError):
+        mm.barrett_precompute(3329)             # u16-window q on u32 lane
+    with pytest.raises(ValueError):
+        mm.barrett_precompute(Q, bits=16)       # u32-window q on u16 lane
+
+
+def _run_O_guard(code):
+    """Run ``code`` in a real ``python -O`` subprocess (asserts stripped)
+    and require the GUARDED sentinel — the PR 7 guard-test pattern."""
     import os
     import subprocess
     import sys
     src = os.path.abspath(
         os.path.join(os.path.dirname(__file__), os.pardir, "src"))
-    code = (
+    env = dict(os.environ)
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-O", "-c", code], env=env,
+                         capture_output=True, text=True, timeout=300)
+    assert out.returncode == 0, out.stderr
+    assert "GUARDED" in out.stdout and "UNGUARDED" not in out.stdout, \
+        f"stdout={out.stdout}\nstderr={out.stderr}"
+
+
+def test_barrett_precompute_guard_survives_python_O():
+    """Under ``python -O`` an assert is stripped; the guard must not be."""
+    _run_O_guard(
         "from repro.core.modmath import barrett_precompute\n"
         "try:\n"
         "    barrett_precompute(1 << 31)\n"
@@ -173,9 +198,44 @@ def test_barrett_precompute_guard_survives_python_O():
         "else:\n"
         "    print('UNGUARDED')\n"
     )
-    env = dict(os.environ)
-    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
-    out = subprocess.run([sys.executable, "-O", "-c", code], env=env,
-                         capture_output=True, text=True, timeout=300)
-    assert out.returncode == 0, out.stderr
-    assert "GUARDED" in out.stdout and "UNGUARDED" not in out.stdout
+
+
+def test_barrett_precompute_16bit_guard_survives_python_O():
+    _run_O_guard(
+        "from repro.core.modmath import barrett_precompute\n"
+        "try:\n"
+        "    barrett_precompute(1 << 13, bits=16)\n"
+        "except ValueError:\n"
+        "    print('GUARDED')\n"
+        "else:\n"
+        "    print('UNGUARDED')\n"
+    )
+
+
+def test_params_root_guard_survives_python_O():
+    """make_ntt_params rejects a non-NTT-friendly modulus as a
+    ValueError naming q even under ``-O``."""
+    _run_O_guard(
+        "from repro.core.params import make_ntt_params\n"
+        "try:\n"
+        "    make_ntt_params(128, q=(1 << 29) + 5)\n"
+        "except ValueError as e:\n"
+        "    assert 'q=' in str(e)\n"
+        "    print('GUARDED')\n"
+        "else:\n"
+        "    print('UNGUARDED')\n"
+    )
+
+
+def test_ringspec_guard_survives_python_O():
+    """RingSpec's modulus-window check is a ValueError, not an assert."""
+    _run_O_guard(
+        "from repro.core.ringspec import RingSpec\n"
+        "try:\n"
+        "    RingSpec(name='bad', n=256, q=7681, dtype='uint16', block=2)\n"
+        "except ValueError as e:\n"
+        "    assert 'q=7681' in str(e) and 'uint16' in str(e)\n"
+        "    print('GUARDED')\n"
+        "else:\n"
+        "    print('UNGUARDED')\n"
+    )

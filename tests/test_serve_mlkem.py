@@ -1,0 +1,165 @@
+"""Mixed-scheme serving: CKKS + ML-KEM through one engine (S6).
+
+The engine's grouping policy must drain a queue that interleaves CKKS
+multiplies with ML-KEM encaps: same-scheme requests batch, cross-scheme
+requests never share a dispatch, and every answer is bit-exact against
+the single-scheme oracles (``plan.multiply`` / ``mlkem_spec``)."""
+import numpy as np
+import pytest
+
+import mlkem_spec as spec
+
+from repro.fhe import serve
+from repro.fhe.ckks import CkksContext
+from repro.pq import mlkem
+
+
+@pytest.fixture(scope="module")
+def ctx():
+    return CkksContext(n=64, levels=2, seed=11)
+
+
+RNG = np.random.default_rng(23)
+
+
+def _mlkem_material(b):
+    d = RNG.integers(0, 256, (b, 32), dtype=np.uint8)
+    z = RNG.integers(0, 256, (b, 32), dtype=np.uint8)
+    m = RNG.integers(0, 256, (b, 32), dtype=np.uint8)
+    ek, dk = mlkem.keygen_batch(d, z)
+    return ek, dk, m
+
+
+def _mixed_queue(ctx, plan, n_ckks=5, n_mlkem=4):
+    """Interleaved CKKS multiplies and ML-KEM encaps, plus expected
+    answers from the single-scheme oracles."""
+    ek, dk, m = _mlkem_material(n_mlkem)
+    reqs, expect = [], {}
+    rid = 0
+    for i in range(max(n_ckks, n_mlkem)):
+        if i < n_ckks:
+            za = RNG.uniform(-1, 1, ctx.slots) \
+                + 1j * RNG.uniform(-1, 1, ctx.slots)
+            zb = RNG.uniform(-1, 1, ctx.slots) \
+                + 1j * RNG.uniform(-1, 1, ctx.slots)
+            ca, cb = ctx.encrypt(ctx.encode(za)), ctx.encrypt(ctx.encode(zb))
+            reqs.append(serve.FheRequest(rid, "multiply", ca, other=cb))
+            expect[rid] = ("ckks", plan.multiply(ca, cb))
+            rid += 1
+        if i < n_mlkem:
+            reqs.append(serve.FheRequest(
+                rid, "mlkem_encaps", payload={"ek": ek[i], "m": m[i]}))
+            k_s, ct_s = spec.encaps(bytes(ek[i]), bytes(m[i]))
+            expect[rid] = ("mlkem", (k_s, ct_s))
+            rid += 1
+    return reqs, expect, dk
+
+
+def _check(out, expect):
+    for rid, (scheme, want) in expect.items():
+        got = out[rid]
+        if scheme == "ckks":
+            assert np.array_equal(np.asarray(got.c0.data),
+                                  np.asarray(want.c0.data)), f"rid {rid}"
+            assert np.array_equal(np.asarray(got.c1.data),
+                                  np.asarray(want.c1.data)), f"rid {rid}"
+        else:
+            key, ct = got
+            assert bytes(key) == want[0] and bytes(ct) == want[1], f"rid {rid}"
+
+
+def test_mixed_queue_sync_drain(ctx):
+    plan = ctx.plan()
+    reqs, expect, _ = _mixed_queue(ctx, plan)
+    eng = serve.CkksServeEngine(plan, batch_tile=2)
+    out = eng.run(reqs)
+    _check(out, expect)
+    assert not eng.stats["failed"]
+    groups = eng.stats["groups"]
+    assert "mlkem_encaps@mlkem" in groups
+    assert groups["mlkem_encaps@mlkem"] == 4
+    assert any(k.startswith("multiply@L") for k in groups)
+    # one dispatch per scheme-kind: the schemes never shared one
+    assert eng.stats["dispatches"] == 2
+
+
+def test_mixed_queue_async_equals_sync(ctx):
+    """run_async over the interleaved queue: same grouping-by-scheme,
+    bit-exact vs the sync oracle drain."""
+    plan = ctx.plan()
+    reqs, expect, _ = _mixed_queue(ctx, plan, n_ckks=6, n_mlkem=5)
+    sync = serve.CkksServeEngine(plan, batch_tile=2).run(list(reqs))
+    eng = serve.CkksServeEngine(plan, batch_tile=2)
+    out = eng.run_async(list(reqs))
+    _check(out, expect)
+    assert not eng.stats["failed"]
+    for rid, (scheme, _) in expect.items():
+        if scheme == "ckks":
+            assert np.array_equal(np.asarray(out[rid].c0.data),
+                                  np.asarray(sync[rid].c0.data))
+        else:
+            assert bytes(out[rid][0]) == bytes(sync[rid][0])
+            assert bytes(out[rid][1]) == bytes(sync[rid][1])
+
+
+def test_mlkem_keygen_decaps_kinds(ctx):
+    """All three ML-KEM kinds through one drain; decaps answers match
+    encaps keys (and the spec oracle) exactly."""
+    plan = ctx.plan()
+    ek, dk, m = _mlkem_material(3)
+    key, ct = mlkem.encaps_batch(ek, m)
+    reqs = [serve.FheRequest(0, "mlkem_keygen",
+                             payload={"d": np.zeros(32, np.uint8),
+                                      "z": np.ones(32, np.uint8)})]
+    reqs += [serve.FheRequest(1 + i, "mlkem_decaps",
+                              payload={"dk": dk[i], "ct": ct[i]})
+             for i in range(3)]
+    eng = serve.CkksServeEngine(plan, batch_tile=2)
+    out = eng.run(reqs)
+    ek0, dk0 = out[0]
+    ek_s, dk_s = spec.keygen(bytes(32), bytes([1] * 32))
+    assert bytes(ek0) == ek_s and bytes(dk0) == dk_s
+    for i in range(3):
+        assert bytes(out[1 + i]) == bytes(key[i])
+
+
+def test_cross_scheme_request_fails_alone(ctx):
+    """An ML-KEM request smuggling a CKKS ciphertext fails ALONE with an
+    explicit message; every other request still gets its answer."""
+    plan = ctx.plan()
+    reqs, expect, _ = _mixed_queue(ctx, plan, n_ckks=2, n_mlkem=2)
+    ek, _, m = _mlkem_material(1)
+    z = RNG.uniform(-1, 1, ctx.slots) + 1j * RNG.uniform(-1, 1, ctx.slots)
+    bad = serve.FheRequest(99, "mlkem_encaps",
+                           ct=ctx.encrypt(ctx.encode(z)),
+                           payload={"ek": ek[0], "m": m[0]})
+    eng = serve.CkksServeEngine(plan, batch_tile=2)
+    out = eng.run(reqs + [bad])
+    _check(out, expect)
+    assert 99 not in out
+    assert "cross-scheme" in eng.stats["failed"][99]
+
+
+def test_dispatch_refuses_mixed_batch(ctx):
+    """Belt and braces below the grouping policy: a hand-built mixed
+    batch is refused outright, never fed to either scheme's kernels."""
+    plan = ctx.plan()
+    ek, _, m = _mlkem_material(1)
+    z = RNG.uniform(-1, 1, ctx.slots) + 1j * RNG.uniform(-1, 1, ctx.slots)
+    ck = serve.FheRequest(0, "rescale", ctx.encrypt(ctx.encode(z)))
+    mk = serve.FheRequest(1, "mlkem_encaps",
+                          payload={"ek": ek[0], "m": m[0]})
+    eng = serve.CkksServeEngine(plan, batch_tile=2)
+    with pytest.raises(ValueError, match="cross-scheme"):
+        eng._dispatch("rescale", [ck, mk])
+
+
+def test_mlkem_request_validation():
+    """Malformed ML-KEM requests are rejected at construction with the
+    missing payload keys named."""
+    with pytest.raises(ValueError, match=r"mlkem_encaps.*ek"):
+        serve.FheRequest(0, "mlkem_encaps", payload={"m": b"\x00" * 32})
+    with pytest.raises(ValueError, match="payload"):
+        serve.FheRequest(1, "mlkem_keygen")
+    with pytest.raises(ValueError, match="ciphertext"):
+        serve.FheRequest(2, "rescale")      # CKKS op without a ct
