@@ -58,7 +58,17 @@ Checks (CI runs this right after ``benchmarks.run --smoke --json``):
      — and (b) beat its own ``b1_us=`` column per op
      (``us_per_call / 64 < b1_us``): one batched dispatch must be
      faster per op than 64 sequential single-request calls, the whole
-     point of routing the scheme through the batched banks kernels.
+     point of routing the scheme through the batched banks kernels,
+  9. the observability rows: the ``serve_obs_overhead`` A/B row must
+     show the instrumented-ON drain keeping >= OBS_TOL (0.95x) of the
+     instrumented-OFF throughput — span tracing is supposed to be a
+     flag check when disabled and a handful of spans per group when
+     enabled, never per-request work — and, when the bench record
+     carries ``trace_out`` (CI runs ``--trace-out BENCH_trace.json``),
+     the trace artifact must be valid Chrome trace-event JSON whose
+     events all carry ``ph``/``ts``/``dur``/``name`` and include >= 1
+     span for every serve phase (screen/group/stack/dispatch/block) —
+     a Perfetto-loadable timeline of the drain.
 """
 from __future__ import annotations
 
@@ -79,7 +89,7 @@ REQUIRED = ("ckks_multiply_b1", "ckks_multiply_b8", "ckks_multiply_b32",
             "ntt_lazy_2_14", "ntt_eager_2_14", "ntt_lazy_tile8_2_14",
             "keyswitch_lazy_2_14", "keyswitch_eager_2_14",
             "ntt_kyber_256", "mlkem_keygen_b64", "mlkem_encaps_b64",
-            "mlkem_decaps_b64")
+            "mlkem_decaps_b64", "serve_obs_overhead")
 
 # the ML-KEM batched rows (gate 8): batched-beats-b1 per op + kat=OK
 MLKEM_ROWS = ("mlkem_keygen_b64", "mlkem_encaps_b64", "mlkem_decaps_b64")
@@ -110,6 +120,21 @@ LAZY_TOL = 1.05
 # tile and the two rows measure the same dispatch; on TPU a tuned tile
 # losing >10% to the static default means the autotuner picked a dud
 TILE_TOL = 1.10
+
+# observability overhead floor: the instrumented-ON async drain must
+# keep at least this fraction of the instrumented-OFF throughput
+# (equivalently: on_wall <= off_wall / OBS_TOL).  The disabled path is
+# one flag check per probe; the enabled path records a handful of spans
+# per group — a real regression here means instrumentation moved onto a
+# per-request or per-element path
+OBS_TOL = 0.95
+
+# each serve phase must appear as >= 1 span in the captured trace
+# artifact (the screen -> group -> stack -> dispatch -> block pipeline
+# the PR 10 tentpole instruments; plan.stack is the EvalPlan staging
+# span nested under serve.dispatch)
+TRACE_PHASES = ("serve.screen", "serve.group", "plan.stack",
+                "serve.dispatch", "serve.block")
 
 
 def per_op_us(row: dict) -> float:
@@ -248,6 +273,61 @@ def check(path: str) -> int:
                   "64 sequential b=1 calls; the batched ML-KEM dispatch "
                   "layer regressed")
             return 1
+    # 9. observability: enabled-vs-disabled drain overhead + trace artifact
+    row = rows["serve_obs_overhead"]
+    t_on = row["us_per_call"]
+    m_off = re.search(r"off=([0-9.]+)us", str(row["derived"]))
+    if m_off is None:
+        print("check_smoke: FAIL — serve_obs_overhead carries no off= "
+              "baseline in its derived column")
+        return 1
+    t_off = float(m_off.group(1))
+    print(f"check_smoke: obs overhead on={t_on:.0f}us off={t_off:.0f}us "
+          f"(x{t_on / t_off:.3f}, floor {OBS_TOL:.2f}x throughput)")
+    if not t_on <= t_off / OBS_TOL:
+        print(f"check_smoke: FAIL — the instrumented drain keeps only "
+              f"{t_off / t_on:.2f}x of the uninstrumented throughput "
+              f"(< {OBS_TOL:.2f}x); span tracing / metrics mirroring has "
+              "grown real per-request cost")
+        return 1
+    trace_path = rec.get("trace_out")
+    if trace_path:
+        if not os.path.isabs(trace_path) and not os.path.exists(trace_path):
+            trace_path = os.path.join(os.path.dirname(os.path.abspath(path)),
+                                      trace_path)
+        try:
+            with open(trace_path) as f:
+                trace = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"check_smoke: FAIL — trace artifact {trace_path!r} is "
+                  f"not loadable JSON ({e})")
+            return 1
+        evs = trace.get("traceEvents")
+        if not isinstance(evs, list) or not evs:
+            print("check_smoke: FAIL — trace artifact carries no "
+                  "traceEvents (not a Chrome trace-event capture)")
+            return 1
+        bad_evs = [e for e in evs
+                   if not all(k in e for k in ("ph", "ts", "dur", "name"))]
+        if bad_evs:
+            print(f"check_smoke: FAIL — {len(bad_evs)} trace events are "
+                  "missing required ph/ts/dur/name fields (Perfetto would "
+                  "reject or misrender them)")
+            return 1
+        names = [str(e["name"]) for e in evs]
+        missing = [ph for ph in TRACE_PHASES
+                   if not any(n == ph for n in names)]
+        if missing:
+            print(f"check_smoke: FAIL — trace artifact has no span for "
+                  f"serve phase(s) {missing}; the drain pipeline is no "
+                  "longer fully instrumented")
+            return 1
+        print(f"check_smoke: trace artifact OK — {len(evs)} spans, every "
+              f"phase of {'/'.join(p.split('.')[-1] for p in TRACE_PHASES)} "
+              "present")
+    else:
+        print("check_smoke: note — no trace_out in the bench record; "
+              "trace-artifact phase gate skipped (run with --trace-out)")
     print("check_smoke: OK")
     return 0
 

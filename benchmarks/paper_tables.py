@@ -1030,11 +1030,64 @@ def mlkem_suite():
     return rows
 
 
+def serve_obs_overhead():
+    """A/B row for the observability layer: the SAME async drain with
+    ``repro.obs`` span tracing + metrics mirroring enabled vs disabled.
+    The disabled path is one flag check per probe and the enabled path
+    records ~a handful of spans per group, so the two walls should be
+    indistinguishable; ``check_smoke.py`` gates instrumented-on
+    throughput at >= 0.95x instrumented-off (OBS_TOL), which fails if
+    instrumentation ever grows real per-request cost.
+
+    Timing is PAIRED like serve_slo: each pass runs on and off back to
+    back over the identical backlog trace and the reported pair comes
+    from the pass with the MEDIAN on/off ratio — a genuine overhead
+    regression shows in every pass; a scheduler burst in one cannot.
+    A backlog trace (no Poisson arrivals) keeps grouping deterministic,
+    so the two warm drains below cover every jit signature either mode
+    can form and neither timed pass pays XLA."""
+    from repro import obs
+    from repro.fhe.ckks import CkksContext
+    from repro.fhe.serve import CkksServeEngine, synthetic_trace
+
+    ctx = CkksContext(n=1024, levels=2, scale_bits=28, seed=23)
+    N, tile = 32, 4
+    reqs, _ = synthetic_trace(ctx, N, seed=24)
+    plan = ctx.plan()
+    engine = CkksServeEngine(plan, batch_tile=tile, max_batch=8 * tile)
+    was_enabled = obs.enabled()
+    try:
+        obs.disable()
+        engine.run_async(list(reqs))            # warm: compiles + keys
+        obs.enable()
+        engine.run_async(list(reqs))            # warm the enabled path
+        passes = []
+        for _ in range(3):
+            obs.disable()
+            engine.run_async(list(reqs))
+            t_off = engine.stats["wall_s"] * 1e6
+            obs.enable()
+            engine.run_async(list(reqs))
+            t_on = engine.stats["wall_s"] * 1e6
+            passes.append((t_on / t_off, t_on, t_off))
+        ratio, t_on, t_off = sorted(passes)[1]  # median on/off ratio
+    finally:
+        if was_enabled:
+            obs.enable()
+        else:
+            obs.disable()
+    return [
+        ("serve_obs_overhead", t_on,
+         f"{N} req async drain, obs enabled: off={t_off:.0f}us "
+         f"ratio=x{ratio:.3f} (median of 3 paired on/off passes)"),
+    ]
+
+
 ALL = [table2_mulmod, table3_ntt128, fig21_large_ntt, ntt_fourstep_2_14,
        fig22_keyswitch, keyswitch_banks, keyswitch_banks_2_14, lazy_kernels,
        ckks_ops, ckks_batched_ops, hoisted_rotations, serve_slo,
-       serve_slo_sweep, ckks_multiply_sharded_d4, mlkem_suite,
-       scaling_table, validation_1e5]
+       serve_slo_sweep, serve_obs_overhead, ckks_multiply_sharded_d4,
+       mlkem_suite, scaling_table, validation_1e5]
 
 # --scaling subset: the ntt-aie-shaped device-count table + the offered-
 # load sweep — what the CI forced-4-device job writes to
@@ -1061,7 +1114,10 @@ SCALING = [scaling_table, serve_slo_sweep]
 # simulated devices AND the checking host has > 1 core to back them)
 # PR 9 adds the ML-KEM scheme rows (ntt_kyber_256 + mlkem_*_b64 —
 # gated: batched beats 64 sequential b=1 calls per op, kat=OK)
+# PR 10 adds the observability A/B row (serve_obs_overhead — gated:
+# span tracing + metrics mirroring enabled must keep >= 0.95x of the
+# disabled drain's throughput)
 SMOKE = [table3_ntt128, keyswitch_banks, ntt_fourstep_2_14,
          keyswitch_banks_2_14, lazy_kernels, ckks_ops, ckks_batched_ops,
-         hoisted_rotations, serve_slo, serve_slo_sweep,
+         hoisted_rotations, serve_slo, serve_slo_sweep, serve_obs_overhead,
          ckks_multiply_sharded_d4, mlkem_suite]

@@ -50,7 +50,21 @@ def main() -> None:
                          "job's BENCH_scaling.json")
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="also write rows as a JSON record (bench trajectory)")
+    ap.add_argument("--trace-out", metavar="PATH", default=None,
+                    help="enable repro.obs for the run and write a "
+                         "Perfetto-loadable Chrome trace-event JSON of "
+                         "every instrumented span (plus a *_metrics.json "
+                         "sibling snapshotting the metrics registry)")
     args = ap.parse_args()
+
+    if args.trace_out:
+        # capture the whole run: the serve_obs_overhead row toggles the
+        # flag around its paired passes and restores it, so the capture
+        # survives; the enabled overhead is CI-gated at <= 5%
+        from repro import obs
+        obs.clear()
+        obs.reset()
+        obs.enable()
 
     from benchmarks import paper_tables
     fns = (paper_tables.SCALING if args.scaling
@@ -70,12 +84,21 @@ def main() -> None:
             rows.append({"name": fn.__name__, "us_per_call": None,
                          "derived": f"ERROR: {type(e).__name__}: {e}"})
             print(f"{fn.__name__},NaN,ERROR: {type(e).__name__}: {e}")
+    if args.trace_out:
+        from repro import obs
+        obs.write_trace(args.trace_out)
+        metrics_path = os.path.splitext(args.trace_out)[0] + "_metrics.json"
+        obs.write_metrics(metrics_path)
+        print(f"# wrote {len(obs.events())} spans to {args.trace_out} "
+              f"(+ metrics snapshot {metrics_path}) — load the trace at "
+              "https://ui.perfetto.dev", file=sys.stderr)
     if args.json:
         rec = {"suite": ("scaling" if args.scaling
                          else "smoke" if args.smoke else "all"),
                "unix_time": int(time.time()),
                "platform": platform.platform(),
                "git": os.environ.get("GITHUB_SHA", ""),
+               "trace_out": args.trace_out,
                "rows": rows}
         with open(args.json, "w") as f:
             json.dump(rec, f, indent=2)

@@ -75,7 +75,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec
 
-from repro import compat
+from repro import compat, obs
 from repro.core.modmath import addmod, mulmod_barrett
 from repro.core.params import galois_eval_perm
 from repro.fhe import batched as FB
@@ -417,6 +417,17 @@ def plain_mac_banks(b0, b1, diags, qs, mus, *, jmap, imap):
 _stack_banks = jax.jit(jnp.stack)
 
 
+def _stack_ct_banks(arrs):
+    """Host-side batch staging with a ``plan.stack`` span: the batched
+    scheme ops stack B ciphertext halves into one (B, k, n) device
+    array here, and this staging cost is exactly what the async drain's
+    ping-pong overlaps — the span makes it visible on the Perfetto
+    timeline.  Same jitted ``jnp.stack`` program either way (no new jit
+    signature, so the ``fresh_traces`` discipline is untouched)."""
+    with obs.span("plan.stack", n=len(arrs)):
+        return _stack_banks(arrs)
+
+
 @functools.partial(jax.jit, static_argnames=("axis",))
 def _unstack_banks(x, axis: int = 0):
     return tuple(jnp.moveaxis(x, axis, 0))
@@ -662,6 +673,13 @@ class EvalPlan:
         self.stats["dispatches"] += dispatches
         self.stats["key_switches"] += key_switches
         self.stats["decomposes"] += decomposes
+        if obs.enabled():
+            # mirror into the obs metrics registry: the stats dict stays
+            # the per-plan source of truth (tests pin its exact values),
+            # the registry accumulates process-wide for the snapshot
+            obs.counter_add("plan.dispatches", dispatches)
+            obs.counter_add("plan.key_switches", key_switches)
+            obs.counter_add("plan.decomposes", decomposes)
 
     # ------------------------------------------------------------ tables
 
@@ -848,11 +866,12 @@ class EvalPlan:
         basis = a.primes
         t, fsp = self.keyswitch_tables(basis)
         eb, ea = self.relin_key(basis)
-        c0, c1 = multiply_banks(self._shard_k(a.c0.data),
-                                self._shard_k(a.c1.data),
-                                self._shard_k(b.c0.data),
-                                self._shard_k(b.c1.data),
-                                eb, ea, t, fsp, **self._kw)
+        with obs.span("plan.program", program="multiply"):
+            c0, c1 = multiply_banks(self._shard_k(a.c0.data),
+                                    self._shard_k(a.c1.data),
+                                    self._shard_k(b.c0.data),
+                                    self._shard_k(b.c1.data),
+                                    eb, ea, t, fsp, **self._kw)
         self._count(1, key_switches=1, decomposes=1)
         return Ciphertext(RnsPoly(c0, basis, True), RnsPoly(c1, basis, True),
                           a.scale * b.scale)
@@ -861,8 +880,10 @@ class EvalPlan:
         check_level("rescale", a, need=1)
         basis = a.primes
         t, fsp = self.rescale_tables(basis)
-        c0, c1 = rescale_banks(self._shard_k(a.c0.data),
-                               self._shard_k(a.c1.data), t, fsp, **self._kw)
+        with obs.span("plan.program", program="rescale"):
+            c0, c1 = rescale_banks(self._shard_k(a.c0.data),
+                                   self._shard_k(a.c1.data), t, fsp,
+                                   **self._kw)
         self._count(1)
         rest = basis[:-1]
         return Ciphertext(RnsPoly(c0, rest, True), RnsPoly(c1, rest, True),
@@ -873,9 +894,11 @@ class EvalPlan:
         basis = a.primes
         t, fsp = self.keyswitch_tables(basis)
         eb, ea = self.galois_key(g, basis)
-        c0, c1 = galois_ks_banks(self._shard_k(a.c0.data),
-                                 self._shard_k(a.c1.data), self.eval_idx(g),
-                                 eb, ea, t, fsp, **self._kw)
+        with obs.span("plan.program", program="galois_ks"):
+            c0, c1 = galois_ks_banks(self._shard_k(a.c0.data),
+                                     self._shard_k(a.c1.data),
+                                     self.eval_idx(g),
+                                     eb, ea, t, fsp, **self._kw)
         self._count(1, key_switches=1, decomposes=1)
         return Ciphertext(RnsPoly(c0, basis, True), RnsPoly(c1, basis, True),
                           a.scale)
@@ -919,21 +942,23 @@ class EvalPlan:
         basis = self._common_basis("multiply_many", list(As) + list(Bs))
         t, fsp = self.keyswitch_tables(basis)
         eb, ea = self.relin_key(basis)
-        stack = lambda ps: _stack_banks([p.data for p in ps])
-        if self._sharded is not None:
-            Ap, Bp = self._pad_batch(list(As)), self._pad_batch(list(Bs))
-            c0, c1 = self._sharded["multiply"](
-                stack([a.c0 for a in Ap]), stack([a.c1 for a in Ap]),
-                stack([b.c0 for b in Bp]), stack([b.c1 for b in Bp]),
-                eb, ea, t, fsp)
-        else:
-            a0s, a1s = stack([a.c0 for a in As]), stack([a.c1 for a in As])
-            c0, c1 = multiply_many_banks(
-                self._shard_k(a0s), self._shard_k(a1s),
-                self._shard_k(stack([b.c0 for b in Bs])),
-                self._shard_k(stack([b.c1 for b in Bs])),
-                eb, ea, t, fsp, **self._kw)
-            retire_donated(c0, a0s, a1s)
+        stack = lambda ps: _stack_ct_banks([p.data for p in ps])
+        with obs.span("plan.program", program="multiply_many", n=len(As),
+                      sharded=self._sharded is not None):
+            if self._sharded is not None:
+                Ap, Bp = self._pad_batch(list(As)), self._pad_batch(list(Bs))
+                c0, c1 = self._sharded["multiply"](
+                    stack([a.c0 for a in Ap]), stack([a.c1 for a in Ap]),
+                    stack([b.c0 for b in Bp]), stack([b.c1 for b in Bp]),
+                    eb, ea, t, fsp)
+            else:
+                a0s, a1s = stack([a.c0 for a in As]), stack([a.c1 for a in As])
+                c0, c1 = multiply_many_banks(
+                    self._shard_k(a0s), self._shard_k(a1s),
+                    self._shard_k(stack([b.c0 for b in Bs])),
+                    self._shard_k(stack([b.c1 for b in Bs])),
+                    eb, ea, t, fsp, **self._kw)
+                retire_donated(c0, a0s, a1s)
         self._count(1, key_switches=len(As), decomposes=len(As))
         return [Ciphertext(RnsPoly(r0, basis, True),
                            RnsPoly(r1, basis, True), a.scale * b.scale)
@@ -949,16 +974,18 @@ class EvalPlan:
             check_level("rescale_many", ct, need=1)
         basis = self._common_basis("rescale_many", cts)
         t, fsp = self.rescale_tables(basis)
-        if self._sharded is not None:
-            pad = self._pad_batch(list(cts))
-            c0, c1 = self._sharded["rescale"](
-                _stack_banks([ct.c0.data for ct in pad]),
-                _stack_banks([ct.c1.data for ct in pad]), t, fsp)
-        else:
-            c0, c1 = rescale_many_banks(
-                self._shard_k(_stack_banks([ct.c0.data for ct in cts])),
-                self._shard_k(_stack_banks([ct.c1.data for ct in cts])),
-                t, fsp, **self._kw)
+        with obs.span("plan.program", program="rescale_many", n=len(cts),
+                      sharded=self._sharded is not None):
+            if self._sharded is not None:
+                pad = self._pad_batch(list(cts))
+                c0, c1 = self._sharded["rescale"](
+                    _stack_ct_banks([ct.c0.data for ct in pad]),
+                    _stack_ct_banks([ct.c1.data for ct in pad]), t, fsp)
+            else:
+                c0, c1 = rescale_many_banks(
+                    self._shard_k(_stack_ct_banks([ct.c0.data for ct in cts])),
+                    self._shard_k(_stack_ct_banks([ct.c1.data for ct in cts])),
+                    t, fsp, **self._kw)
         self._count(1)
         rest = basis[:-1]
         return [Ciphertext(RnsPoly(r0, rest, True),
@@ -982,30 +1009,32 @@ class EvalPlan:
             check_level("galois_ks_many", ct)
         basis = self._common_basis("galois_ks_many", cts)
         t, fsp = self.keyswitch_tables(basis)
-        if self._sharded is not None:
-            pad_cts = self._pad_batch(list(cts))
-            pad_gs = self._pad_batch(list(gs))
-            s0 = _stack_banks([ct.c0.data for ct in pad_cts])
-            s1 = _stack_banks([ct.c1.data for ct in pad_cts])
-            if len(set(pad_gs)) == 1:
-                eb, ea = self.galois_key(pad_gs[0], basis)
-                c0, c1 = self._sharded["galois_shared"](
-                    s0, s1, self.eval_idx(pad_gs[0]), eb, ea, t, fsp)
+        with obs.span("plan.program", program="galois_ks_many", n=len(cts),
+                      sharded=self._sharded is not None):
+            if self._sharded is not None:
+                pad_cts = self._pad_batch(list(cts))
+                pad_gs = self._pad_batch(list(gs))
+                s0 = _stack_ct_banks([ct.c0.data for ct in pad_cts])
+                s1 = _stack_ct_banks([ct.c1.data for ct in pad_cts])
+                if len(set(pad_gs)) == 1:
+                    eb, ea = self.galois_key(pad_gs[0], basis)
+                    c0, c1 = self._sharded["galois_shared"](
+                        s0, s1, self.eval_idx(pad_gs[0]), eb, ea, t, fsp)
+                else:
+                    eb, ea, idx = self._galois_batch_key(tuple(pad_gs), basis)
+                    c0, c1 = self._sharded["galois_mixed"](
+                        s0, s1, idx, eb, ea, t, fsp)
             else:
-                eb, ea, idx = self._galois_batch_key(tuple(pad_gs), basis)
-                c0, c1 = self._sharded["galois_mixed"](
-                    s0, s1, idx, eb, ea, t, fsp)
-        else:
-            if len(set(gs)) == 1:
-                eb, ea = self.galois_key(gs[0], basis)
-                idx = self.eval_idx(gs[0])
-            else:
-                eb, ea, idx = self._galois_batch_key(tuple(gs), basis)
-            s0 = self._shard_k(_stack_banks([ct.c0.data for ct in cts]))
-            s1 = self._shard_k(_stack_banks([ct.c1.data for ct in cts]))
-            c0, c1 = galois_ks_many_banks(s0, s1, idx, eb, ea, t, fsp,
-                                          **self._kw)
-            retire_donated(c0, s0, s1)
+                if len(set(gs)) == 1:
+                    eb, ea = self.galois_key(gs[0], basis)
+                    idx = self.eval_idx(gs[0])
+                else:
+                    eb, ea, idx = self._galois_batch_key(tuple(gs), basis)
+                s0 = self._shard_k(_stack_ct_banks([ct.c0.data for ct in cts]))
+                s1 = self._shard_k(_stack_ct_banks([ct.c1.data for ct in cts]))
+                c0, c1 = galois_ks_many_banks(s0, s1, idx, eb, ea, t, fsp,
+                                              **self._kw)
+                retire_donated(c0, s0, s1)
         self._count(1, key_switches=len(cts), decomposes=len(cts))
         return [Ciphertext(RnsPoly(r0, basis, True),
                            RnsPoly(r1, basis, True), ct.scale)
@@ -1031,19 +1060,21 @@ class EvalPlan:
         check_level("hoisted_galois", a)
         basis = a.primes
         t, fsp = self.keyswitch_tables(basis)
-        if self._sharded is not None:
-            # shard the rotation axis: pad gs to the mesh width and drop
-            # the pad columns on unpack (each shard re-runs the shared
-            # decomposition locally — collective-free)
-            pad_gs = tuple(self._pad_batch(list(gs)))
-            eb, ea, idx = self._galois_batch_key(pad_gs, basis)
-            c0, c1 = self._sharded["hoisted"](a.c0.data, a.c1.data, idx,
-                                              eb, ea, t, fsp)
-        else:
-            eb, ea, idx = self._galois_batch_key(gs, basis)
-            c0, c1 = hoisted_rotations_banks(self._shard_k(a.c0.data),
-                                             self._shard_k(a.c1.data), idx,
-                                             eb, ea, t, fsp, **self._kw)
+        with obs.span("plan.program", program="hoisted_galois", n=len(gs),
+                      sharded=self._sharded is not None):
+            if self._sharded is not None:
+                # shard the rotation axis: pad gs to the mesh width and
+                # drop the pad columns on unpack (each shard re-runs the
+                # shared decomposition locally — collective-free)
+                pad_gs = tuple(self._pad_batch(list(gs)))
+                eb, ea, idx = self._galois_batch_key(pad_gs, basis)
+                c0, c1 = self._sharded["hoisted"](a.c0.data, a.c1.data, idx,
+                                                  eb, ea, t, fsp)
+            else:
+                eb, ea, idx = self._galois_batch_key(gs, basis)
+                c0, c1 = hoisted_rotations_banks(self._shard_k(a.c0.data),
+                                                 self._shard_k(a.c1.data), idx,
+                                                 eb, ea, t, fsp, **self._kw)
         self._count(1, key_switches=len(gs), decomposes=1)
         return [Ciphertext(RnsPoly(r0, basis, True),
                            RnsPoly(r1, basis, True), a.scale)

@@ -86,6 +86,7 @@ from collections import defaultdict, deque
 import numpy as np
 import jax
 
+from repro import obs
 from repro.fhe import linalg
 from repro.fhe.evalplan import (Ciphertext, EvalPlan, check_level,
                                 check_same_basis, release_retired)
@@ -234,9 +235,18 @@ class CkksServeEngine:
     programs actually launched — a matvec group launches several per
     request), ``key_switches``, ``decomposes``, and ``hoisted_reuse``
     (key switches that shared an already-paid digit decomposition).
-    The async drain adds ``max_queue`` (peak pending depth) and
-    ``latency_us`` (p50/p99/mean/max request latency, arrival ->
-    result drained)."""
+    Both drains report ``latency_us`` (p50/p99/mean/max/count request
+    latency, arrival -> result drained; an empty dict on a zero-request
+    drain so consumers never KeyError), and the async drain adds
+    ``max_queue`` (peak pending depth).
+
+    With ``repro.obs`` enabled, every drain additionally records phase
+    spans (``serve.screen`` / ``serve.group`` / ``serve.dispatch`` /
+    ``serve.block`` nested under ``serve.run``), queue-depth gauge
+    samples per admission cycle, and per-request lifecycle histograms
+    (arrival -> admitted -> grouped -> dispatched -> drained) into the
+    global metrics registry; disabled (the default), each probe is a
+    single flag check."""
 
     def __init__(self, plan: EvalPlan, batch_tile: int | None = None,
                  max_batch: int | None = None):
@@ -327,8 +337,11 @@ class CkksServeEngine:
         groups: dict = defaultdict(list)
         done: dict[int, Ciphertext] = {}
         failed: dict[int, str] = {}
-        for req in requests:
-            if self._screen(req, done, failed):
+        with obs.span("serve.screen", n=len(requests)):
+            admitted = [req for req in requests
+                        if self._screen(req, done, failed)]
+        with obs.span("serve.group", n=len(admitted)):
+            for req in admitted:
                 groups[(self._kind(req), self._basis(req))].append(req)
         return groups, done, failed
 
@@ -347,17 +360,18 @@ class CkksServeEngine:
             raise ValueError(
                 f"_dispatch: cross-scheme batch {sorted(schemes)} — "
                 f"CKKS and ML-KEM requests never batch together")
-        reqs = _pad(reqs, self.group_tile)
-        if kind in MLKEM_OPS:
-            return self._mlkem_dispatch(kind, reqs)
-        if kind == "multiply":
-            outs = plan.multiply_many([r.ct for r in reqs],
-                                      [r.other for r in reqs])
-        elif kind == "rescale":
-            outs = plan.rescale_many([r.ct for r in reqs])
-        else:                            # galois: may mix g per request
-            outs = plan.galois_ks_many([r.ct for r in reqs],
-                                       [self._g_of(r) for r in reqs])
+        with obs.span("serve.dispatch", kind=kind, n=len(reqs)):
+            reqs = _pad(reqs, self.group_tile)
+            if kind in MLKEM_OPS:
+                return self._mlkem_dispatch(kind, reqs)
+            if kind == "multiply":
+                outs = plan.multiply_many([r.ct for r in reqs],
+                                          [r.other for r in reqs])
+            elif kind == "rescale":
+                outs = plan.rescale_many([r.ct for r in reqs])
+            else:                        # galois: may mix g per request
+                outs = plan.galois_ks_many([r.ct for r in reqs],
+                                           [self._g_of(r) for r in reqs])
         return outs
 
     @staticmethod
@@ -388,8 +402,10 @@ class CkksServeEngine:
         """Synchronize a drained group: CKKS outs block on their device
         stacks; ML-KEM outs are host numpy already (their device work
         was synchronized inside the batched kernel calls)."""
-        jax.block_until_ready([x for ct in outs if isinstance(ct, Ciphertext)
-                               for x in (ct.c0.data, ct.c1.data)])
+        with obs.span("serve.block", n=len(outs)):
+            jax.block_until_ready([x for ct in outs
+                                   if isinstance(ct, Ciphertext)
+                                   for x in (ct.c0.data, ct.c1.data)])
 
     def _matvec_group(self, reqs: list, failed: dict):
         """Per-request matvec composites (no tile padding).  ANY
@@ -437,6 +453,25 @@ class CkksServeEngine:
                else f"{kind}@L{len(reqs[0].ct.primes) - 1}")
         stats["groups"][key] = stats["groups"].get(key, 0) + len(reqs)
 
+    @staticmethod
+    def _latency_summary(arr_t: dict, done_t: dict) -> dict:
+        """p50/p99/mean/max/count over per-request arrival -> drained
+        latencies (µs).  BOTH drains report this now (the sync drain
+        historically did not — serve.py S1 parity), and a zero-request
+        input yields an empty-but-present dict so consumers indexing
+        ``stats['latency_us']`` never KeyError."""
+        lats = [(done_t[rid] - arr_t.get(rid, 0.0)) * 1e6 for rid in done_t]
+        if not lats:
+            return {}
+        if obs.enabled():
+            for v in lats:
+                obs.observe("serve.lifecycle.drained_us", v)
+        q = np.percentile(lats, (50, 99))
+        return {
+            "p50": float(q[0]), "p99": float(q[1]),
+            "mean": float(np.mean(lats)), "max": float(np.max(lats)),
+            "count": len(lats)}
+
     def _finish_stats(self, stats, before, traces_before, t0):
         # device-work accounting from the plan's cumulative counters:
         # program_dispatches is the true jitted-program count (a matvec
@@ -449,6 +484,17 @@ class CkksServeEngine:
         stats["hoisted_reuse"] = stats["key_switches"] - stats["decomposes"]
         stats["fresh_traces"] = self.plan.trace_count() - traces_before
         stats["wall_s"] = time.perf_counter() - t0
+        if obs.enabled():
+            # mirror the drain's accounting into the metrics registry —
+            # the stats dict stays the source of truth for tests, the
+            # registry accumulates across drains for the snapshot artifact
+            for c in ("dispatches", "batched_ops", "padded", "identity",
+                      "program_dispatches", "key_switches", "decomposes",
+                      "hoisted_reuse", "fresh_traces"):
+                obs.counter_add(f"serve.{c}", stats[c])
+            obs.counter_add("serve.failed", len(stats["failed"]))
+            obs.counter_add("serve.drains")
+            obs.observe("serve.drain.wall_us", stats["wall_s"] * 1e6)
         # everything is drained now, so parked donated stacks (see
         # evalplan.retire_donated) can be dropped without blocking
         release_retired()
@@ -474,30 +520,43 @@ class CkksServeEngine:
         t0 = time.perf_counter()
         before = dict(self.plan.stats)
         traces_before = self.plan.trace_count()
-        groups, out, failed = self._group(requests)
-        stats = self._init_stats("sync", failed)
-        stats["identity"] = len(out)
-        for (kind, basis), reqs in sorted(
-                groups.items(), key=lambda kv: -len(kv[1])):
-            if kind == "galois":
-                # canonical g order: results route by rid anyway, and a
-                # sorted batch makes the g-pattern (and so the plan's
-                # stacked batch-key cache key) independent of arrival
-                # order — arrival-ordered patterns would miss that
-                # cache almost every dispatch
-                reqs = sorted(reqs, key=self._g_of)
-            if kind == "matvec":
-                reqs, outs = self._matvec_group(reqs, failed)
-                if not reqs:
-                    continue       # every request failed: nothing dispatched
-            else:
-                outs = self._dispatch(kind, reqs)
-            # the drain discipline: fully synchronize this group before
-            # staging the next one (run_async defers exactly this)
-            self._block_outs(outs)
-            for req, ct in zip(reqs, outs):      # zip drops pad rows
-                out[req.rid] = ct
-            self._account_group(stats, kind, reqs)
+        with obs.span("serve.run", mode="sync", n=len(requests)):
+            groups, out, failed = self._group(requests)
+            stats = self._init_stats("sync", failed)
+            stats["identity"] = len(out)
+            # identity short-circuits and admission failures resolve at
+            # screen time; a backlog drain's arrivals are all t0, so
+            # latency here is time-into-the-drain (parity with run_async
+            # on a backlog trace — serve.py S1)
+            now = time.perf_counter() - t0
+            done_t = {rid: now for rid in (*out, *failed)}
+            for (kind, basis), reqs in sorted(
+                    groups.items(), key=lambda kv: -len(kv[1])):
+                if kind == "galois":
+                    # canonical g order: results route by rid anyway,
+                    # and a sorted batch makes the g-pattern (and so the
+                    # plan's stacked batch-key cache key) independent of
+                    # arrival order — arrival-ordered patterns would
+                    # miss that cache almost every dispatch
+                    reqs = sorted(reqs, key=self._g_of)
+                if kind == "matvec":
+                    reqs, outs = self._matvec_group(reqs, failed)
+                    if not reqs:
+                        continue   # every request failed: nothing dispatched
+                else:
+                    outs = self._dispatch(kind, reqs)
+                # the drain discipline: fully synchronize this group
+                # before staging the next (run_async defers exactly this)
+                self._block_outs(outs)
+                done = time.perf_counter() - t0
+                for req, ct in zip(reqs, outs):  # zip drops pad rows
+                    out[req.rid] = ct
+                    done_t[req.rid] = done
+                self._account_group(stats, kind, reqs)
+            now = time.perf_counter() - t0
+            for rid in failed:     # matvec failures surface mid-drain
+                done_t.setdefault(rid, now)
+            stats["latency_us"] = self._latency_summary({}, done_t)
         self._finish_stats(stats, before, traces_before, t0)
         return out
 
@@ -510,18 +569,19 @@ class CkksServeEngine:
         else stays queued for a later cycle.  The head always
         dispatches, so a request at a new basis opens a group instead
         of blocking the drain."""
-        head = pending[0]
-        key = (self._kind(head), self._basis(head))
-        take: list = []
-        rest: deque = deque()
-        for req in pending:
-            if (len(take) < self.max_batch
-                    and (self._kind(req), self._basis(req)) == key):
-                take.append(req)
-            else:
-                rest.append(req)
-        pending.clear()
-        pending.extend(rest)
+        with obs.span("serve.group", pending=len(pending)):
+            head = pending[0]
+            key = (self._kind(head), self._basis(head))
+            take: list = []
+            rest: deque = deque()
+            for req in pending:
+                if (len(take) < self.max_batch
+                        and (self._kind(req), self._basis(req)) == key):
+                    take.append(req)
+                else:
+                    rest.append(req)
+            pending.clear()
+            pending.extend(rest)
         return key[0], take
 
     def _drain(self, batch, out, done_t, t0, stats):
@@ -577,49 +637,82 @@ class CkksServeEngine:
         pending: deque = deque()
         inflight = None                 # (kind, reqs, outs) — ONE batch
         i = 0                           # next unadmitted arrival
+        # per-request lifecycle timestamps (arrival -> admitted ->
+        # grouped -> dispatched -> drained) feed the obs registry's
+        # histograms; tracked only when observability is on
+        track = obs.enabled()
+        adm_t: dict[int, float] = {}
+        grp_t: dict[int, float] = {}
+        disp_t: dict[int, float] = {}
 
-        while i < n or pending or inflight:
-            now = time.perf_counter() - t0
-            while i < n and sched[i][0] <= now:
-                a, req = sched[i]
-                i += 1
-                if self._screen(req, out, failed):
-                    pending.append(req)
-                else:                   # resolved at admission
-                    done_t[req.rid] = now
-                    if req.rid in out:
-                        stats["identity"] += 1
-            stats["max_queue"] = max(stats["max_queue"], len(pending))
-            if pending:
-                kind, reqs = self._take_group(pending)
-                if kind == "galois":
-                    reqs = sorted(reqs, key=self._g_of)  # canonical g order
-                if kind == "matvec":
-                    reqs, outs = self._matvec_group(reqs, failed)
+        run_span = obs.span("serve.run", mode="async", n=n)
+        with run_span:
+            while i < n or pending or inflight:
+                now = time.perf_counter() - t0
+                if i < n and sched[i][0] <= now:
+                    with obs.span("serve.screen"):
+                        while i < n and sched[i][0] <= now:
+                            a, req = sched[i]
+                            i += 1
+                            if self._screen(req, out, failed):
+                                pending.append(req)
+                                if track:
+                                    adm_t[req.rid] = now
+                            else:       # resolved at admission
+                                done_t[req.rid] = now
+                                if req.rid in out:
+                                    stats["identity"] += 1
+                stats["max_queue"] = max(stats["max_queue"], len(pending))
+                obs.gauge_set("serve.queue_depth", len(pending))
+                if pending:
+                    kind, reqs = self._take_group(pending)
+                    if track:
+                        tg = time.perf_counter() - t0
+                        for req in reqs:
+                            grp_t[req.rid] = tg
+                    if kind == "galois":
+                        reqs = sorted(reqs, key=self._g_of)  # canonical g
+                    if kind == "matvec":
+                        reqs, outs = self._matvec_group(reqs, failed)
+                    else:
+                        outs = self._dispatch(kind, reqs)
+                    if track and reqs:
+                        td = time.perf_counter() - t0
+                        for req in reqs:
+                            disp_t[req.rid] = td
+                    # ping-pong: the new batch is in flight BEFORE we
+                    # block on the old one — its compute hides this
+                    # cycle's host screening/stacking, the next cycle's
+                    # hides ours
+                    if reqs:
+                        if inflight is not None:
+                            self._drain(inflight, out, done_t, t0, stats)
+                        inflight = (kind, reqs, outs)
+                elif inflight is not None:
+                    self._drain(inflight, out, done_t, t0, stats)
+                    inflight = None
                 else:
-                    outs = self._dispatch(kind, reqs)
-                # ping-pong: the new batch is in flight BEFORE we block
-                # on the old one — its compute hides this cycle's host
-                # screening/stacking, the next cycle's hides ours
-                if reqs:
-                    if inflight is not None:
-                        self._drain(inflight, out, done_t, t0, stats)
-                    inflight = (kind, reqs, outs)
-            elif inflight is not None:
-                self._drain(inflight, out, done_t, t0, stats)
-                inflight = None
-            else:
-                # idle: nothing pending, nothing in flight — sleep up to
-                # the next arrival (short naps keep admission responsive)
-                wait = sched[i][0] - (time.perf_counter() - t0)
-                if wait > 0:
-                    time.sleep(min(wait, 5e-4))
-        lats = [(done_t[rid] - arr_t[rid]) * 1e6 for rid in done_t]
-        if lats:
-            q = np.percentile(lats, (50, 99))
-            stats["latency_us"] = {
-                "p50": float(q[0]), "p99": float(q[1]),
-                "mean": float(np.mean(lats)), "max": float(np.max(lats)),
-                "count": len(lats)}
+                    # idle: nothing pending, nothing in flight — sleep
+                    # up to the next arrival (short naps keep admission
+                    # responsive)
+                    wait = sched[i][0] - (time.perf_counter() - t0)
+                    if wait > 0:
+                        time.sleep(min(wait, 5e-4))
+            if track:
+                for rid, td in done_t.items():
+                    a = arr_t.get(rid, 0.0)
+                    ta = adm_t.get(rid)
+                    if ta is not None:
+                        obs.observe("serve.lifecycle.admitted_us",
+                                    (ta - a) * 1e6)
+                        tg = grp_t.get(rid)
+                        if tg is not None:
+                            obs.observe("serve.lifecycle.grouped_us",
+                                        (tg - ta) * 1e6)
+                            td2 = disp_t.get(rid)
+                            if td2 is not None:
+                                obs.observe("serve.lifecycle.dispatched_us",
+                                            (td2 - tg) * 1e6)
+            stats["latency_us"] = self._latency_summary(arr_t, done_t)
         self._finish_stats(stats, before, traces_before, t0)
         return out

@@ -52,6 +52,8 @@ import warnings
 import jax
 import numpy as np
 
+from repro import obs
+
 CANDIDATE_TILES = (1, 2, 4, 8, 16, 32)
 DEFAULT_TILE = 8
 
@@ -61,6 +63,13 @@ ENV_AUTOTUNE = "SCE_NTT_AUTOTUNE"
 
 # (backend, family, k, n, b, dtype) -> best tile
 _MEM: dict[tuple, int] = {}
+# (same key) -> measurement evidence: {"chosen": tile, "source": how the
+# entry came to be ("measured" / "default" / "runner-error" / "disk"),
+# "candidates": {tile: median seconds}} — the tuner used to throw its
+# measurements away the moment the argmin was taken, so a surprising
+# cached tile could never be audited; now the full candidate table
+# rides the metrics registry and the SCE_NTT_AUTOTUNE_CACHE sidecar
+_EVIDENCE: dict[tuple, dict] = {}
 _DISK_LOADED = False
 _KEY_PARTS = 6      # the persisted "be|fam|k|n|b|dtype" format
 
@@ -113,11 +122,21 @@ def _load_disk() -> None:
         with open(path) as f:
             data = json.load(f)
         stale = 0
+        evidence = data.get("evidence", {})
         for ks, tile in data.get("entries", {}).items():
             parts = ks.split("|")
             if len(parts) == _KEY_PARTS:
                 be, fam, k, n, b, dt = parts
-                _MEM[(be, fam, int(k), int(n), int(b), dt)] = int(tile)
+                key = (be, fam, int(k), int(n), int(b), dt)
+                _MEM[key] = int(tile)
+                # provenance survives the round trip: a disk-seeded
+                # entry keeps its measured candidate table (if the
+                # sidecar carried one) but is marked as coming from disk
+                ev = evidence.get(ks, {})
+                _EVIDENCE[key] = {
+                    "chosen": int(tile), "source": "disk",
+                    "candidates": {int(t): float(s) for t, s in
+                                   ev.get("candidates", {}).items()}}
             else:
                 # pre-dtype (5-part) entries are ambiguous: silently
                 # reading one as uint32 could hand a u16 family a tile
@@ -145,13 +164,27 @@ def _save_disk() -> None:
 
 
 def table() -> dict:
-    """JSON-ready snapshot of the tuning state (the CI artifact)."""
+    """JSON-ready snapshot of the tuning state (the CI artifact).
+
+    ``entries`` keeps the stable "key -> tile" mapping older sidecars
+    round-trip on; ``evidence`` adds the measurement provenance per
+    entry (chosen tile, how it was chosen, and the full candidate
+    tile -> median-seconds table when a measurement ran)."""
     return {
         "backend": _backend(),
         "pin": _env_pin(),
         "entries": {
             "|".join(str(p) for p in key): tile
             for key, tile in sorted(_MEM.items())
+        },
+        "evidence": {
+            "|".join(str(p) for p in key): {
+                "chosen": ev.get("chosen"),
+                "source": ev.get("source"),
+                "candidates": {str(t): s for t, s in
+                               sorted(ev.get("candidates", {}).items())},
+            }
+            for key, ev in sorted(_EVIDENCE.items())
         },
     }
 
@@ -165,6 +198,7 @@ def clear() -> None:
     """Drop the in-process cache (tests)."""
     global _DISK_LOADED
     _MEM.clear()
+    _EVIDENCE.clear()
     _DISK_LOADED = True     # don't resurrect entries from disk
 
 
@@ -188,18 +222,23 @@ def resolve_tile(family: str, k: int, n: int, b: int,
     entries and never alias the CKKS u32 ones."""
     b = shard_batch(b, shards)
     if tile is not None:
+        obs.counter_add("autotune.resolve.explicit")
         return clamp(tile, b)
     pin = _env_pin()
     if pin is not None:
+        obs.counter_add("autotune.resolve.pin")
         return clamp(pin, b)
     _load_disk()
     key = _key(family, k, n, b, dtype)
     hit = _MEM.get(key)
     if hit is not None:
+        obs.counter_add("autotune.resolve.cache_hit")
         return clamp(hit, b)
+    obs.counter_add("autotune.resolve.cache_miss")
     if (os.environ.get(ENV_AUTOTUNE) == "1" and family in _RUNNERS
             and _trace_clean()):
         return clamp(measure(family, k, n, b, dtype=dtype), b)
+    obs.counter_add("autotune.resolve.default")
     return clamp(DEFAULT_TILE, b)
 
 
@@ -210,14 +249,18 @@ def ensure(family: str, k: int, n: int, b: int, *, shards: int = 1,
     b = shard_batch(b, shards)
     pin = _env_pin()
     if pin is not None:
+        obs.counter_add("autotune.resolve.pin")
         return clamp(pin, b)
     _load_disk()
     key = _key(family, k, n, b, dtype)
     hit = _MEM.get(key)
     if hit is not None:
+        obs.counter_add("autotune.resolve.cache_hit")
         return clamp(hit, b)
+    obs.counter_add("autotune.resolve.cache_miss")
     if family in _RUNNERS and _trace_clean():
         return clamp(measure(family, k, n, b, dtype=dtype), b)
+    obs.counter_add("autotune.resolve.default")
     return clamp(DEFAULT_TILE, b)
 
 
@@ -232,29 +275,49 @@ def measure(family: str, k: int, n: int, b: int, *, reps: int = 3,
     key = _key(family, k, n, b, dtype)
     if dtype != "uint32":
         _MEM[key] = clamp(DEFAULT_TILE, b)
+        _EVIDENCE[key] = {"chosen": _MEM[key], "source": "default-nonu32",
+                          "candidates": {}}
         _save_disk()
         return _MEM[key]
     try:
         run = _RUNNERS[family](int(k), int(n), int(b))
     except Exception:
         _MEM[key] = clamp(DEFAULT_TILE, b)
+        _EVIDENCE[key] = {"chosen": _MEM[key], "source": "runner-error",
+                          "candidates": {}}
         return _MEM[key]
     cands = sorted({clamp(t, b) for t in CANDIDATE_TILES})
     best_tile, best_t = clamp(DEFAULT_TILE, b), float("inf")
-    for t in cands:
-        try:
-            jax.block_until_ready(run(t))           # compile + warm
-            times = []
-            for _ in range(reps):
-                t0 = time.perf_counter()
-                jax.block_until_ready(run(t))
-                times.append(time.perf_counter() - t0)
-            dt = min(times)
-        except Exception:
-            continue
-        if dt < best_t:
-            best_tile, best_t = t, dt
+    candidates: dict[int, float] = {}
+    with obs.span("autotune.measure", family=family, k=int(k), n=int(n),
+                  b=int(b), dtype=dtype):
+        for t in cands:
+            try:
+                jax.block_until_ready(run(t))       # compile + warm
+                times = []
+                for _ in range(reps):
+                    t0 = time.perf_counter()
+                    jax.block_until_ready(run(t))
+                    times.append(time.perf_counter() - t0)
+                dt = min(times)
+            except Exception:
+                continue
+            # selection stays argmin-of-min (noise-floor tiles win);
+            # the median is the honest per-candidate summary recorded
+            # as evidence (min overstates a lucky pass)
+            candidates[t] = float(sorted(times)[len(times) // 2])
+            if dt < best_t:
+                best_tile, best_t = t, dt
     _MEM[key] = best_tile
+    _EVIDENCE[key] = {"chosen": best_tile,
+                      "source": "measured" if candidates else "runner-error",
+                      "candidates": candidates}
+    if obs.enabled():
+        obs.counter_add("autotune.measurements")
+        keystr = "|".join(str(p) for p in key)
+        for t, s in candidates.items():
+            obs.gauge_set(f"autotune.candidate_s.{keystr}.tile{t}", s)
+        obs.gauge_set(f"autotune.chosen.{keystr}", best_tile)
     _save_disk()
     return best_tile
 

@@ -38,6 +38,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core.params import NTTParams, bitrev_perm
 from repro.kernels import autotune, ntt_kernel, dyadic_kernel, galois_kernel, ref
 
@@ -161,6 +162,24 @@ def _swap_ct_axis(x):
     return jnp.swapaxes(jnp.asarray(x), 0, 1)
 
 
+def _spanned(fn):
+    """Wrap a banks entry point in an ``obs.span("ops.<name>")``.  When
+    the call happens inside a jit trace (the EvalPlan programs), the
+    span records trace-time host work, not device compute — still the
+    right thing to see on the timeline, since retracing inside a
+    latency window IS the cost being hunted.  Disabled, the wrapper is
+    one flag check (the overhead CI gates)."""
+    name = f"ops.{fn.__name__}"
+
+    @functools.wraps(fn)
+    def wrapper(*args, **kw):
+        if not obs.enabled():
+            return fn(*args, **kw)
+        with obs.span(name, cat="kernel"):
+            return fn(*args, **kw)
+    return wrapper
+
+
 def _ct_batch_axis(fn):
     """Give a banks entry point the ciphertext-batch convention in one
     place: ``batch_leading=True`` reads the first argument as a
@@ -176,6 +195,7 @@ def _ct_batch_axis(fn):
     return wrapper
 
 
+@_spanned
 @_ct_batch_axis
 def ntt_banks(x, t: dict, *, negacyclic: bool = True,
               use_pallas: bool | None = None, tile: int | None = None,
@@ -213,6 +233,7 @@ def ntt_banks(x, t: dict, *, negacyclic: bool = True,
     return out[:, :b].reshape(shape)
 
 
+@_spanned
 @_ct_batch_axis
 def intt_banks(x, t: dict, *, negacyclic: bool = True,
                use_pallas: bool | None = None, tile: int | None = None,
@@ -239,6 +260,7 @@ def intt_banks(x, t: dict, *, negacyclic: bool = True,
     return out[:, :b].reshape(shape)
 
 
+@_spanned
 @_ct_batch_axis
 def twiddle_mul_banks(x, w, wp, qs, *, use_pallas: bool | None = None,
                       tile: int | None = None, lazy: bool = False):
@@ -265,6 +287,7 @@ def twiddle_mul_banks(x, w, wp, qs, *, use_pallas: bool | None = None,
     return out[:, :b].reshape(shape)
 
 
+@_spanned
 @_ct_batch_axis
 def galois_banks(x, idx, *, use_pallas: bool | None = None,
                  tile: int | None = None):
@@ -313,6 +336,7 @@ def galois_banks(x, idx, *, use_pallas: bool | None = None,
     return out[:, :b].reshape(shape)
 
 
+@_spanned
 def galois_digits_banks(ext, idx, *, use_pallas: bool | None = None,
                         tile: int | None = None):
     """Galois gather over key-switch digit extensions — the hoisted-
@@ -374,6 +398,7 @@ def fourstep_dims(fp: dict) -> tuple[int, int]:
     return fp["pack1"]["tw"].shape[-1] * 2, fp["pack2"]["tw"].shape[-1] * 2
 
 
+@_spanned
 @_ct_batch_axis
 def ntt_fourstep_banks(x, fp: dict, *, negacyclic: bool = True,
                        use_pallas: bool | None = None, tile: int | None = None,
@@ -426,6 +451,7 @@ def ntt_fourstep_banks(x, fp: dict, *, negacyclic: bool = True,
     return xr.reshape(k, b, n1, n2).swapaxes(-1, -2).reshape(shape)
 
 
+@_spanned
 @_ct_batch_axis
 def intt_fourstep_banks(x, fp: dict, *, negacyclic: bool = True,
                         use_pallas: bool | None = None, tile: int | None = None,
@@ -466,6 +492,7 @@ def intt_fourstep_banks(x, fp: dict, *, negacyclic: bool = True,
     return x.reshape(shape)
 
 
+@_spanned
 def dyadic_inner_banks(ext, evk, t: dict, *, use_pallas: bool | None = None,
                        tile: int | None = None, lazy: bool = True):
     """Fused key-switch inner product: out[j] = sum_i ext[i, j] .* evk[i, j]
@@ -498,6 +525,7 @@ def dyadic_inner_banks(ext, evk, t: dict, *, use_pallas: bool | None = None,
     return out[:, :b]
 
 
+@_spanned
 def dyadic_basemul_banks(a, b, t: dict, *, batch_leading: bool = False,
                          use_pallas: bool | None = None,
                          tile: int | None = None, lazy: bool = True):

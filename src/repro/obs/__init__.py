@@ -1,0 +1,34 @@
+"""Unified runtime observability for the kernels -> EvalPlan -> serve
+stack: span tracing (``obs.trace``), a metrics registry
+(``obs.metrics``) and Perfetto/JSON exporters (``obs.export``).
+
+One switch governs everything: ``obs.enable()`` / ``obs.disable()``.
+Disabled (the default), every instrumentation point is a single flag
+check — ``span()`` returns a shared no-op singleton, registry calls
+return immediately — so the hot paths carry their probes permanently
+(CI gates the enabled path at >= 0.95x disabled serve throughput).
+
+Typical capture::
+
+    from repro import obs
+    obs.enable(); obs.clear(); obs.reset()
+    engine.run_async(reqs, arrivals)
+    obs.write_trace("drain_trace.json")      # -> ui.perfetto.dev
+    obs.write_metrics("drain_metrics.json")  # counters/gauges/histograms
+
+or just ``python -m benchmarks.run --smoke --trace-out BENCH_trace.json``.
+"""
+from repro.obs.trace import (NOOP_SPAN, clear, disable, dropped, enable,
+                             enabled, events, span)
+from repro.obs.metrics import (bucket_le, counter_add, gauge_set,
+                               histogram_quantile, observe, reset, snapshot)
+from repro.obs.export import (chrome_trace, metrics_snapshot, write_metrics,
+                              write_trace)
+
+__all__ = [
+    "NOOP_SPAN", "clear", "disable", "dropped", "enable", "enabled",
+    "events", "span",
+    "bucket_le", "counter_add", "gauge_set", "histogram_quantile",
+    "observe", "reset", "snapshot",
+    "chrome_trace", "metrics_snapshot", "write_metrics", "write_trace",
+]

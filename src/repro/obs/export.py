@@ -1,0 +1,63 @@
+"""Exporters: Chrome trace-event JSON (Perfetto-loadable) + metrics
+snapshot.
+
+``chrome_trace()`` renders the tracer's event buffer in the Chrome
+trace-event "JSON object format": each span becomes one complete event
+(``ph: "X"``) with microsecond ``ts``/``dur``, the recording thread as
+``tid`` and the span kwargs as ``args`` — drop the file onto
+https://ui.perfetto.dev (or chrome://tracing) and the serve drain's
+screen/group/stack/dispatch/block phases nest on a real timeline.
+
+``benchmarks/run.py --trace-out PATH`` wires both writers into the
+bench harness; CI uploads ``BENCH_trace.json`` (+ the metrics sibling)
+as artifacts and ``benchmarks/check_smoke.py`` gates that the trace is
+valid JSON with >= 1 span per serve phase.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from repro.obs import metrics as _metrics
+from repro.obs import trace as _trace
+
+
+def chrome_trace() -> dict:
+    """The event buffer as a Chrome trace-event JSON object (dict)."""
+    pid = os.getpid()
+    trace_events = []
+    for ev in _trace.events():
+        trace_events.append({
+            "name": ev["name"],
+            "cat": ev["cat"],
+            "ph": "X",                    # complete event: ts + dur
+            "ts": ev["ts_us"],
+            "dur": ev["dur_us"],
+            "pid": pid,
+            "tid": ev["tid"],
+            "args": dict(ev["args"], depth=ev["depth"]),
+        })
+    return {
+        "traceEvents": trace_events,
+        "displayTimeUnit": "ms",
+        "otherData": {
+            "producer": "repro.obs",
+            "dropped_events": _trace.dropped(),
+        },
+    }
+
+
+def write_trace(path: str) -> None:
+    """Write the Perfetto-loadable trace JSON to ``path``."""
+    with open(path, "w") as f:
+        json.dump(chrome_trace(), f, indent=1)
+
+
+def metrics_snapshot() -> dict:
+    return _metrics.snapshot()
+
+
+def write_metrics(path: str) -> None:
+    """Write the metrics-registry snapshot JSON to ``path``."""
+    with open(path, "w") as f:
+        json.dump(_metrics.snapshot(), f, indent=1, sort_keys=True)

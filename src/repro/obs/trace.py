@@ -1,0 +1,183 @@
+"""Nestable, thread-safe span tracer on monotonic clocks.
+
+The paper validates SCE-NTT with cycle-accurate JoSIM/Verilog traces of
+every pipeline stage; this module is the software reproduction's
+equivalent instrument: ``span("serve.dispatch", kind=..., n=...)`` is a
+context manager that records a (name, start, duration, thread, depth,
+args) event into a bounded global buffer, which ``obs.export`` renders
+as Chrome trace-event JSON (Perfetto-loadable) so a serve drain's wall
+time decomposes into its screen / group / stack / dispatch / block
+phases on a real timeline.
+
+Design constraints, in order:
+
+  * **Near-zero cost when disabled (the default).**  ``span()`` checks
+    one module-level flag and returns a shared no-op singleton — no
+    object allocation, no clock read, no lock.  CI gates the enabled
+    path at >= 0.95x disabled throughput on the serve bench
+    (``benchmarks/check_smoke.py``), so instrumentation can stay on the
+    hot paths permanently instead of rotting behind #ifdefs.
+  * **Thread-safe nesting.**  Each thread keeps its own span stack
+    (depth makes the Perfetto rows nest); the event buffer is a
+    ``deque(maxlen=...)`` appended under a lock only at span EXIT, so
+    concurrent drains from worker threads interleave safely and an
+    unbounded run can never exhaust memory (oldest events drop first).
+  * **Exception safety.**  A span records its event in ``__exit__``
+    unconditionally and never swallows the exception; a failed dispatch
+    still shows up on the timeline (with ``error=`` in its args).
+  * **Monotonic clocks.**  ``time.perf_counter_ns`` throughout;
+    timestamps are microseconds relative to the module's load epoch
+    (Chrome trace-event ``ts``/``dur`` are µs).
+  * **Dependency-free, jax-optional.**  When ``enable(forward_to_jax=
+    True)`` is set and jax is importable, each span also enters a
+    ``jax.profiler.TraceAnnotation`` so host spans correlate with XLA
+    device traces when a profiler session is active; the import is
+    guarded and the default is off (TraceAnnotation costs ~µs/span).
+
+Spans double as latency samples: on exit, the duration is fed to the
+metrics registry's log-bucketed histogram ``<name>.us`` — every
+instrumented phase gets a per-phase histogram for free.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+
+# bounded: a heavy-traffic soak must never OOM the host through its own
+# instrument; 262144 events is ~30 MB and hours of serve phases
+MAX_EVENTS = 262_144
+
+_ENABLED = False
+_FORWARD_TO_JAX = False
+_EVENTS: deque = deque(maxlen=MAX_EVENTS)
+_LOCK = threading.Lock()
+_TLS = threading.local()
+_EPOCH_NS = time.perf_counter_ns()      # trace time zero (µs offsets)
+_DROPPED = 0                            # events lost to the maxlen bound
+
+
+def enabled() -> bool:
+    return _ENABLED
+
+
+def enable(*, forward_to_jax: bool = False) -> None:
+    """Turn span recording on process-wide.  ``forward_to_jax=True``
+    additionally wraps every span in ``jax.profiler.TraceAnnotation``
+    so host spans show up inside an active XLA device profile."""
+    global _ENABLED, _FORWARD_TO_JAX
+    _FORWARD_TO_JAX = bool(forward_to_jax)
+    _ENABLED = True
+
+
+def disable() -> None:
+    global _ENABLED, _FORWARD_TO_JAX
+    _ENABLED = False
+    _FORWARD_TO_JAX = False
+
+
+def clear() -> None:
+    """Drop all recorded events (tests / fresh capture)."""
+    global _DROPPED
+    with _LOCK:
+        _EVENTS.clear()
+        _DROPPED = 0
+
+
+def events() -> list[dict]:
+    """Snapshot the event buffer as a list of plain dicts (oldest
+    first): name, cat, ts_us, dur_us, tid, depth, args."""
+    with _LOCK:
+        return [
+            {"name": name, "cat": cat, "ts_us": ts, "dur_us": dur,
+             "tid": tid, "depth": depth, "args": args}
+            for (name, cat, ts, dur, tid, depth, args) in _EVENTS
+        ]
+
+
+def dropped() -> int:
+    """Events lost to the ``MAX_EVENTS`` bound since the last clear."""
+    return _DROPPED
+
+
+def _stack() -> list:
+    s = getattr(_TLS, "stack", None)
+    if s is None:
+        s = _TLS.stack = []
+    return s
+
+
+class _NoopSpan:
+    """The shared disabled-path context manager: one module-level
+    instance, so ``span(...)`` allocates NOTHING when tracing is off
+    (pinned in tests/test_obs.py)."""
+    __slots__ = ()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, exc_type, exc, tb):
+        return False
+
+
+NOOP_SPAN = _NoopSpan()
+
+
+class _Span:
+    __slots__ = ("name", "cat", "args", "t0", "depth", "_jax_ctx")
+
+    def __init__(self, name: str, cat: str, args: dict):
+        self.name = name
+        self.cat = cat
+        self.args = args
+        self.t0 = 0
+        self.depth = 0
+        self._jax_ctx = None
+
+    def __enter__(self):
+        stack = _stack()
+        self.depth = len(stack)
+        stack.append(self)
+        if _FORWARD_TO_JAX:
+            try:
+                import jax
+                self._jax_ctx = jax.profiler.TraceAnnotation(self.name)
+                self._jax_ctx.__enter__()
+            except Exception:       # jax absent / profiler API moved
+                self._jax_ctx = None
+        self.t0 = time.perf_counter_ns()
+        return self
+
+    def __exit__(self, exc_type, exc, tb):
+        global _DROPPED
+        t1 = time.perf_counter_ns()
+        if self._jax_ctx is not None:
+            try:
+                self._jax_ctx.__exit__(exc_type, exc, tb)
+            except Exception:
+                pass
+        stack = _stack()
+        if stack and stack[-1] is self:
+            stack.pop()
+        if exc_type is not None:
+            self.args = dict(self.args, error=exc_type.__name__)
+        ts_us = (self.t0 - _EPOCH_NS) / 1e3
+        dur_us = (t1 - self.t0) / 1e3
+        with _LOCK:
+            if len(_EVENTS) == MAX_EVENTS:
+                _DROPPED += 1
+            _EVENTS.append((self.name, self.cat, ts_us, dur_us,
+                            threading.get_ident(), self.depth, self.args))
+        # every span is also a latency sample for its phase histogram
+        from repro.obs import metrics
+        metrics.observe(f"{self.name}.us", dur_us)
+        return False                # never swallow the exception
+
+
+def span(name: str, cat: str = "repro", **args):
+    """Context manager timing one named phase.  Keyword args become the
+    Perfetto event's ``args`` payload (keep them JSON-serializable).
+    Returns the shared no-op singleton when tracing is disabled."""
+    if not _ENABLED:
+        return NOOP_SPAN
+    return _Span(name, cat, args)

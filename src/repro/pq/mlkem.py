@@ -35,6 +35,7 @@ import hashlib
 
 import numpy as np
 
+from repro import obs
 from repro.core.ringspec import MLKEM_RING, ring_table_pack
 from repro.kernels import ops
 
@@ -265,6 +266,11 @@ def keygen_batch(d: np.ndarray, z: np.ndarray):
     d = np.asarray(d, dtype=np.uint8)
     z = np.asarray(z, dtype=np.uint8)
     bsz = d.shape[0]
+    with obs.span("mlkem.keygen_batch", cat="mlkem", b=bsz):
+        return _keygen_batch(d, z, bsz)
+
+
+def _keygen_batch(d, z, bsz):
     gs = [_g(d[i].tobytes() + bytes([K])) for i in range(bsz)]
     rhos = [g[0] for g in gs]
     sigmas = [g[1] for g in gs]
@@ -293,6 +299,11 @@ def encaps_batch(ek: np.ndarray, m: np.ndarray):
     ek = np.asarray(ek, dtype=np.uint8)
     m = np.asarray(m, dtype=np.uint8)
     bsz = ek.shape[0]
+    with obs.span("mlkem.encaps_batch", cat="mlkem", b=bsz):
+        return _encaps_batch(ek, m, bsz)
+
+
+def _encaps_batch(ek, m, bsz):
     keys, seeds = [], []
     for i in range(bsz):
         k_i, r_i = _g(m[i].tobytes() + _h(ek[i].tobytes()))
@@ -308,6 +319,11 @@ def decaps_batch(dk: np.ndarray, ct: np.ndarray) -> np.ndarray:
     dk = np.asarray(dk, dtype=np.uint8)
     ct = np.asarray(ct, dtype=np.uint8)
     bsz = dk.shape[0]
+    with obs.span("mlkem.decaps_batch", cat="mlkem", b=bsz):
+        return _decaps_batch(dk, ct, bsz)
+
+
+def _decaps_batch(dk, ct, bsz):
     dk_pke = dk[:, :384 * K]
     ek = dk[:, 384 * K:768 * K + 32]
     h = dk[:, 768 * K + 32:768 * K + 64]
